@@ -1,0 +1,121 @@
+//! End-to-end driver (the repository's required E2E validation): proves
+//! all three layers compose on a real small workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! 1. Generates an offline trajectory dataset on the training corpus
+//!    (tree-structured environment, paper §4.2).
+//! 2. PPO-trains the Macro-Thinking policy **through the AOT artifacts**:
+//!    rollouts sample actions from the L2/L1 network via PJRT (`fwd_b1`),
+//!    updates run the fused PPO+Adam `train_step` — python is never
+//!    executed. Logs the reward/entropy curves.
+//! 3. Evaluates the trained policy on held-out KernelBench subsets
+//!    against the greedy surrogate and a baseline LLM, reporting the
+//!    paper's metrics.
+//!
+//! Scale knobs (defaults run in a few minutes):
+//!   E2E_TASKS=24 E2E_ITERS=30 E2E_EVAL=20
+
+use anyhow::{Context, Result};
+use qimeng_mtmc::dataset::{generate, DatasetCfg};
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::paths;
+use qimeng_mtmc::runtime::{save_params, ParamSet, PjrtRuntime, TrainState};
+use qimeng_mtmc::tasks::{kernelbench_level, training_corpus};
+use qimeng_mtmc::train::{train_ppo, PpoCfg};
+
+fn envnum(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let n_tasks = envnum("E2E_TASKS", 24);
+    let iters = envnum("E2E_ITERS", 30);
+    let n_eval = envnum("E2E_EVAL", 20);
+    let spec = GpuSpec::a100();
+
+    println!("== [1/3] offline dataset over the training corpus ==");
+    let corpus = training_corpus(n_tasks);
+    let ds_cfg = DatasetCfg { per_task: 16, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let (_trajs, stats) =
+        generate(&corpus, &spec, ProfileId::GeminiFlash25, &ds_cfg);
+    println!(
+        "{} trajectories / {} steps in {:.1}s ({:.0} steps/s); \
+         correct-step rate {:.0}%, mean final speedup {:.2}x\n",
+        stats.trajectories,
+        stats.steps,
+        t0.elapsed().as_secs_f64(),
+        stats.steps as f64 / t0.elapsed().as_secs_f64(),
+        stats.correct_step_frac * 100.0,
+        stats.mean_final_speedup
+    );
+
+    println!("== [2/3] PPO training through the PJRT artifacts ==");
+    let rt = PjrtRuntime::load(&paths::artifacts_dir())
+        .context("artifacts missing — run `make artifacts` first")?;
+    println!("PJRT platform: {} | obs_dim {} act_dim {} train_batch {}",
+             rt.platform(), rt.meta.obs_dim, rt.meta.act_dim,
+             rt.meta.train_batch);
+    let params = ParamSet::init(&rt.meta.raw, 0x5EED)?;
+    println!("policy parameters: {}", params.num_params());
+    let mut state = TrainState::new(params);
+    let cfg = PpoCfg { iterations: iters, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let logs = train_ppo(&rt, &mut state, &corpus, &spec, &cfg)?;
+    println!("\nreward curve (iteration, mean episode reward, speedup):");
+    for l in logs.iter().step_by((logs.len() / 10).max(1)) {
+        println!("  iter {:>3}  reward {:+.3}  final speedup {:.2}x  \
+                  entropy {:.3}",
+                 l.iter, l.mean_episode_reward, l.mean_final_speedup,
+                 l.entropy);
+    }
+    let first = &logs[0];
+    let last = logs.last().unwrap();
+    println!(
+        "\ntrained {} iters in {:.1}s: reward {:+.3} -> {:+.3}, \
+         rollout speedup {:.2}x -> {:.2}x",
+        logs.len(), t0.elapsed().as_secs_f64(),
+        first.mean_episode_reward, last.mean_episode_reward,
+        first.mean_final_speedup, last.mean_final_speedup
+    );
+    let ppath = paths::default_policy_path();
+    save_params(&state.params, &ppath)?;
+    println!("saved policy to {}\n", ppath.display());
+
+    println!("== [3/3] evaluation on KernelBench subsets ==");
+    let cfg = EvalCfg::default();
+    for level in 1..=3usize {
+        let tasks: Vec<_> = kernelbench_level(level)
+            .into_iter()
+            .take(n_eval)
+            .collect();
+        let learned = evaluate(
+            &Method::Mtmc {
+                macro_kind: MacroKind::LearnedOrGreedy {
+                    params_path: Some(ppath.clone()),
+                },
+                micro: ProfileId::GeminiPro25,
+            },
+            &tasks, &spec, &cfg,
+        );
+        let baseline = evaluate(
+            &Method::Baseline { profile: ProfileId::Claude4Sonnet },
+            &tasks, &spec, &cfg,
+        );
+        println!(
+            "L{level}: MTMC(learned) acc {:>3.0}% speedup {:.2}x | \
+             Claude-4 baseline acc {:>3.0}% speedup {:.2}x",
+            learned.metrics.exec_acc * 100.0,
+            learned.metrics.mean_speedup,
+            baseline.metrics.exec_acc * 100.0,
+            baseline.metrics.mean_speedup,
+        );
+    }
+    println!("\n(record of this run lives in EXPERIMENTS.md §E2E)");
+    Ok(())
+}

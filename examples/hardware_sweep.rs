@@ -1,0 +1,100 @@
+//! Hardware portability demo (the paper's cross-GPU generalization
+//! claim): optimize the same tasks for V100, A100 and H100 and show how
+//! the chosen schedules — and the resulting speedups — differ per
+//! architecture (e.g. PipelineAsync is illegal on Volta; tile sizes track
+//! shared-memory capacity).
+//!
+//! ```bash
+//! cargo run --release --example hardware_sweep
+//! ```
+
+use qimeng_mtmc::env::{EnvConfig, OptimEnv};
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::graph::infer_shapes;
+use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
+use qimeng_mtmc::report::Table;
+use qimeng_mtmc::tasks::kernelbench_level;
+use qimeng_mtmc::transform::{apply_action, decode_action, STOP_ACTION};
+
+fn main() {
+    // -- part 1: one matmul task, schedule story per GPU ----------------
+    let tasks = kernelbench_level(1);
+    let task = tasks.iter().find(|t| t.id.contains("matmul")).unwrap();
+    let shapes = infer_shapes(&task.graph);
+    println!("schedule chosen for {} per GPU:\n", task.id);
+    for spec in GpuSpec::all() {
+        let mut env = OptimEnv::new(task, spec.clone(),
+                                    LlmProfile::get(ProfileId::GeminiPro25),
+                                    EnvConfig::default(), 7);
+        let mut failed: std::collections::HashSet<usize> = Default::default();
+        while !env.state.done {
+            let mask = env.mask();
+            let best = (0..STOP_ACTION)
+                .filter(|&a| mask[a] && !failed.contains(&a))
+                .filter_map(|a| {
+                    apply_action(&env.state.program, &task.graph, &shapes,
+                                 &decode_action(a), &spec, 1.0)
+                        .ok()
+                        .map(|p| (a, qimeng_mtmc::gpusim::program_time_us(
+                            &p, &task.graph, &shapes, &spec)))
+                })
+                .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+            let now = env.eager_us / env.state.speedup;
+            match best {
+                Some((a, t)) if t < now * 0.99 => {
+                    let before = env.state.path_hash;
+                    env.step(a);
+                    if env.state.path_hash == before {
+                        failed.insert(a);
+                    } else {
+                        failed.clear();
+                    }
+                }
+                _ => {
+                    env.step(STOP_ACTION);
+                }
+            }
+        }
+        let k = &env.state.best_program.kernels[0];
+        println!(
+            "  {:<5} tile {:?} reg {:?} pipeline {} order {:?} vec {}  \
+             -> {:.2}x",
+            spec.name,
+            k.schedule.block_tile,
+            k.schedule.reg_tile,
+            k.schedule.pipeline_depth,
+            k.schedule.loop_order,
+            k.schedule.vector_width,
+            env.state.best_speedup
+        );
+    }
+
+    // -- part 2: suite-level consistency across GPUs ---------------------
+    println!("\nKernelBench L2 subset across GPUs (MTMC greedy):\n");
+    let l2: Vec<_> = kernelbench_level(2).into_iter().step_by(5).collect();
+    let mut table = Table::new(
+        "MTMC across hardware (20 L2 tasks)",
+        &["GPU", "Accuracy(%)", "Mean Speedup"],
+    );
+    for spec in GpuSpec::all() {
+        let r = evaluate(
+            &Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro: ProfileId::GeminiPro25,
+            },
+            &l2, &spec, &EvalCfg::default(),
+        );
+        table.row(vec![
+            spec.name.to_string(),
+            format!("{:.0}", r.metrics.exec_acc * 100.0),
+            format!("{:.2}", r.metrics.mean_speedup),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nnote: Volta picks depth-2 pipelines (no cp.async), Hopper fits \
+         bigger smem tiles — the paper's 'universal optimization \
+         strategies' story."
+    );
+}

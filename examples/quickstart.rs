@@ -1,0 +1,105 @@
+//! Quickstart: optimize one GPU kernel with MTMC and watch the schedule
+//! evolve.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Takes a fused GEMM+bias+activation task (KernelBench-L2-style), runs
+//! the macro-thinking/micro-coding loop with a greedy macro policy, and
+//! prints each semantic action, its micro-coding outcome and the speedup
+//! trajectory vs expert-optimized PyTorch Eager — finishing with the
+//! generated pseudo-Triton.
+
+use qimeng_mtmc::env::{EnvConfig, OptimEnv};
+use qimeng_mtmc::gpusim::{library_affinity, eager_time_us, GpuSpec};
+use qimeng_mtmc::graph::infer_shapes;
+use qimeng_mtmc::kir::{render, TargetLang};
+use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
+use qimeng_mtmc::tasks::kernelbench_level;
+use qimeng_mtmc::transform::{apply_action, decode_action, STOP_ACTION};
+
+fn main() {
+    let spec = GpuSpec::a100();
+    let tasks = kernelbench_level(2);
+    let task = &tasks[0];
+    let shapes = infer_shapes(&task.graph);
+    let eager = eager_time_us(&task.graph, &shapes, &spec,
+                              library_affinity(&task.id));
+    println!("task: {} on {}", task.id, spec.name);
+    println!("PyTorch Eager reference: {:.1} us\n", eager);
+
+    let mut env = OptimEnv::new(
+        task,
+        spec.clone(),
+        LlmProfile::get(ProfileId::GeminiPro25),
+        EnvConfig::default(),
+        42,
+    );
+    println!("step  0  naive Triton lowering            speedup {:.2}x",
+             env.state.speedup);
+
+    let mut step = 1;
+    // edges that already failed at this tree node (the env is
+    // edge-deterministic: retrying cannot succeed)
+    let mut failed: std::collections::HashSet<usize> = Default::default();
+    while !env.state.done {
+        // greedy macro-thinking: pick the action with the best one-step
+        // improvement under the hardware cost model
+        let mask = env.mask();
+        let best = (0..STOP_ACTION)
+            .filter(|&a| mask[a] && !failed.contains(&a))
+            .filter_map(|a| {
+                apply_action(&env.state.program, &task.graph, &shapes,
+                             &decode_action(a), &spec, 1.0)
+                    .ok()
+                    .map(|p| {
+                        (a, qimeng_mtmc::gpusim::program_time_us(
+                            &p, &task.graph, &shapes, &spec))
+                    })
+            })
+            .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+        let now_us = eager / env.state.speedup;
+        let action = match best {
+            Some((a, t)) if t < now_us * 0.99 => a,
+            _ => STOP_ACTION,
+        };
+        if action == STOP_ACTION {
+            env.step(action);
+            println!("step {step:>2}  Stop");
+            break;
+        }
+        let act = decode_action(action);
+        let before = env.state.path_hash;
+        let r = env.step(action);
+        if env.state.path_hash == before {
+            failed.insert(action);
+        } else {
+            failed.clear();
+        }
+        println!(
+            "step {step:>2}  {:<16} region {}  ->  {:<13} speedup {:.2}x",
+            format!("{:?}", act.opt),
+            act.region,
+            format!("{:?}", discriminant_name(&r.signal)),
+            env.state.speedup
+        );
+        step += 1;
+    }
+
+    println!("\nbest speedup: {:.2}x over PyTorch Eager", env.state.best_speedup);
+    println!("\n--- generated pseudo-Triton ---\n{}",
+             render(&env.state.best_program, &task.graph, &shapes,
+                    TargetLang::Triton));
+}
+
+fn discriminant_name(s: &qimeng_mtmc::env::StepSignal) -> &'static str {
+    use qimeng_mtmc::env::StepSignal::*;
+    match s {
+        CompileFail => "compile-fail",
+        WrongResult => "wrong-result",
+        Rejected => "rejected",
+        Correct { .. } => "ok",
+        Stop { .. } => "stop",
+    }
+}

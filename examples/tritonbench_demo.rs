@@ -1,0 +1,70 @@
+//! TritonBench-style evaluation demo: run MTMC and two baselines over
+//! slices of TRITONBENCH-G and -T and print Table-4-style rows, plus a
+//! per-family breakdown showing where the wins come from
+//! (flash-attention-style tiling, fused layernorm epilogues, ...).
+//!
+//! ```bash
+//! cargo run --release --example tritonbench_demo
+//! ```
+
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::report::{metric_cells, Table};
+use qimeng_mtmc::tasks::{tritonbench_g, tritonbench_t, Task};
+use std::collections::BTreeMap;
+
+fn main() {
+    let spec = GpuSpec::a100();
+    let cfg = EvalCfg::default();
+    let n = std::env::var("TB_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60usize);
+
+    for (name, tasks_full) in
+        [("TRITONBENCH-G", tritonbench_g()), ("TRITONBENCH-T", tritonbench_t())]
+    {
+        let tasks: Vec<Task> = tasks_full.into_iter().take(n).collect();
+        let mut table = Table::new(
+            &format!("{name} ({} tasks, A100)", tasks.len()),
+            &["Method", "CallAcc(%)", "ExecAcc(%)", "fast1/fast2(%)",
+              "Mean Speedup"],
+        );
+        let methods = [
+            Method::Baseline { profile: ProfileId::GeminiFlash25 },
+            Method::Baseline { profile: ProfileId::KernelLlm },
+            Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro: ProfileId::GeminiFlash25,
+            },
+        ];
+        let mut mtmc_result = None;
+        for m in &methods {
+            let r = evaluate(m, &tasks, &spec, &cfg);
+            table.row(metric_cells(&r, true));
+            if matches!(m, Method::Mtmc { .. }) {
+                mtmc_result = Some(r);
+            }
+        }
+        print!("{}", table.render());
+
+        // per-family breakdown of the MTMC run
+        let r = mtmc_result.unwrap();
+        let mut fam: BTreeMap<&str, (usize, usize, f64)> = BTreeMap::new();
+        for (task, o) in tasks.iter().zip(&r.outcomes) {
+            let e = fam.entry(task.family.label()).or_default();
+            e.0 += 1;
+            if o.correct {
+                e.1 += 1;
+                e.2 += o.speedup;
+            }
+        }
+        println!("MTMC per-family (n, correct, mean speedup of correct):");
+        for (f, (n, c, s)) in fam {
+            println!("  {f:<18} n={n:<3} correct={c:<3} speedup={:.2}x",
+                     if c > 0 { s / c as f64 } else { 0.0 });
+        }
+        println!();
+    }
+}

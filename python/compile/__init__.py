@@ -1,0 +1,6 @@
+"""Build-time-only python package: L2 JAX policy model + L1 Pallas kernels.
+
+Nothing in here is imported at runtime — ``compile.aot`` lowers everything
+to HLO text once (``make artifacts``) and the rust coordinator loads the
+artifacts through PJRT.
+"""

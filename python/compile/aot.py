@@ -1,0 +1,109 @@
+"""AOT export: lower the L2 policy model to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax>=0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` 0.1.6 crate) rejects; the text parser
+re-assigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out, default ../artifacts):
+- policy_fwd_b1.hlo.txt    request-path inference, B=1
+- policy_fwd_b64.hlo.txt   batched eval fwd, B=64
+- train_step.hlo.txt       fused PPO+Adam update, B=256
+- meta.json                shapes + hyperparameters for the rust runtime
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIG, NP, fwd_flat, param_specs, train_step_flat
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fwd_arg_specs(batch, cfg=CONFIG):
+    params = [_spec(s) for _, s in param_specs(cfg)]
+    obs = _spec((batch, cfg["obs_dim"]))
+    mask = _spec((batch, cfg["act_dim"]))
+    return (*params, obs, mask)
+
+
+def train_arg_specs(cfg=CONFIG):
+    b = cfg["train_batch"]
+    params = [_spec(s) for _, s in param_specs(cfg)]
+    m = [_spec(s) for _, s in param_specs(cfg)]
+    v = [_spec(s) for _, s in param_specs(cfg)]
+    t = _spec(())
+    obs = _spec((b, cfg["obs_dim"]))
+    mask = _spec((b, cfg["act_dim"]))
+    act = _spec((b,), jnp.int32)
+    old_logp = _spec((b,))
+    adv = _spec((b,))
+    ret = _spec((b,))
+    return (*params, *m, *v, t, obs, mask, act, old_logp, adv, ret)
+
+
+def lower_all():
+    """Lower every artifact; returns {name: hlo_text}."""
+    arts = {}
+    for batch, name in ((1, "policy_fwd_b1"), (CONFIG["eval_batch"],
+                                               "policy_fwd_b64")):
+        lowered = jax.jit(fwd_flat).lower(*fwd_arg_specs(batch))
+        arts[name] = to_hlo_text(lowered)
+    lowered = jax.jit(train_step_flat).lower(*train_arg_specs())
+    arts["train_step"] = to_hlo_text(lowered)
+    return arts
+
+
+def meta_json():
+    return {
+        "config": CONFIG,
+        "num_params": NP,
+        "param_specs": [[n, list(s)] for n, s in param_specs()],
+        "artifacts": {
+            "policy_fwd_b1": {"batch": 1},
+            "policy_fwd_b64": {"batch": CONFIG["eval_batch"]},
+            "train_step": {"batch": CONFIG["train_batch"]},
+        },
+        # fwd outputs: (logp[B,A], value[B]); train outputs: 24 state
+        # arrays + metrics[6] = [loss, pg, vf, ent, kl, gnorm]
+        "fwd_outputs": ["logp", "value"],
+        "train_metrics": ["loss", "pg_loss", "v_loss", "entropy",
+                          "approx_kl", "grad_norm"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta_json(), f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

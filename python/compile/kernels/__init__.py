@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the Macro-Thinking policy network.
+
+Every kernel here runs under ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls), and is checked against the pure-jnp oracles in
+:mod:`compile.kernels.ref` by ``python/tests``.
+"""
+
+from .fused_linear import fused_linear, matmul
+from .masked_softmax import masked_log_softmax
+
+__all__ = ["fused_linear", "matmul", "masked_log_softmax"]

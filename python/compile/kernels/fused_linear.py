@@ -1,0 +1,127 @@
+"""Tiled fused linear layer (matmul + bias + activation) as a Pallas kernel.
+
+This is the Macro-Thinking policy network's hot spot: every trunk layer and
+both heads are instances of ``act(x @ W + b)``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension so each program instance holds an ``(bm, K)`` activation block, the
+full ``(K, N)`` weight panel, and the ``(bm, N)`` output block in VMEM —
+the BlockSpec index maps express the HBM->VMEM schedule that a CUDA kernel
+would express with threadblocks + shared memory. ``K``/``N`` panels for the
+policy net (<=256x256 f32 ~ 256 KiB) sit far below the ~16 MiB VMEM budget,
+and the ``(bm, K) @ (K, N)`` inner product is shaped for the 128x128 MXU
+(bm is capped at 128; K, N are multiples of 8 after padding).
+
+A custom VJP routes the *backward* matmuls (dx = g @ W^T, dW = x^T @ g)
+through the same Pallas matmul so training also exercises the L1 kernels.
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile cap: one MXU-aligned stripe of rows per program instance.
+_BM = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    """One (bm, N) output block: full-K contraction + bias + activation."""
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    if act == "tanh":
+        y = jnp.tanh(y)
+    elif act == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pad_rows(x, bm):
+    b = x.shape[0]
+    pad = (-b) % bm
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, b
+
+
+def _row_tiled_call(kernel, x, cols_out, extra_args, extra_specs):
+    """Run ``kernel`` over row tiles of ``x``; trailing operands unblocked."""
+    bm = min(_BM, x.shape[0]) if x.shape[0] > 0 else 1
+    xp, b = _pad_rows(x, bm)
+    grid = (xp.shape[0] // bm,)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, x.shape[1]), lambda i: (i, 0)),
+            *extra_specs,
+        ],
+        out_specs=pl.BlockSpec((bm, cols_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], cols_out), jnp.float32),
+        interpret=True,
+    )(xp, *extra_args)
+    return out[:b]
+
+
+def matmul(x, w):
+    """Pallas row-tiled matmul: x[B,K] @ w[K,N] -> [B,N] (f32)."""
+    k, n = w.shape
+    return _row_tiled_call(
+        _matmul_kernel,
+        x,
+        n,
+        (w,),
+        [pl.BlockSpec((k, n), lambda i: (0, 0))],
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act="tanh"):
+    """act(x @ w + b) with a Pallas forward and Pallas backward matmuls."""
+    return _fused_linear_fwd_impl(x, w, b, act)
+
+
+def _fused_linear_fwd_impl(x, w, b, act):
+    k, n = w.shape
+    return _row_tiled_call(
+        functools.partial(_linear_kernel, act=act),
+        x,
+        n,
+        (w, b),
+        [
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+    )
+
+
+def _fused_linear_fwd(x, w, b, act):
+    y = _fused_linear_fwd_impl(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(act, res, g):
+    x, w, y = res
+    if act == "tanh":
+        dpre = g * (1.0 - y * y)
+    elif act == "relu":
+        dpre = g * (y > 0.0).astype(g.dtype)
+    else:  # "id"
+        dpre = g
+    # Backward matmuls through the Pallas kernel (dW via the transposed
+    # product so the row-tiled grid still tiles the long dimension).
+    dx = matmul(dpre, w.T)
+    dw = matmul(dpre.T, x).T
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,84 @@
+"""Masked row-wise log-softmax as a Pallas kernel (the action head).
+
+The Macro-Thinking action space is 65 discrete actions of which only the
+region-analysis-valid subset may be sampled; the mask arrives from the rust
+coordinator as a {0,1} f32 matrix. The kernel computes a numerically stable
+log-softmax after adding -1e9 to masked-out lanes.
+
+Layout note (TPU rethink of the paper's warp-shuffle reductions): rows live
+along the 128-wide lane dimension, so the max/sum reductions are lane
+reductions — no shared-memory tree needed. The whole (bm, A) block sits in
+VMEM. ``interpret=True`` for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MASK_NEG
+
+_BM = 128
+
+
+def _masked_log_softmax_kernel(lg_ref, mk_ref, o_ref):
+    lg = lg_ref[...]
+    mk = mk_ref[...]
+    masked = lg + (mk - 1.0) * (-MASK_NEG)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    z = masked - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    o_ref[...] = z - lse
+
+
+@jax.custom_vjp
+def masked_log_softmax(logits, mask):
+    """Row-wise masked log-softmax; logits/mask: [B, A] f32 -> [B, A] f32."""
+    return _masked_log_softmax_impl(logits, mask)
+
+
+def _masked_log_softmax_impl(logits, mask):
+    b, a = logits.shape
+    bm = min(_BM, b) if b > 0 else 1
+    pad = (-b) % bm
+    if pad:
+        zl = jnp.zeros((pad, a), logits.dtype)
+        # Padding rows get a fully *valid* mask so the kernel never sees an
+        # all-masked row (whose lse would be log(eps)-ish garbage).
+        zm = jnp.ones((pad, a), mask.dtype)
+        logits = jnp.concatenate([logits, zl], axis=0)
+        mask = jnp.concatenate([mask, zm], axis=0)
+    grid = ((b + pad) // bm,)
+    out = pl.pallas_call(
+        _masked_log_softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, a), lambda i: (i, 0)),
+            pl.BlockSpec((bm, a), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + pad, a), jnp.float32),
+        interpret=True,
+    )(logits, mask)
+    return out[:b]
+
+
+def _mls_fwd(logits, mask):
+    logp = _masked_log_softmax_impl(logits, mask)
+    return logp, (logp, mask)
+
+
+def _mls_bwd(res, g):
+    # d log_softmax: dL/dlogits = g - softmax * sum(g, axis=-1).
+    # The mask enters only through the additive -1e9 constant, so its
+    # cotangent is zero; masked lanes get (numerically) zero gradient via
+    # their ~zero probabilities.
+    logp, mask = res
+    p = jnp.exp(logp) * mask
+    gsum = jnp.sum(g, axis=-1, keepdims=True)
+    dlogits = g - p * gsum
+    return dlogits, jnp.zeros_like(mask)
+
+
+masked_log_softmax.defvjp(_mls_fwd, _mls_bwd)

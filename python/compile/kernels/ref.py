@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+These are the *reference semantics*; the Pallas implementations in
+``fused_linear.py`` / ``masked_softmax.py`` must match them to ~1e-5 f32
+tolerance across shapes (swept by hypothesis in python/tests).
+"""
+
+import jax.numpy as jnp
+
+MASK_NEG = -1e9  # additive mask penalty; large-but-finite keeps softmax stable
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul: x[B,K] @ w[K,N] -> [B,N]."""
+    return jnp.matmul(x, w)
+
+
+def fused_linear_ref(x, w, b, act="tanh"):
+    """act(x @ w + b). ``act`` in {"tanh", "relu", "id"}."""
+    y = jnp.matmul(x, w) + b
+    if act == "tanh":
+        return jnp.tanh(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "id":
+        return y
+    raise ValueError(f"unknown act {act!r}")
+
+
+def masked_log_softmax_ref(logits, mask):
+    """Row-wise log-softmax over valid (mask==1) entries.
+
+    Invalid entries receive an additive -1e9 before normalisation, so their
+    resulting log-probability is ~-1e9 (probability ~0) — the rust
+    coordinator must never sample them.
+    """
+    masked = logits + (mask - 1.0) * (-MASK_NEG)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    z = masked - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    return z - lse

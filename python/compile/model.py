@@ -1,0 +1,189 @@
+"""Layer-2 JAX model: the Macro-Thinking policy network + PPO train step.
+
+The policy is the paper's "lightweight LLM" substitute (DESIGN.md
+substitution table): a structural featurizer (computed in rust, 64-dim)
+feeds an MLP trunk with a masked 65-way action head and a value head. All
+dense layers run through the L1 Pallas ``fused_linear`` kernel; the action
+head goes through the Pallas ``masked_log_softmax``.
+
+Everything is a pure function of explicitly-passed parameter arrays so the
+AOT artifacts (``aot.py``) are stateless:
+
+- ``policy_fwd(params, obs, mask) -> (logp, value)`` — the request-path
+  artifact, exported at B=1 (inference) and B=64 (batched eval).
+- ``train_step(params, opt_m, opt_v, t, batch...) -> (params', m', v',
+  metrics)`` — one fused PPO+Adam update, exported at B=256.
+
+Hyperparameters live in ``CONFIG`` and are baked into the HLO (the rust
+side reads them back from artifacts/meta.json).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, masked_log_softmax
+from .kernels.ref import fused_linear_ref, masked_log_softmax_ref
+
+# ---------------------------------------------------------------- config
+
+CONFIG = {
+    "obs_dim": 64,        # featurizer output (rust env::obs must match)
+    "act_dim": 65,        # 8 opt types x 8 regions + Stop
+    "hidden": 128,
+    "train_batch": 256,
+    "eval_batch": 64,
+    # PPO
+    "clip_eps": 0.2,
+    "vf_coef": 0.5,
+    "ent_coef": 0.01,
+    "lr": 3e-4,
+    "adam_b1": 0.9,
+    "adam_b2": 0.999,
+    "adam_eps": 1e-8,
+    "max_grad_norm": 0.5,
+}
+
+# parameter list: (name, shape) in the exact positional order the rust
+# runtime passes literals.
+def param_specs(cfg=CONFIG):
+    f, h, a = cfg["obs_dim"], cfg["hidden"], cfg["act_dim"]
+    return [
+        ("w1", (f, h)),
+        ("b1", (h,)),
+        ("w2", (h, h)),
+        ("b2", (h,)),
+        ("wl", (h, a)),
+        ("bl", (a,)),
+        ("wv", (h, 1)),
+        ("bv", (1,)),
+    ]
+
+
+def init_params(key, cfg=CONFIG):
+    """Orthogonal-ish (scaled normal) init, matching rust policy::init."""
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            scale = jnp.sqrt(2.0 / shape[0])
+            if name == "wl":
+                scale = scale * 0.01  # near-uniform initial policy
+            if name == "wv":
+                scale = scale * 1.0
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+
+def policy_fwd(params, obs, mask, *, use_pallas=True):
+    """(logp[B,A], value[B]) from obs[B,F] and action mask[B,A]."""
+    w1, b1, w2, b2, wl, bl, wv, bv = params
+    lin = fused_linear if use_pallas else fused_linear_ref
+    sm = masked_log_softmax if use_pallas else masked_log_softmax_ref
+    h1 = lin(obs, w1, b1, "tanh")
+    h2 = lin(h1, w2, b2, "tanh")
+    logits = lin(h2, wl, bl, "id")
+    logp = sm(logits, mask)
+    value = lin(h2, wv, bv, "id")[:, 0]
+    return logp, value
+
+
+# ---------------------------------------------------------------- PPO loss
+
+
+def ppo_loss(params, obs, mask, act, old_logp, adv, ret, cfg=CONFIG,
+             *, use_pallas=True):
+    """Clipped-surrogate PPO loss with masked entropy bonus.
+
+    act: int32[B] chosen actions; old_logp: f32[B] behaviour log-probs;
+    adv: f32[B] GAE advantages (normalised rust-side); ret: f32[B] returns.
+    """
+    logp_all, value = policy_fwd(params, obs, mask, use_pallas=use_pallas)
+    b = obs.shape[0]
+    logp_a = logp_all[jnp.arange(b), act]
+
+    ratio = jnp.exp(logp_a - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - cfg["clip_eps"], 1.0 + cfg["clip_eps"])
+    pg_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+
+    v_loss = 0.5 * jnp.mean((value - ret) ** 2)
+
+    # Masked entropy: p log p only over valid lanes (invalid lanes have
+    # p ~ exp(-1e9) = 0 but 0 * (-1e9) would be -0*inf noise without mask).
+    p = jnp.exp(logp_all) * mask
+    ent = -jnp.sum(p * jnp.where(mask > 0, logp_all, 0.0), axis=-1)
+    ent_mean = jnp.mean(ent)
+
+    approx_kl = jnp.mean(old_logp - logp_a)
+    loss = pg_loss + cfg["vf_coef"] * v_loss - cfg["ent_coef"] * ent_mean
+    return loss, (pg_loss, v_loss, ent_mean, approx_kl)
+
+
+# ---------------------------------------------------------------- Adam
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+
+
+def train_step(params, opt_m, opt_v, t, obs, mask, act, old_logp, adv, ret,
+               cfg=CONFIG, *, use_pallas=True):
+    """One fused PPO epoch step: grad -> clip -> Adam -> new state.
+
+    Returns (new_params, new_m, new_v, metrics[6]) where metrics =
+    [loss, pg_loss, v_loss, entropy, approx_kl, grad_norm].
+    """
+    (loss, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        params, obs, mask, act, old_logp, adv, ret, cfg,
+        use_pallas=use_pallas)
+    pg_loss, v_loss, ent, kl = aux
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg["max_grad_norm"] / gnorm)
+    grads = [g * scale for g in grads]
+
+    b1, b2, eps, lr = (cfg["adam_b1"], cfg["adam_b2"], cfg["adam_eps"],
+                       cfg["lr"])
+    t1 = t + 1.0
+    bc1 = 1.0 - b1 ** t1
+    bc2 = 1.0 - b2 ** t1
+    new_params, new_m, new_v = [], [], []
+    for p, m, v, g in zip(params, opt_m, opt_v, grads):
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * (g * g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_params.append(p - lr * update)
+        new_m.append(m)
+        new_v.append(v)
+
+    metrics = jnp.stack([loss, pg_loss, v_loss, ent, kl, gnorm])
+    return new_params, new_m, new_v, metrics
+
+
+# ------------------------------------------------------- AOT entry points
+# Flat-argument wrappers (HLO parameters are positional): 8 params [+8 m,
+# +8 v, +t] + batch tensors. aot.py lowers exactly these.
+
+NP = 8  # number of parameter arrays
+
+
+def fwd_flat(*args):
+    params = list(args[:NP])
+    obs, mask = args[NP], args[NP + 1]
+    logp, value = policy_fwd(params, obs, mask)
+    return logp, value
+
+
+def train_step_flat(*args):
+    params = list(args[:NP])
+    m = list(args[NP:2 * NP])
+    v = list(args[2 * NP:3 * NP])
+    t = args[3 * NP]
+    obs, mask, act, old_logp, adv, ret = args[3 * NP + 1:3 * NP + 7]
+    new_p, new_m, new_v, metrics = train_step(
+        params, m, v, t, obs, mask, act, old_logp, adv, ret)
+    return (*new_p, *new_m, *new_v, metrics)

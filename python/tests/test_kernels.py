@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the core signal).
+
+hypothesis sweeps shapes (including non-tile-multiple batches, B=1, and
+ragged action widths) and degenerate masks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear, masked_log_softmax, matmul
+from compile.kernels.ref import (fused_linear_ref, masked_log_softmax_ref,
+                                 matmul_ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ------------------------------------------------------------- matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 300), k=st.integers(1, 96), n=st.integers(1, 96),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(b, k, n, seed):
+    x = _rand(seed, b, k)
+    w = _rand(seed + 1, k, n)
+    np.testing.assert_allclose(matmul(x, w), matmul_ref(x, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_exact_small():
+    x = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+    w = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+    np.testing.assert_allclose(matmul(x, w), x)
+
+
+# --------------------------------------------------------- fused_linear
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 300), k=st.integers(1, 80), n=st.integers(1, 80),
+       act=st.sampled_from(["tanh", "relu", "id"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_matches_ref(b, k, n, act, seed):
+    x = _rand(seed, b, k)
+    w = _rand(seed + 1, k, n)
+    bias = _rand(seed + 2, n)
+    np.testing.assert_allclose(
+        fused_linear(x, w, bias, act), fused_linear_ref(x, w, bias, act),
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["tanh", "relu", "id"])
+def test_fused_linear_grads_match_ref(act):
+    """Custom-VJP backward (Pallas matmuls) vs autodiff through the oracle."""
+    x = _rand(7, 33, 16)
+    w = _rand(8, 16, 24)
+    bias = _rand(9, 24)
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear(x, w, b, act)))
+
+    def loss_ref(x, w, b):
+        return jnp.sum(jnp.sin(fused_linear_ref(x, w, b, act)))
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, bias)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_linear_batch_one():
+    x = _rand(3, 1, 64)
+    w = _rand(4, 64, 128)
+    bias = _rand(5, 128)
+    np.testing.assert_allclose(
+        fused_linear(x, w, bias, "tanh"),
+        fused_linear_ref(x, w, bias, "tanh"), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ masked softmax
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 300), a=st.integers(2, 80),
+       seed=st.integers(0, 2**31 - 1))
+def test_masked_log_softmax_matches_ref(b, a, seed):
+    logits = 5.0 * _rand(seed, b, a)
+    key = jax.random.PRNGKey(seed + 1)
+    mask = jax.random.bernoulli(key, 0.7, (b, a)).astype(jnp.float32)
+    # guarantee at least one valid action per row (env invariant: Stop is
+    # always available)
+    mask = mask.at[:, a - 1].set(1.0)
+    np.testing.assert_allclose(
+        masked_log_softmax(logits, mask),
+        masked_log_softmax_ref(logits, mask), rtol=1e-5, atol=1e-5)
+
+
+def test_masked_rows_are_normalised():
+    logits = 3.0 * _rand(11, 37, 65)
+    mask = jnp.ones((37, 65)).at[:, ::3].set(0.0).at[:, 64].set(1.0)
+    logp = masked_log_softmax(logits, mask)
+    p = jnp.exp(logp) * mask
+    np.testing.assert_allclose(jnp.sum(p, axis=-1), jnp.ones(37),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_lanes_never_sampled():
+    logits = jnp.zeros((4, 65)) + 10.0
+    mask = jnp.zeros((4, 65)).at[:, 7].set(1.0)
+    logp = masked_log_softmax(logits, mask)
+    assert float(jnp.max(jnp.exp(logp[:, 0]))) < 1e-20
+    np.testing.assert_allclose(logp[:, 7], jnp.zeros(4), atol=1e-5)
+
+
+def test_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0, 3.0]])
+    mask = jnp.ones((1, 4))
+    logp = masked_log_softmax(logits, mask)
+    assert bool(jnp.all(jnp.isfinite(logp)))
+    np.testing.assert_allclose(logp[0, 0], 0.0, atol=1e-5)

@@ -1,0 +1,100 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable): the macro-thinking
+//! inference step and its components. Regenerates the EXPERIMENTS.md
+//! §Perf numbers.
+
+use qimeng_mtmc::env::{EnvConfig, OptimEnv};
+use qimeng_mtmc::gpusim::{program_time_us, GpuSpec};
+use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
+use qimeng_mtmc::paths;
+use qimeng_mtmc::runtime::{ParamSet, PjrtRuntime};
+use qimeng_mtmc::tasks::kernelbench_level;
+use qimeng_mtmc::transform::action_mask;
+use qimeng_mtmc::util::stats::bench;
+use qimeng_mtmc::util::Rng;
+
+fn main() {
+    let spec = GpuSpec::a100();
+    let tasks = kernelbench_level(2);
+    let task = &tasks[0];
+    let l3 = kernelbench_level(3);
+    let big = &l3[l3.len() - 1];
+    let shapes = qimeng_mtmc::graph::infer_shapes(&task.graph);
+    let env = OptimEnv::new(task, spec.clone(),
+                            LlmProfile::get(ProfileId::GeminiPro25),
+                            EnvConfig::default(), 1);
+
+    println!("== hotpath micro-benchmarks ==");
+
+    let s = bench(200, 300, || {
+        std::hint::black_box(program_time_us(
+            &env.state.program, &task.graph, &shapes, &spec,
+        ));
+    });
+    println!("cost_model(L2 task, {} kernels): {s}", env.state.program.kernels.len());
+
+    let big_shapes = qimeng_mtmc::graph::infer_shapes(&big.graph);
+    let big_env = OptimEnv::new(big, spec.clone(),
+                                LlmProfile::get(ProfileId::GeminiPro25),
+                                EnvConfig::default(), 1);
+    let s = bench(50, 300, || {
+        std::hint::black_box(program_time_us(
+            &big_env.state.program, &big.graph, &big_shapes, &spec,
+        ));
+    });
+    println!("cost_model(L3 task, {} kernels): {s}",
+             big_env.state.program.kernels.len());
+
+    let s = bench(100, 300, || {
+        std::hint::black_box(action_mask(
+            &env.state.program, &task.graph, &shapes, &spec,
+        ));
+    });
+    println!("action_mask(L2 task): {s}");
+
+    let mask = env.mask();
+    let s = bench(100, 300, || {
+        std::hint::black_box(env.observe(&mask));
+    });
+    println!("featurize(L2 task): {s}");
+
+    // full env step (micro_step incl. transform + competence + pricing)
+    let s = bench(50, 500, || {
+        let mut e = OptimEnv::new(task, spec.clone(),
+                                  LlmProfile::get(ProfileId::GeminiPro25),
+                                  EnvConfig::default(), 2);
+        std::hint::black_box(e.step(0));
+    });
+    println!("env_step incl. setup (L2 task): {s}");
+
+    // learned-policy inference (needs artifacts)
+    match PjrtRuntime::load(&paths::artifacts_dir()) {
+        Ok(rt) => {
+            let params = ParamSet::init(&rt.meta.raw, 3).unwrap();
+            let mut rng = Rng::new(4);
+            let obs: Vec<f32> =
+                (0..rt.meta.obs_dim).map(|_| rng.normal() as f32).collect();
+            let maskf = vec![1.0f32; rt.meta.act_dim];
+            let s = bench(200, 500, || {
+                std::hint::black_box(rt.fwd_b1(&params, &obs, &maskf).unwrap());
+            });
+            println!("pjrt fwd_b1 (policy inference): {s}");
+        }
+        Err(_) => println!("pjrt fwd_b1: SKIP (run `make artifacts`)"),
+    }
+
+    // end-to-end macro-thinking episode (greedy surrogate)
+    let s = bench(10, 1000, || {
+        let mut e = OptimEnv::new(task, spec.clone(),
+                                  LlmProfile::get(ProfileId::GeminiPro25),
+                                  EnvConfig::default(), 5);
+        let mut guard = 0;
+        while !e.state.done && guard < 20 {
+            let mask = e.mask();
+            let a = (0..mask.len()).find(|&a| mask[a]).unwrap();
+            e.step(a);
+            guard += 1;
+        }
+        std::hint::black_box(e.state.best_speedup);
+    });
+    println!("full episode (first-valid policy, L2 task): {s}");
+}

@@ -1,0 +1,65 @@
+//! Regenerates **Table 3**: Triton kernel generation on KernelBench —
+//! execute accuracy, fast_1/fast_2 and mean speedup vs PyTorch Eager,
+//! across V100/A100/H100 and the full method roster.
+//!
+//! Env knobs: QIMENG_GPUS="A100" (comma list), QIMENG_LIMIT=20 (tasks per
+//! level), QIMENG_THREADS=N.
+
+use qimeng_mtmc::eval::{evaluate, table3_methods, EvalCfg};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::paths;
+use qimeng_mtmc::report::{append_report, metric_cells, Table};
+use qimeng_mtmc::tasks::kernelbench_level;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let gpus: Vec<GpuSpec> = std::env::var("QIMENG_GPUS")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|n| GpuSpec::by_name(n.trim()))
+                .collect()
+        })
+        .unwrap_or_else(|_| GpuSpec::all());
+    let limit: usize = std::env::var("QIMENG_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
+    let mut cfg = EvalCfg::default();
+    if let Ok(t) = std::env::var("QIMENG_THREADS") {
+        cfg.threads = t.parse().unwrap_or(cfg.threads);
+    }
+    let params = Some(paths::default_policy_path());
+    let methods = table3_methods(params);
+
+    let mut report = String::new();
+    for spec in &gpus {
+        for level in 1..=3usize {
+            let mut tasks = kernelbench_level(level);
+            tasks.truncate(limit);
+            let mut table = Table::new(
+                &format!(
+                    "Table 3 — KernelBench Level {level} on {} ({} tasks)",
+                    spec.name,
+                    tasks.len()
+                ),
+                &["Method", "Accuracy(%)", "fast1/fast2(%)", "Mean Speedup"],
+            );
+            for method in &methods {
+                let r = evaluate(method, &tasks, spec, &cfg);
+                table.row(metric_cells(&r, false));
+            }
+            let text = table.render();
+            println!("{text}");
+            report.push_str(&text);
+            report.push('\n');
+        }
+    }
+    println!(
+        "paper reference (H100, Gemini-2.5-Pro + Ours): L1 100% acc, 67/13 \
+         fast1/fast2; L2 99%, 86/12; L3 70%, 34/2; all >1x mean speedup at \
+         L1-2 — compare shapes, not absolutes (simulated substrate)."
+    );
+    println!("table3 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = append_report(std::path::Path::new("data/reports/table3.txt"),
+                          &report);
+}

@@ -1,0 +1,68 @@
+//! Regenerates **Table 5**: MTMC execution time (ms) on KernelBench
+//! matmul-family operators with Triton vs CUDA generation targets. The
+//! paper's point: MTMC scales to CUDA on operators the LLM knows well
+//! (matmul family); the gap vs Triton reflects language proficiency, not
+//! the framework.
+
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::report::{append_report, Table};
+use qimeng_mtmc::tasks::{kernelbench_level, Family, Task};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let spec = GpuSpec::a100();
+    // 7 matmul-family operators (the paper's task ids 1,2,6,7,8,9,13 are
+    // matmul variants; we take the first 7 matmul/bmm tasks of L1)
+    let tasks: Vec<Task> = kernelbench_level(1)
+        .into_iter()
+        .filter(|t| matches!(t.family, Family::Matmul | Family::BatchMatmul))
+        .take(7)
+        .collect();
+    let method = Method::Mtmc {
+        macro_kind: MacroKind::GreedyLookahead,
+        micro: ProfileId::GeminiPro25,
+    };
+    let mut triton_cfg = EvalCfg::default();
+    triton_cfg.seed = 0x7AB5;
+    let mut cuda_cfg = triton_cfg.clone();
+    cuda_cfg.cuda = true;
+
+    let r_triton = evaluate(&method, &tasks, &spec, &triton_cfg);
+    let r_cuda = evaluate(&method, &tasks, &spec, &cuda_cfg);
+
+    let mut table = Table::new(
+        "Table 5 — MTMC execution time (ms) per matmul operator, by target",
+        &["Task", "MTMC (Triton)", "MTMC (CUDA)"],
+    );
+    let shapes_ms = |r: &qimeng_mtmc::eval::SuiteResult, i: usize| -> String {
+        let o = &r.outcomes[i];
+        if !o.correct {
+            return "fail".into();
+        }
+        let task = &tasks[i];
+        let shapes = qimeng_mtmc::graph::infer_shapes(&task.graph);
+        let aff = qimeng_mtmc::gpusim::library_affinity(&task.id);
+        let eager_us =
+            qimeng_mtmc::gpusim::eager_time_us(&task.graph, &shapes, &spec, aff);
+        format!("{:.2}", eager_us / o.speedup / 1000.0)
+    };
+    for i in 0..tasks.len() {
+        table.row(vec![
+            tasks[i].id.clone(),
+            shapes_ms(&r_triton, i),
+            shapes_ms(&r_cuda, i),
+        ]);
+    }
+    let text = table.render();
+    println!("{text}");
+    println!(
+        "paper reference: CUDA within ~0.7-1.2x of Triton on matmul ops \
+         (1.38 vs 1.38, 1.66 vs 1.36 ms, ...) — both targets produce \
+         working high-performance kernels."
+    );
+    println!("table5 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = append_report(std::path::Path::new("data/reports/table5.txt"),
+                          &text);
+}

@@ -1,0 +1,59 @@
+//! Regenerates **Table 6** (Micro-Coding ablation): multi-step MTMC vs
+//! handing the full optimization plan to the LLM in one prompt
+//! ("w/o Hier") for Gemini-2.5-Flash and DeepSeek-V3 micro-coders.
+
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::report::{append_report, Table};
+use qimeng_mtmc::tasks::kernelbench_level;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let spec = GpuSpec::a100();
+    let limit: usize = std::env::var("QIMENG_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
+    let cfg = EvalCfg::default();
+    let mut table = Table::new(
+        "Table 6 — multi-step (ours) vs single-pass (w/o Hier), A100",
+        &["Method", "L1 Acc/Speedup", "L2 Acc/Speedup", "L3 Acc/Speedup"],
+    );
+    let micros =
+        [("GF-2.5", ProfileId::GeminiFlash25), ("DS-V3", ProfileId::DeepSeekV3)];
+    let mut report_rows = Vec::new();
+    for (name, micro) in micros {
+        for (suffix, method) in [
+            ("w/o Hier", Method::MtmcNoHier { micro }),
+            ("+ Ours", Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro,
+            }),
+        ] {
+            let mut cells = vec![format!("{name} {suffix}")];
+            for level in 1..=3 {
+                let mut tasks = kernelbench_level(level);
+                tasks.truncate(limit);
+                let r = evaluate(&method, &tasks, &spec, &cfg);
+                cells.push(format!(
+                    "{:.0}% / {:.2}",
+                    r.metrics.exec_acc * 100.0,
+                    r.metrics.mean_speedup
+                ));
+            }
+            report_rows.push(cells.clone());
+            table.row(cells);
+        }
+    }
+    let text = table.render();
+    println!("{text}");
+    println!(
+        "paper reference: GF-2.5 w/o Hier 60/32/10% acc vs + Ours 94/97/64%; \
+         DS-V3 w/o Hier 41/16/6% vs + Ours 78/59/36% — single-pass craters \
+         at L2/L3."
+    );
+    println!("table6 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = append_report(std::path::Path::new("data/reports/table6.txt"),
+                          &text);
+}

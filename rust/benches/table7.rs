@@ -1,0 +1,88 @@
+//! Regenerates **Table 7** (Macro-Thinking ablation) on 10% of
+//! KernelBench: learned policy w/ action space; prompted-LLM proposers w/
+//! action space (random, GPT-4o, DS-V3, GF-2.5); and unconstrained
+//! proposers w/o action space.
+
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::paths;
+use qimeng_mtmc::report::{append_report, Table};
+use qimeng_mtmc::tasks::{kernelbench_level, Task};
+
+fn ten_percent(level: usize) -> Vec<Task> {
+    // every 10th task: 10/10/5 across levels
+    kernelbench_level(level)
+        .into_iter()
+        .step_by(10)
+        .collect()
+}
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let spec = GpuSpec::a100();
+    let cfg = EvalCfg::default();
+    let micro = ProfileId::GeminiFlash25;
+
+    // the three lightweight-LLM policy variants of the paper map to three
+    // training seeds of the same policy class; without trained params the
+    // greedy surrogate (with distinct eval seeds) stands in
+    let settings: Vec<(&str, String, MacroKind)> = vec![
+        ("w/ policy w/ AS", "DS-Coder".into(), MacroKind::LearnedOrGreedy {
+            params_path: Some(paths::default_policy_path()),
+        }),
+        ("w/ policy w/ AS", "Llama".into(), MacroKind::GreedyLookahead),
+        ("w/ policy w/ AS", "Qwen".into(), MacroKind::GreedyLookahead),
+        ("w/o policy w/ AS", "random".into(), MacroKind::Random),
+        ("w/o policy w/ AS", "GPT-4o".into(), MacroKind::Heuristic {
+            label: "GPT-4o".into(), mistake_rate: 0.50,
+        }),
+        ("w/o policy w/ AS", "DS-V3".into(), MacroKind::Heuristic {
+            label: "DS-V3".into(), mistake_rate: 0.40,
+        }),
+        ("w/o policy w/ AS", "GF-2.5".into(), MacroKind::Heuristic {
+            label: "GF-2.5".into(), mistake_rate: 0.32,
+        }),
+        ("w/o policy w/o AS", "GPT-4o".into(), MacroKind::Freeform {
+            label: "GPT-4o".into(), wildness: 0.65, mistake_rate: 0.50,
+        }),
+        ("w/o policy w/o AS", "DS-V3".into(), MacroKind::Freeform {
+            label: "DS-V3".into(), wildness: 0.55, mistake_rate: 0.40,
+        }),
+        ("w/o policy w/o AS", "GF-2.5".into(), MacroKind::Freeform {
+            label: "GF-2.5".into(), wildness: 0.45, mistake_rate: 0.32,
+        }),
+    ];
+
+    let mut table = Table::new(
+        "Table 7 — Macro-Thinking ablation (10% of KernelBench, A100)",
+        &["Setting", "Method", "L1 Acc/Speedup", "L2 Acc/Speedup",
+          "L3 Acc/Speedup"],
+    );
+    for (i, (setting, name, kind)) in settings.iter().enumerate() {
+        let mut cells = vec![setting.to_string(), name.clone()];
+        for level in 1..=3 {
+            let tasks = ten_percent(level);
+            let mut c = cfg.clone();
+            c.seed = cfg.seed ^ ((i as u64) << 40); // variant seeds
+            let method = Method::Mtmc { macro_kind: kind.clone(), micro };
+            let r = evaluate(&method, &tasks, &spec, &c);
+            cells.push(format!(
+                "{:.0}% / {:.2}",
+                r.metrics.exec_acc * 100.0,
+                r.metrics.mean_speedup
+            ));
+        }
+        table.row(cells);
+    }
+    let text = table.render();
+    println!("{text}");
+    println!(
+        "paper reference: w/ policy 80-100% acc with ~1x-1.8x speedups; \
+         w/o policy w/ AS drops to 40-70% acc, ~0.15-0.8x; w/o AS drops \
+         further to 10-50% acc, 0.02-0.5x."
+    );
+    println!("table7 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = append_report(std::path::Path::new("data/reports/table7.txt"),
+                          &text);
+}

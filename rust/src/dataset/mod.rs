@@ -1,0 +1,15 @@
+//! Offline trajectory dataset (paper §4.2: "a representative offline
+//! dataset comprising 60k trajectories, without benchmark instances").
+//!
+//! Trajectories are rolled out on the training corpus with a mixture of
+//! exploration policies (random + heuristic ladders), recorded compactly
+//! and persisted to a binary file. Replaying a trajectory through
+//! [`crate::env::TreeEnv`] reproduces it bit-for-bit (edge-deterministic
+//! environment), so the dataset doubles as the tree-structured
+//! environment's warm cache.
+
+mod gen;
+mod store;
+
+pub use gen::{generate, DatasetCfg, DatasetStats};
+pub use store::{load_trajectories, save_trajectories, TrajStep, Trajectory};

@@ -1,0 +1,149 @@
+//! Compact binary trajectory store.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// One recorded step. `signal_code`: 0=rejected, 1=compile-fail,
+/// 2=wrong-result, 3=correct, 4=stop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrajStep {
+    pub action: u16,
+    pub signal_code: u8,
+    pub reward: f32,
+    pub speedup: f32,
+}
+
+/// One episode over one task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trajectory {
+    /// Index into the generating corpus (order is deterministic).
+    pub task_idx: u32,
+    /// Episode seed (replays the exact tree path).
+    pub seed: u64,
+    pub steps: Vec<TrajStep>,
+}
+
+impl Trajectory {
+    pub fn total_reward(&self) -> f64 {
+        self.steps.iter().map(|s| s.reward as f64).sum()
+    }
+
+    pub fn final_speedup(&self) -> f32 {
+        self.steps.last().map_or(1.0, |s| s.speedup)
+    }
+}
+
+const MAGIC: &[u8; 8] = b"QMMCTRJ1";
+
+pub fn save_trajectories(trajs: &[Trajectory], path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(trajs.len() as u64).to_le_bytes())?;
+    for t in trajs {
+        w.write_all(&t.task_idx.to_le_bytes())?;
+        w.write_all(&t.seed.to_le_bytes())?;
+        w.write_all(&(t.steps.len() as u32).to_le_bytes())?;
+        for s in &t.steps {
+            w.write_all(&s.action.to_le_bytes())?;
+            w.write_all(&[s.signal_code])?;
+            w.write_all(&s.reward.to_le_bytes())?;
+            w.write_all(&s.speedup.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_trajectories(path: &Path) -> Result<Vec<Trajectory>> {
+    let mut r = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a trajectory file");
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    if n > 50_000_000 {
+        bail!("implausible trajectory count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut b4 = [0u8; 4];
+    let mut b2 = [0u8; 2];
+    let mut b1 = [0u8; 1];
+    for _ in 0..n {
+        r.read_exact(&mut b4)?;
+        let task_idx = u32::from_le_bytes(b4);
+        r.read_exact(&mut b8)?;
+        let seed = u64::from_le_bytes(b8);
+        r.read_exact(&mut b4)?;
+        let len = u32::from_le_bytes(b4) as usize;
+        if len > 1_000 {
+            bail!("implausible trajectory length {len}");
+        }
+        let mut steps = Vec::with_capacity(len);
+        for _ in 0..len {
+            r.read_exact(&mut b2)?;
+            let action = u16::from_le_bytes(b2);
+            r.read_exact(&mut b1)?;
+            let signal_code = b1[0];
+            r.read_exact(&mut b4)?;
+            let reward = f32::from_le_bytes(b4);
+            r.read_exact(&mut b4)?;
+            let speedup = f32::from_le_bytes(b4);
+            steps.push(TrajStep { action, signal_code, reward, speedup });
+        }
+        out.push(Trajectory { task_idx, seed, steps });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Vec<Trajectory> {
+        vec![
+            Trajectory {
+                task_idx: 3,
+                seed: 99,
+                steps: vec![
+                    TrajStep { action: 0, signal_code: 3, reward: 0.5, speedup: 1.4 },
+                    TrajStep { action: 64, signal_code: 4, reward: 0.2, speedup: 1.4 },
+                ],
+            },
+            Trajectory { task_idx: 7, seed: 100, steps: vec![] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("qimeng_traj_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let trajs = demo();
+        save_trajectories(&trajs, &path).unwrap();
+        assert_eq!(load_trajectories(&path).unwrap(), trajs);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("qimeng_traj_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"XXXXXXXX\0\0\0\0\0\0\0\0").unwrap();
+        assert!(load_trajectories(&path).is_err());
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let t = &demo()[0];
+        assert!((t.total_reward() - 0.7).abs() < 1e-6);
+        assert_eq!(t.final_speedup(), 1.4);
+    }
+}

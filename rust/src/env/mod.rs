@@ -1,0 +1,21 @@
+//! The Macro-Thinking RL environment.
+//!
+//! State = (task, current program, history); actions = the 65-way semantic
+//! space of [`crate::transform`]; transition = one micro-coding step
+//! (transform + competence draw + correctness check + cost delta); reward
+//! = the paper's staged rule-based shaping with step-proportional decay.
+//!
+//! [`tree::TreeEnv`] is the offline tree-structured variant used for PPO
+//! (paper §4.2): transitions are memoized per (state-path, action) with
+//! deterministic per-edge seeds, so training never waits on fresh
+//! micro-coding rollouts for states it has already visited.
+
+mod obs;
+mod reward;
+mod stepper;
+mod tree;
+
+pub use obs::{featurize, OBS_DIM};
+pub use reward::{shape_reward, RewardCfg, StepSignal};
+pub use stepper::{EnvConfig, EnvState, OptimEnv, StepResult};
+pub use tree::TreeEnv;

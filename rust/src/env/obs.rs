@@ -1,0 +1,199 @@
+//! Observation featurizer: the structural stand-in for the paper's
+//! LLM-token observation (DESIGN.md substitution table). 64 features over
+//! task structure, schedule state, hardware spec, progress and history —
+//! everything the Macro-Thinking policy needs to pick (type, region).
+//!
+//! Must stay in sync with `python/compile/model.py::CONFIG["obs_dim"]`.
+
+use crate::gpusim::{kernel_time_us, GpuSpec};
+use crate::graph::{Graph, Op, OpClass};
+use crate::kir::Program;
+use crate::transform::{ACTION_DIM, NUM_OPT_TYPES};
+use crate::kir::MAX_REGIONS;
+
+/// Observation dimension (= L2 model obs_dim).
+pub const OBS_DIM: usize = 64;
+
+fn log_norm(x: f64, scale: f64) -> f32 {
+    ((x.max(1.0)).ln() / scale) as f32
+}
+
+/// Featurize the current environment state.
+///
+/// `history`: most-recent-first action indices (up to 4 used);
+/// `speedup`/`best_speedup`: current and best-so-far vs eager;
+/// `step_frac`: step / max_steps; `mask`: current action validity.
+#[allow(clippy::too_many_arguments)]
+pub fn featurize(
+    g: &Graph,
+    shapes: &[Vec<usize>],
+    p: &Program,
+    spec: &GpuSpec,
+    mask: &[bool],
+    history: &[usize],
+    speedup: f64,
+    best_speedup: f64,
+    step_frac: f32,
+) -> Vec<f32> {
+    let mut f = Vec::with_capacity(OBS_DIM);
+
+    // ---- task structure (12)
+    let mut class_counts = [0f32; 4];
+    let mut hot = [0f32; 6]; // matmul, conv, attention, softmax-ish, lstm, bmm
+    let mut flops = 0f64;
+    let mut bytes = 0f64;
+    for (id, node) in g.nodes.iter().enumerate() {
+        match node.op.class() {
+            OpClass::Contraction => class_counts[0] += 1.0,
+            OpClass::Elementwise => class_counts[1] += 1.0,
+            OpClass::Reduction => class_counts[2] += 1.0,
+            OpClass::Movement => class_counts[3] += 1.0,
+            OpClass::Input => continue,
+        }
+        match node.op {
+            Op::MatMul => hot[0] += 1.0,
+            Op::Conv2d { .. } => hot[1] += 1.0,
+            Op::Attention => hot[2] += 1.0,
+            Op::Softmax | Op::LayerNorm => hot[3] += 1.0,
+            Op::LstmCell => hot[4] += 1.0,
+            Op::BatchMatMul => hot[5] += 1.0,
+            _ => {}
+        }
+        flops += crate::gpusim::op_flops(g, shapes, id);
+        bytes += shapes[id].iter().product::<usize>() as f64 * 4.0;
+    }
+    let ops = g.op_count().max(1) as f32;
+    for c in class_counts {
+        f.push(c / ops);
+    }
+    for h in hot {
+        f.push((h / ops).min(1.0));
+    }
+    f.push(log_norm(flops, 30.0));
+    f.push(log_norm(bytes, 25.0));
+
+    // ---- schedule state (10)
+    let nk = p.kernels.len().max(1) as f32;
+    f.push(nk / ops); // kernels per op (1.0 = unfused)
+    f.push(log_norm(p.kernels.len() as f64, 4.0));
+    let frac = |pred: &dyn Fn(&crate::kir::Kernel) -> bool| -> f32 {
+        p.kernels.iter().filter(|k| pred(*k)).count() as f32 / nk
+    };
+    f.push(frac(&|k| k.schedule.block_tile.is_some()));
+    f.push(frac(&|k| k.schedule.reg_tile.is_some()));
+    f.push(frac(&|k| k.schedule.pipeline_depth >= 2));
+    f.push(frac(&|k| k.schedule.pipeline_depth >= 3));
+    f.push(frac(&|k| k.schedule.loop_order != crate::kir::LoopOrder::Naive));
+    f.push(frac(&|k| k.schedule.vector_width > 1));
+    f.push(p.mean_sophistication() / 5.0);
+    // smem utilisation of the hottest kernel
+    let hot_kernel = p
+        .kernels
+        .iter()
+        .max_by(|a, b| {
+            let ta = kernel_time_us(a, g, shapes, spec).time_us;
+            let tb = kernel_time_us(b, g, shapes, spec).time_us;
+            ta.partial_cmp(&tb).unwrap()
+        });
+    f.push(hot_kernel.map_or(0.0, |k| {
+        (k.schedule.smem_bytes() as f32 / spec.smem_bytes() as f32).min(1.0)
+    }));
+
+    // ---- hardware (6)
+    f.push(spec.sms as f32 / 132.0);
+    f.push(spec.smem_per_sm_kb as f32 / 228.0);
+    f.push(spec.l2_mb as f32 / 50.0);
+    f.push((spec.mem_bw_gbs / 3350.0) as f32);
+    f.push((spec.fp32_tflops / 60.0) as f32);
+    f.push(spec.supports_async_copy() as u8 as f32);
+
+    // ---- progress (4)
+    f.push((speedup.max(0.01).ln() / 3.0) as f32);
+    f.push((best_speedup.max(0.01).ln() / 3.0) as f32);
+    f.push(step_frac);
+    f.push(mask.iter().filter(|&&m| m).count() as f32 / ACTION_DIM as f32);
+
+    // ---- valid actions per opt type (8)
+    for t in 0..NUM_OPT_TYPES {
+        let n = (0..MAX_REGIONS)
+            .filter(|r| mask[t * MAX_REGIONS + r])
+            .count();
+        f.push(n as f32 / MAX_REGIONS as f32);
+    }
+
+    // ---- history: last 4 actions as (type+1)/9, (region+1)/9 (8)
+    for i in 0..4 {
+        match history.get(i) {
+            Some(&a) if a < ACTION_DIM - 1 => {
+                f.push((a / MAX_REGIONS + 1) as f32 / 9.0);
+                f.push((a % MAX_REGIONS + 1) as f32 / 9.0);
+            }
+            _ => {
+                f.push(0.0);
+                f.push(0.0);
+            }
+        }
+    }
+
+    // ---- pad to OBS_DIM
+    while f.len() < OBS_DIM {
+        f.push(0.0);
+    }
+    assert_eq!(f.len(), OBS_DIM, "featurizer produced {} dims", f.len());
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use crate::kir::lower_naive;
+    use crate::transform::action_mask;
+
+    fn setup() -> (Graph, Vec<Vec<usize>>, Program, GpuSpec) {
+        let t = &crate::tasks::kernelbench_level(2)[0];
+        let p = lower_naive(&t.graph);
+        let shapes = infer_shapes(&t.graph);
+        (t.graph.clone(), shapes, p, GpuSpec::a100())
+    }
+
+    #[test]
+    fn obs_dim_and_bounds() {
+        let (g, shapes, p, spec) = setup();
+        let mask = action_mask(&p, &g, &shapes, &spec);
+        let obs = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        assert_eq!(obs.len(), OBS_DIM);
+        for (i, v) in obs.iter().enumerate() {
+            assert!(v.is_finite(), "feature {i} not finite");
+            assert!((-3.0..=3.0).contains(v), "feature {i} = {v} out of range");
+        }
+    }
+
+    #[test]
+    fn schedule_changes_move_features() {
+        let (g, shapes, mut p, spec) = setup();
+        let mask = action_mask(&p, &g, &shapes, &spec);
+        let before = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        p.kernels[0].schedule.block_tile = Some((64, 64, 32));
+        let after = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn hardware_distinguishable() {
+        let (g, shapes, p, _) = setup();
+        let mask = action_mask(&p, &g, &shapes, &GpuSpec::v100());
+        let v = featurize(&g, &shapes, &p, &GpuSpec::v100(), &mask, &[], 1.0, 1.0, 0.0);
+        let h = featurize(&g, &shapes, &p, &GpuSpec::h100(), &mask, &[], 1.0, 1.0, 0.0);
+        assert_ne!(v, h);
+    }
+
+    #[test]
+    fn history_encoded() {
+        let (g, shapes, p, spec) = setup();
+        let mask = action_mask(&p, &g, &shapes, &spec);
+        let none = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        let some = featurize(&g, &shapes, &p, &spec, &mask, &[3, 17], 1.0, 1.0, 0.0);
+        assert_ne!(none, some);
+    }
+}

@@ -1,0 +1,126 @@
+//! Rule-based staged reward shaping (paper §4.2): compile success →
+//! correct execution → performance improvement, with progressive rewards,
+//! decaying penalties, and a step-proportional decay that damps degenerate
+//! looping.
+
+/// What happened in the step, as seen by the reward function.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepSignal {
+    /// Generated code failed to compile.
+    CompileFail,
+    /// Compiled but produced wrong numbers.
+    WrongResult,
+    /// The transform layer rejected the action (invalid proposal).
+    Rejected,
+    /// Correct step; log-speedup moved from `prev` to `now`.
+    Correct { prev: f64, now: f64 },
+    /// Terminal Stop with the episode's best speedup.
+    Stop { best: f64 },
+}
+
+/// Reward shaping constants.
+#[derive(Clone, Debug)]
+pub struct RewardCfg {
+    pub compile_fail_pen: f64,
+    pub wrong_result_pen: f64,
+    pub rejected_pen: f64,
+    pub improve_scale: f64,
+    pub step_cost: f64,
+    pub stop_bonus_scale: f64,
+    /// Per-step decay d_t = max(floor, 1 - rate * t).
+    pub decay_rate: f64,
+    pub decay_floor: f64,
+}
+
+impl Default for RewardCfg {
+    fn default() -> Self {
+        RewardCfg {
+            compile_fail_pen: -0.6,
+            wrong_result_pen: -0.3,
+            rejected_pen: -0.2,
+            improve_scale: 2.0,
+            step_cost: -0.01,
+            stop_bonus_scale: 0.5,
+            decay_rate: 0.08,
+            decay_floor: 0.3,
+        }
+    }
+}
+
+impl RewardCfg {
+    pub fn decay(&self, step: usize) -> f64 {
+        (1.0 - self.decay_rate * step as f64).max(self.decay_floor)
+    }
+}
+
+/// Shape the reward for a step at index `step` (0-based).
+///
+/// Positive rewards decay with step (discouraging aimless long episodes);
+/// penalties are *divided* by the decay (early mistakes are cheap
+/// exploration, late mistakes on an already-good kernel are costly — the
+/// paper's "penalties decrease gradually" is relative to the growing
+/// positive signal).
+pub fn shape_reward(signal: &StepSignal, step: usize, cfg: &RewardCfg) -> f64 {
+    let d = cfg.decay(step);
+    match signal {
+        StepSignal::CompileFail => cfg.compile_fail_pen * d,
+        StepSignal::WrongResult => cfg.wrong_result_pen * d,
+        StepSignal::Rejected => cfg.rejected_pen * d,
+        StepSignal::Correct { prev, now } => {
+            let dlog = now.max(1e-3).ln() - prev.max(1e-3).ln();
+            d * (cfg.improve_scale * dlog) + cfg.step_cost
+        }
+        StepSignal::Stop { best } => {
+            cfg.stop_bonus_scale * best.max(1e-3).ln()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staged_ordering() {
+        // compile fail < wrong result < no-progress correct step
+        let cfg = RewardCfg::default();
+        let cf = shape_reward(&StepSignal::CompileFail, 0, &cfg);
+        let wr = shape_reward(&StepSignal::WrongResult, 0, &cfg);
+        let ok = shape_reward(&StepSignal::Correct { prev: 1.0, now: 1.0 }, 0, &cfg);
+        assert!(cf < wr && wr < ok);
+    }
+
+    #[test]
+    fn improvement_rewarded_regression_punished() {
+        let cfg = RewardCfg::default();
+        let up = shape_reward(&StepSignal::Correct { prev: 1.0, now: 1.5 }, 0, &cfg);
+        let down = shape_reward(&StepSignal::Correct { prev: 1.0, now: 0.7 }, 0, &cfg);
+        assert!(up > 0.0);
+        assert!(down < 0.0);
+    }
+
+    #[test]
+    fn decay_damps_late_rewards() {
+        let cfg = RewardCfg::default();
+        let early = shape_reward(&StepSignal::Correct { prev: 1.0, now: 2.0 }, 0, &cfg);
+        let late = shape_reward(&StepSignal::Correct { prev: 1.0, now: 2.0 }, 10, &cfg);
+        assert!(late < early);
+        assert!(late > 0.0, "decay floors out, never flips sign");
+    }
+
+    #[test]
+    fn stop_bonus_scales_with_quality() {
+        let cfg = RewardCfg::default();
+        let good = shape_reward(&StepSignal::Stop { best: 2.0 }, 5, &cfg);
+        let bad = shape_reward(&StepSignal::Stop { best: 0.5 }, 5, &cfg);
+        assert!(good > 0.0);
+        assert!(bad < 0.0, "stopping on a slow kernel is penalised");
+    }
+
+    #[test]
+    fn decay_floor_respected() {
+        let cfg = RewardCfg::default();
+        assert_eq!(cfg.decay(1000), cfg.decay_floor);
+        assert_eq!(cfg.decay(0), 1.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Tree-structured offline environment (paper §4.2 "Environment").
+//!
+//! Because [`OptimEnv`] transitions are edge-deterministic, the set of
+//! reachable states per task forms a tree keyed by the successful action
+//! path. `TreeEnv` memoizes every priced edge — (tree-node, action) →
+//! (outcome program, signal, speedup) — so PPO's repeated visits replay
+//! from the cache instead of re-running micro-coding, correctness checks
+//! and cost analysis. This is the role the paper's pre-collected 60k
+//! trajectories play: decoupling policy optimization from generation
+//! latency.
+
+use super::reward::{shape_reward, StepSignal};
+use super::stepper::{EnvConfig, OptimEnv, StepResult};
+use crate::gpusim::GpuSpec;
+use crate::kir::Program;
+use crate::microcode::LlmProfile;
+use crate::tasks::Task;
+use crate::transform::STOP_ACTION;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+struct CachedEdge {
+    program: Option<Program>, // None = state unchanged (fail/reject)
+    signal: StepSignal,
+    speedup: f64,
+}
+
+/// Memoizing wrapper around [`OptimEnv`].
+pub struct TreeEnv<'a> {
+    pub env: OptimEnv<'a>,
+    cache: HashMap<(u64, usize), CachedEdge>,
+    /// cache statistics: (hits, misses)
+    pub stats: (usize, usize),
+    max_entries: usize,
+}
+
+impl<'a> TreeEnv<'a> {
+    pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+               cfg: EnvConfig, seed: u64) -> TreeEnv<'a> {
+        TreeEnv {
+            env: OptimEnv::new(task, spec, profile, cfg, seed),
+            cache: HashMap::new(),
+            stats: (0, 0),
+            max_entries: 200_000,
+        }
+    }
+
+    /// Reset to a fresh episode over the same tree (same seed => same
+    /// tree; the cache stays warm).
+    pub fn reset(&mut self) {
+        let task = self.env.task;
+        let spec = self.env.spec.clone();
+        let profile = self.env.profile.clone();
+        let cfg = self.env.cfg.clone();
+        let base = self.env.base_seed;
+        self.env = OptimEnv::new(task, spec, profile, cfg, base);
+    }
+
+    /// Step with memoization.
+    pub fn step(&mut self, action: usize) -> StepResult {
+        let step_idx = self.env.state.step;
+        if action == STOP_ACTION
+            || self.env.state.step + 1 >= self.env.cfg.max_steps
+        {
+            return self.env.step(action);
+        }
+        let key = (self.env.state.path_hash, action);
+        if let Some(edge) = self.cache.get(&key).cloned() {
+            self.stats.0 += 1;
+            // replay the cached transition onto the live state
+            self.env.state.step += 1;
+            self.env.state.history.insert(0, action);
+            self.env.state.history.truncate(8);
+            if let Some(p) = edge.program {
+                self.env.state.path_hash = path_mix(self.env.state.path_hash,
+                                                    action as u64 + 1);
+                self.env.state.program = p;
+                self.env.state.speedup = edge.speedup;
+                if edge.speedup > self.env.state.best_speedup {
+                    self.env.state.best_speedup = edge.speedup;
+                    self.env.state.best_program = self.env.state.program.clone();
+                }
+            }
+            let reward = shape_reward(&edge.signal, step_idx, &self.env.cfg.reward);
+            return StepResult { reward, signal: edge.signal, done: false };
+        }
+        self.stats.1 += 1;
+        let key_state = self.env.state.path_hash;
+        let result = self.env.step(action);
+        if self.cache.len() < self.max_entries {
+            let program = match result.signal {
+                StepSignal::Correct { .. } => Some(self.env.state.program.clone()),
+                _ => None,
+            };
+            self.cache.insert(
+                (key_state, action),
+                CachedEdge {
+                    program,
+                    signal: result.signal,
+                    speedup: self.env.state.speedup,
+                },
+            );
+        }
+        result
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Same mixing as OptimEnv::accept uses for path hashes.
+fn path_mix(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^ (x >> 27)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microcode::ProfileId;
+    use crate::util::Rng;
+
+    fn run_episode(env: &mut TreeEnv, seed: u64) -> (f64, Vec<StepSignal>) {
+        let mut rng = Rng::new(seed);
+        let mut signals = Vec::new();
+        let mut total = 0.0;
+        while !env.env.state.done {
+            let mask = env.env.mask();
+            let valid: Vec<usize> = (0..mask.len()).filter(|&a| mask[a]).collect();
+            let a = *rng.choose(&valid);
+            let r = env.step(a);
+            total += r.reward;
+            signals.push(r.signal);
+        }
+        (total, signals)
+    }
+
+    #[test]
+    fn cache_warms_and_hits_on_replay() {
+        let tasks = crate::tasks::kernelbench_level(2)[..1].to_vec();
+        let mut env = TreeEnv::new(
+            &tasks[0],
+            GpuSpec::a100(),
+            LlmProfile::get(ProfileId::GeminiPro25),
+            EnvConfig::default(),
+            7,
+        );
+        let (_r1, s1) = run_episode(&mut env, 1);
+        let misses_after_first = env.stats.1;
+        env.reset();
+        let (_r2, s2) = run_episode(&mut env, 1); // same action stream
+        assert_eq!(
+            format!("{s1:?}"),
+            format!("{s2:?}"),
+            "replay of the same action stream must match"
+        );
+        assert!(env.stats.0 > 0, "no cache hits on replay");
+        assert_eq!(env.stats.1, misses_after_first, "replay caused misses");
+    }
+
+    #[test]
+    fn cached_and_uncached_paths_agree() {
+        let tasks = crate::tasks::kernelbench_level(2)[1..2].to_vec();
+        let mk = || TreeEnv::new(
+            &tasks[0],
+            GpuSpec::h100(),
+            LlmProfile::get(ProfileId::GeminiFlash25),
+            EnvConfig::default(),
+            13,
+        );
+        let mut warm = mk();
+        run_episode(&mut warm, 5);
+        warm.reset();
+        let (r_warm, s_warm) = run_episode(&mut warm, 9);
+        let mut cold = mk();
+        let (r_cold, s_cold) = run_episode(&mut cold, 9);
+        assert_eq!(format!("{s_warm:?}"), format!("{s_cold:?}"));
+        assert!((r_warm - r_cold).abs() < 1e-9);
+    }
+}

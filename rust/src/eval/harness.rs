@@ -1,0 +1,494 @@
+//! The evaluation harness: method × suite × GPU -> metrics.
+
+use super::metrics::{aggregate, Metrics, TaskOutcome};
+use super::methods::{MacroKind, Method};
+use crate::env::{EnvConfig, OptimEnv};
+use crate::gpusim::{program_time_us, GpuSpec};
+use crate::microcode::{
+    check_correct, single_pass_generate, CheckOutcome, LlmProfile, ProfileId,
+    SinglePassMode, SinglePassOutcome,
+};
+use crate::policy::{FreeformPolicy, HeuristicPolicy, Policy, PjrtPolicy,
+                    RandomPolicy};
+use crate::runtime::{load_params, PjrtRuntime};
+use crate::tasks::{Suite, Task};
+use crate::transform::{
+    action_mask, apply_action, decode_action, STOP_ACTION,
+};
+use crate::util::{parallel::par_map, Rng};
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct EvalCfg {
+    pub seed: u64,
+    pub threads: usize,
+    pub env: EnvConfig,
+    /// Target language is CUDA (Table 5).
+    pub cuda: bool,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg {
+            seed: 0xE7A1,
+            threads: crate::util::parallel::default_threads(),
+            env: EnvConfig::default(),
+            cuda: false,
+        }
+    }
+}
+
+/// Result of one method over one suite.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub method: String,
+    pub suite: &'static str,
+    pub gpu: &'static str,
+    pub metrics: Metrics,
+    pub outcomes: Vec<TaskOutcome>,
+}
+
+pub type TaskResult = TaskOutcome;
+
+/// Suite interface difficulty: TritonBench's real-world (G) and
+/// PyTorch-aligned (T) interfaces are substantially harder to hit than
+/// KernelBench's (calibration constants; see EXPERIMENTS.md §Calibration).
+fn suite_difficulty(suite: Suite) -> f64 {
+    match suite {
+        Suite::TritonG => 1.3,
+        Suite::TritonT => 1.2,
+        _ => 1.0,
+    }
+}
+
+/// Probability a generated kernel's *interface* matches TritonBench's
+/// harness (signature conventions, launch wrappers, pointer vs tensor
+/// calling styles). The paper's per-model exec accuracies on TritonBench
+/// cluster at ~0.2-0.3x of their KernelBench accuracies — an interface
+/// gate largely independent of model strength.
+fn suite_interface_pass(suite: Suite) -> f64 {
+    match suite {
+        Suite::TritonG => 0.25,
+        Suite::TritonT => 0.32,
+        _ => 1.0,
+    }
+}
+
+/// On TritonBench, failures overwhelmingly manifest as *call* failures
+/// (interface/signature mismatches) rather than silent numeric bugs —
+/// the paper's call-accuracy columns sit only a few points above execute
+/// accuracy. KernelBench keeps each model's own compile/silent split.
+fn suite_compile_frac(suite: Suite) -> Option<f64> {
+    match suite {
+        Suite::TritonG | Suite::TritonT => Some(0.9),
+        _ => None,
+    }
+}
+
+/// Base final-assembly failure probability per suite for MTMC runs:
+/// KernelBench interfaces are trivial; TritonBench-T's PyTorch-aligned
+/// signatures and -G's real-world harnesses gate a large fraction of
+/// otherwise-correct kernels (paper: MTMC exec acc 54.8% on T, 22.8% on G
+/// with near-perfect KernelBench L1-2).
+fn suite_assembly_base(suite: Suite) -> f64 {
+    match suite {
+        Suite::TritonG => 0.76,
+        Suite::TritonT => 0.42,
+        _ => 0.0,
+    }
+}
+
+/// KernelLLM's out-of-distribution collapse on TritonBench (paper §5.2
+/// "severe degradation ... accuracy from 40-50% to 2-4%").
+fn ood_multiplier(profile: ProfileId, suite: Suite) -> f64 {
+    match (profile, suite) {
+        (ProfileId::KernelLlm, Suite::TritonG | Suite::TritonT) => 1.5,
+        (ProfileId::Kevin32B, Suite::TritonG | Suite::TritonT) => 1.4,
+        _ => 1.0,
+    }
+}
+
+fn effective_profile(profile: ProfileId, suite: Suite) -> LlmProfile {
+    let mut p = LlmProfile::get(profile)
+        .scaled(suite_difficulty(suite) * ood_multiplier(profile, suite));
+    if let Some(cf) = suite_compile_frac(suite) {
+        p.compile_frac = cf;
+    }
+    p
+}
+
+/// MTMC final-assembly risk: after the stepwise loop, the micro-coder
+/// still has to assemble the full kernel file (imports, launch glue,
+/// multi-kernel orchestration). Risk grows quadratically with graph size —
+/// negligible for single ops, material for whole networks (the paper's
+/// ~70% L3 accuracy).
+fn assembly_error_prob(profile: &LlmProfile, op_count: usize,
+                       suite: Suite) -> f64 {
+    let size_risk = LlmProfile::get(profile.id).atomic_err
+        * (op_count as f64 / 4.2).powf(2.2);
+    (suite_assembly_base(suite) + size_risk).min(0.80)
+}
+
+/// Evaluate one method over a task set.
+pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
+                cfg: &EvalCfg) -> SuiteResult {
+    let outcomes: Vec<TaskOutcome> = match method {
+        Method::Baseline { profile } => {
+            par_map(tasks, cfg.threads, |ti, task| {
+                baseline_task(*profile, task, spec, cfg, ti as u64)
+            })
+        }
+        Method::MtmcNoHier { micro } => {
+            par_map(tasks, cfg.threads, |ti, task| {
+                no_hier_task(*micro, task, spec, cfg, ti as u64)
+            })
+        }
+        Method::Mtmc { macro_kind, micro } => {
+            mtmc_all(macro_kind, *micro, tasks, spec, cfg)
+        }
+    };
+    SuiteResult {
+        method: method.label(),
+        suite: tasks.first().map_or("empty", |t| t.suite.label()),
+        gpu: spec.name,
+        metrics: aggregate(&outcomes),
+        outcomes,
+    }
+}
+
+// ------------------------------------------------------------ baselines
+
+fn baseline_task(profile: ProfileId, task: &Task, spec: &GpuSpec,
+                 cfg: &EvalCfg, ti: u64) -> TaskOutcome {
+    let prof = effective_profile(profile, task.suite);
+    let shapes = crate::graph::infer_shapes(&task.graph);
+    let mut rng = Rng::new(cfg.seed ^ (ti << 17) ^ 0xBA5E);
+    // interface gate (TritonBench only): a mismatch is a call failure
+    // with high probability regardless of the kernel body
+    if !rng.bool(suite_interface_pass(task.suite)) {
+        return TaskOutcome {
+            task_id: task.id.clone(),
+            compiled: rng.bool(0.1),
+            correct: false,
+            speedup: 0.0,
+        };
+    }
+    match single_pass_generate(&task.graph, &shapes, &prof, spec,
+                               &SinglePassMode::Freeform, cfg.cuda, &mut rng) {
+        SinglePassOutcome::CompileError => TaskOutcome {
+            task_id: task.id.clone(),
+            compiled: false,
+            correct: false,
+            speedup: 0.0,
+        },
+        SinglePassOutcome::Generated(p) => {
+            score_program(&p, task, &shapes, spec, cfg, ti)
+        }
+    }
+}
+
+fn score_program(p: &crate::kir::Program, task: &Task,
+                 shapes: &[Vec<usize>], spec: &GpuSpec, cfg: &EvalCfg,
+                 ti: u64) -> TaskOutcome {
+    let correct = check_correct(p, &task.verif_graph, cfg.env.verif_trials,
+                                cfg.seed ^ ti ^ 0xC4EC) == CheckOutcome::Correct;
+    let affinity = crate::gpusim::library_affinity(&task.id);
+    let eager = crate::gpusim::eager_time_us(&task.graph, shapes, spec, affinity);
+    let speedup = eager / program_time_us(p, &task.graph, shapes, spec);
+    TaskOutcome {
+        task_id: task.id.clone(),
+        compiled: true,
+        correct,
+        speedup: if correct { speedup } else { 0.0 },
+    }
+}
+
+// ---------------------------------------------------------- w/o hier
+
+/// Table 6: derive the greedy plan (what Macro Thinking would do), then
+/// hand ALL of it to the LLM in a single prompt.
+fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
+                ti: u64) -> TaskOutcome {
+    let prof = effective_profile(micro, task.suite);
+    let shapes = crate::graph::infer_shapes(&task.graph);
+    let plan = greedy_plan(task, &shapes, spec, cfg.env.max_steps);
+    let mut rng = Rng::new(cfg.seed ^ (ti << 13) ^ 0x0441E4);
+    match single_pass_generate(&task.graph, &shapes, &prof, spec,
+                               &SinglePassMode::AllActionsAtOnce(plan),
+                               cfg.cuda, &mut rng) {
+        SinglePassOutcome::CompileError => TaskOutcome {
+            task_id: task.id.clone(),
+            compiled: false,
+            correct: false,
+            speedup: 0.0,
+        },
+        SinglePassOutcome::Generated(p) => {
+            score_program(&p, task, &shapes, spec, cfg, ti)
+        }
+    }
+}
+
+/// Greedy cost-model plan: repeatedly apply the valid action with the
+/// best one-step time improvement (>1%).
+fn greedy_plan(task: &Task, shapes: &[Vec<usize>], spec: &GpuSpec,
+               max_steps: usize) -> Vec<crate::transform::Action> {
+    let mut p = crate::kir::lower_naive(&task.graph);
+    let mut plan = Vec::new();
+    for _ in 0..max_steps {
+        match greedy_best_action(&p, task, shapes, spec) {
+            Some((a, next)) => {
+                plan.push(decode_action(a));
+                p = next;
+            }
+            None => break,
+        }
+    }
+    plan
+}
+
+/// Best one-step improvement, or None if nothing improves > 1%.
+fn greedy_best_action(p: &crate::kir::Program, task: &Task,
+                      shapes: &[Vec<usize>], spec: &GpuSpec)
+                      -> Option<(usize, crate::kir::Program)> {
+    greedy_best_action_excluding(p, task, shapes, spec, &Default::default())
+}
+
+/// Greedy selection skipping edges that already failed in this episode
+/// (the tree env is edge-deterministic: a failed micro-coding never
+/// succeeds on retry, and the paper's policy likewise learns to move on).
+pub fn greedy_best_action_excluding(
+    p: &crate::kir::Program, task: &Task, shapes: &[Vec<usize>],
+    spec: &GpuSpec, exclude: &std::collections::HashSet<usize>,
+) -> Option<(usize, crate::kir::Program)> {
+    let now = program_time_us(p, &task.graph, shapes, spec);
+    let mask = action_mask(p, &task.graph, shapes, spec);
+    let mut best: Option<(usize, crate::kir::Program, f64)> = None;
+    for a in 0..STOP_ACTION {
+        if !mask[a] || exclude.contains(&a) {
+            continue;
+        }
+        if let Ok(next) =
+            apply_action(p, &task.graph, shapes, &decode_action(a), spec, 1.0)
+        {
+            let t = program_time_us(&next, &task.graph, shapes, spec);
+            if t < now * 0.99
+                && best.as_ref().map_or(true, |(_, _, bt)| t < *bt)
+            {
+                best = Some((a, next, t));
+            }
+        }
+    }
+    best.map(|(a, next, _)| (a, next))
+}
+
+// ---------------------------------------------------------------- MTMC
+
+fn mtmc_all(macro_kind: &MacroKind, micro: ProfileId, tasks: &[Task],
+            spec: &GpuSpec, cfg: &EvalCfg) -> Vec<TaskOutcome> {
+    // The learned-policy path needs the (non-Sync) PJRT runtime: run it
+    // sequentially; all other macro kinds parallelise over tasks.
+    match macro_kind {
+        MacroKind::LearnedOrGreedy { params_path } => {
+            let loaded = params_path.as_ref().and_then(|pp| {
+                let arts = crate::paths::artifacts_dir();
+                match (load_params(pp), PjrtRuntime::load(&arts)) {
+                    (Ok(params), Ok(rt)) => Some((params, rt)),
+                    _ => None,
+                }
+            });
+            match loaded {
+                Some((params, rt)) => tasks
+                    .iter()
+                    .enumerate()
+                    .map(|(ti, task)| {
+                        let mut policy = PjrtPolicy::new(&rt, params.clone(), false);
+                        mtmc_task(&mut MacroRunner::ObsPolicy(&mut policy),
+                                  micro, task, spec, cfg, ti as u64)
+                    })
+                    .collect(),
+                None => par_map(tasks, cfg.threads, |ti, task| {
+                    mtmc_task(&mut MacroRunner::Greedy, micro, task, spec,
+                              cfg, ti as u64)
+                }),
+            }
+        }
+        MacroKind::GreedyLookahead => par_map(tasks, cfg.threads, |ti, task| {
+            mtmc_task(&mut MacroRunner::Greedy, micro, task, spec, cfg,
+                      ti as u64)
+        }),
+        MacroKind::Heuristic { label, mistake_rate } => {
+            par_map(tasks, cfg.threads, |ti, task| {
+                let mut p = HeuristicPolicy::new(label, *mistake_rate, 4);
+                mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), micro, task,
+                          spec, cfg, ti as u64)
+            })
+        }
+        MacroKind::Freeform { label, wildness, mistake_rate } => {
+            par_map(tasks, cfg.threads, |ti, task| {
+                let mut p = FreeformPolicy::new(label, *wildness, *mistake_rate);
+                mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut p), micro,
+                                 task, spec, cfg, ti as u64, 2.2)
+            })
+        }
+        MacroKind::Random => par_map(tasks, cfg.threads, |ti, task| {
+            let mut p = RandomPolicy;
+            mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), micro, task, spec,
+                      cfg, ti as u64)
+        }),
+        MacroKind::Scripted(plan) => par_map(tasks, cfg.threads, |ti, task| {
+            mtmc_task(&mut MacroRunner::Scripted(plan.clone()), micro, task,
+                      spec, cfg, ti as u64)
+        }),
+    }
+}
+
+enum MacroRunner<'a> {
+    Greedy,
+    ObsPolicy(&'a mut dyn Policy),
+    Scripted(Vec<crate::transform::Action>),
+}
+
+/// Run one MTMC episode on a task, then the final-assembly check.
+fn mtmc_task(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
+             spec: &GpuSpec, cfg: &EvalCfg, ti: u64) -> TaskOutcome {
+    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0)
+}
+
+/// `micro_err_mult` > 1 models macro proposals arriving *without* the
+/// action-space prompt template (paper Fig. 2: the action prompt carries
+/// curated examples per optimization type — freeform suggestions don't).
+fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
+                    spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
+                    micro_err_mult: f64) -> TaskOutcome {
+    let prof = effective_profile(micro, task.suite).scaled(micro_err_mult);
+    let mut env = OptimEnv::new(task, spec.clone(), prof.clone(),
+                                EnvConfig { cuda: cfg.cuda, ..cfg.env.clone() },
+                                cfg.seed ^ (ti << 21) ^ 0x47C0);
+    let mut rng = Rng::new(cfg.seed ^ (ti << 9) ^ 0x9097);
+    let mut scripted_idx = 0usize;
+    // failed edges at the *current* tree node (cleared when state moves)
+    let mut failed_here: std::collections::HashSet<usize> =
+        Default::default();
+    while !env.state.done {
+        let mask = env.mask();
+        let action = match runner {
+            MacroRunner::Greedy => {
+                match greedy_best_action_excluding(&env.state.program, task,
+                                                   &env.shapes, spec,
+                                                   &failed_here) {
+                    Some((a, _)) => a,
+                    None => STOP_ACTION,
+                }
+            }
+            MacroRunner::ObsPolicy(policy) => {
+                let obs = env.observe(&mask);
+                policy.act(&obs, &mask, &mut rng).action
+            }
+            MacroRunner::Scripted(plan) => {
+                let a = plan
+                    .get(scripted_idx)
+                    .map(crate::transform::encode_action)
+                    .unwrap_or(STOP_ACTION);
+                scripted_idx += 1;
+                a
+            }
+        };
+        // freeform proposals may be invalid: the env rejects them
+        let action = if action < mask.len() { action } else { STOP_ACTION };
+        let before = env.state.path_hash;
+        let _ = env.step(action);
+        if env.state.path_hash == before {
+            failed_here.insert(action); // step failed, don't retry the edge
+        } else {
+            failed_here.clear(); // new tree node
+        }
+    }
+    // final assembly: integrating the optimized kernels into the full
+    // runnable file — risk grows with graph size
+    let op_count = task.graph.op_count();
+    let mut asm_rng = Rng::new(cfg.seed ^ (ti << 5) ^ 0xA55E);
+    if asm_rng.bool(assembly_error_prob(&prof, op_count, task.suite)) {
+        // assembly failures are mostly call failures (~80%)
+        let compiled = asm_rng.bool(0.2);
+        return TaskOutcome {
+            task_id: task.id.clone(),
+            compiled,
+            correct: false,
+            speedup: 0.0,
+        };
+    }
+    let best = env.state.best_program.clone();
+    score_program(&best, task, &env.shapes, spec, cfg, ti)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::kernelbench_level;
+
+    fn small_suite() -> Vec<Task> {
+        kernelbench_level(2)[..10].to_vec()
+    }
+
+    #[test]
+    fn mtmc_greedy_beats_weak_baseline() {
+        let tasks = small_suite();
+        let spec = GpuSpec::a100();
+        let cfg = EvalCfg { threads: 4, ..Default::default() };
+        let mtmc = evaluate(
+            &Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro: ProfileId::GeminiPro25,
+            },
+            &tasks, &spec, &cfg,
+        );
+        let weak = evaluate(
+            &Method::Baseline { profile: ProfileId::Gpt4o },
+            &tasks, &spec, &cfg,
+        );
+        assert!(mtmc.metrics.exec_acc > weak.metrics.exec_acc + 0.2,
+                "mtmc {:?} weak {:?}", mtmc.metrics, weak.metrics);
+        assert!(mtmc.metrics.mean_speedup > weak.metrics.mean_speedup);
+    }
+
+    #[test]
+    fn mtmc_l2_is_fast_and_accurate() {
+        let tasks = small_suite();
+        let spec = GpuSpec::a100();
+        let cfg = EvalCfg { threads: 4, ..Default::default() };
+        let r = evaluate(
+            &Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro: ProfileId::GeminiPro25,
+            },
+            &tasks, &spec, &cfg,
+        );
+        // 10-task sample: allow a couple of assembly-risk losses
+        assert!(r.metrics.exec_acc >= 0.7, "{:?}", r.metrics);
+        assert!(r.metrics.mean_speedup > 0.9, "{:?}", r.metrics);
+    }
+
+    #[test]
+    fn evaluation_is_deterministic() {
+        let tasks = small_suite();
+        let spec = GpuSpec::v100();
+        let cfg = EvalCfg { threads: 2, ..Default::default() };
+        let m = Method::Baseline { profile: ProfileId::DeepSeekR1 };
+        let a = evaluate(&m, &tasks, &spec, &cfg);
+        let b = evaluate(&m, &tasks, &spec, &cfg);
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
+    fn tritonbench_harder_than_kernelbench() {
+        let kb = kernelbench_level(1)[..12].to_vec();
+        let tb: Vec<Task> = crate::tasks::tritonbench_g()[..12].to_vec();
+        let spec = GpuSpec::a100();
+        let cfg = EvalCfg { threads: 4, ..Default::default() };
+        let m = Method::Baseline { profile: ProfileId::GeminiPro25 };
+        let r_kb = evaluate(&m, &kb, &spec, &cfg);
+        let r_tb = evaluate(&m, &tb, &spec, &cfg);
+        assert!(r_tb.metrics.exec_acc < r_kb.metrics.exec_acc,
+                "kb {:?} tb {:?}", r_kb.metrics, r_tb.metrics);
+    }
+}

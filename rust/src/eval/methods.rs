@@ -1,0 +1,120 @@
+//! Method definitions: everything a table row can be.
+
+use crate::microcode::ProfileId;
+use crate::transform::Action;
+
+/// How Macro-Thinking decisions are made in an MTMC run.
+#[derive(Clone, Debug)]
+pub enum MacroKind {
+    /// The trained policy loaded from a parameter file (the real MTMC);
+    /// falls back to `GreedyLookahead` when no parameters are available
+    /// (documented in EXPERIMENTS.md — the greedy cost-model lookahead is
+    /// the objective the policy converges to).
+    LearnedOrGreedy { params_path: Option<std::path::PathBuf> },
+    /// One-step cost-model lookahead (converged-policy surrogate).
+    GreedyLookahead,
+    /// Prompted-LLM proposer within the action space (Table 7 w/o policy
+    /// w/ AS): preference ladder + mistake rate.
+    Heuristic { label: String, mistake_rate: f64 },
+    /// Unconstrained proposer (Table 7 w/o policy w/o AS).
+    Freeform { label: String, wildness: f64, mistake_rate: f64 },
+    /// Uniform random over valid actions.
+    Random,
+    /// A fixed plan (used by tests).
+    Scripted(Vec<Action>),
+}
+
+/// One evaluated method (a table row).
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// Single-pass whole-kernel generation by a baseline LLM profile.
+    Baseline { profile: ProfileId },
+    /// Full MTMC: stepwise macro-thinking + micro-coding.
+    Mtmc { macro_kind: MacroKind, micro: ProfileId },
+    /// Table 6 "w/o Hier": MTMC's plan handed to the LLM in one prompt.
+    MtmcNoHier { micro: ProfileId },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Baseline { profile } => {
+                crate::microcode::LlmProfile::get(*profile).name.to_string()
+            }
+            Method::Mtmc { micro, .. } => format!(
+                "{} + Ours",
+                crate::microcode::LlmProfile::get(*micro).name
+            ),
+            Method::MtmcNoHier { micro } => format!(
+                "{} w/o Hier",
+                crate::microcode::LlmProfile::get(*micro).name
+            ),
+        }
+    }
+}
+
+/// The Table 3 method roster (paper order): 10 general/code LLM + agent
+/// baselines, two finetuned kernel LLMs, then MTMC on Gemini 2.5 Pro and
+/// Flash micro-coders.
+pub fn table3_methods(params_path: Option<std::path::PathBuf>) -> Vec<Method> {
+    use ProfileId::*;
+    let mut v: Vec<Method> = [
+        Claude37Sonnet, Claude4Sonnet, O4Mini, Gpt4o, DeepSeekR1, DeepSeekV3,
+        LlamaNemotron, Qwen3, QwenCoder32B, GeminiCli, Kevin32B, KernelLlm,
+        GeminiPro25, GeminiFlash25,
+    ]
+    .into_iter()
+    .map(|p| Method::Baseline { profile: p })
+    .collect();
+    v.push(Method::Mtmc {
+        macro_kind: MacroKind::LearnedOrGreedy { params_path: params_path.clone() },
+        micro: GeminiPro25,
+    });
+    v.push(Method::Mtmc {
+        macro_kind: MacroKind::LearnedOrGreedy { params_path },
+        micro: GeminiFlash25,
+    });
+    v
+}
+
+/// The Table 4 roster (TritonBench on A100).
+pub fn table4_methods(params_path: Option<std::path::PathBuf>) -> Vec<Method> {
+    use ProfileId::*;
+    let mut v: Vec<Method> = [
+        GeminiPro25, Claude37Sonnet, Claude4Sonnet, O4Mini, Gpt4o,
+        DeepSeekR1, DeepSeekV3, QwenCoder32B, KernelLlm, GeminiFlash25,
+    ]
+    .into_iter()
+    .map(|p| Method::Baseline { profile: p })
+    .collect();
+    v.push(Method::Mtmc {
+        macro_kind: MacroKind::LearnedOrGreedy { params_path },
+        micro: GeminiFlash25,
+    });
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rosters_sized_like_paper() {
+        assert_eq!(table3_methods(None).len(), 16);
+        assert_eq!(table4_methods(None).len(), 11);
+    }
+
+    #[test]
+    fn labels_readable() {
+        assert_eq!(
+            Method::Baseline { profile: ProfileId::Kevin32B }.label(),
+            "Kevin-32B"
+        );
+        assert!(Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiPro25
+        }
+        .label()
+        .contains("+ Ours"));
+    }
+}

@@ -1,0 +1,96 @@
+//! The paper's metrics (§5.1): Call Accuracy, Execute Accuracy, fast_p,
+//! Mean Speedup.
+
+/// Per-suite aggregated metrics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    /// Fraction that compiled and ran ("Call Accuracy", TritonBench).
+    pub call_acc: f64,
+    /// Fraction that produced correct results ("Execute Accuracy").
+    pub exec_acc: f64,
+    /// fast_1: correct AND speedup > 1 over eager.
+    pub fast1: f64,
+    /// fast_2: correct AND speedup > 2.
+    pub fast2: f64,
+    /// Arithmetic mean of speedups (incorrect kernels contribute 0).
+    pub mean_speedup: f64,
+    pub n_tasks: usize,
+}
+
+/// One task's outcome for one method.
+#[derive(Clone, Debug)]
+pub struct TaskOutcome {
+    pub task_id: String,
+    pub compiled: bool,
+    pub correct: bool,
+    /// Speedup vs eager of the produced kernel (whatever it computes);
+    /// metric aggregation zeroes it when incorrect.
+    pub speedup: f64,
+}
+
+/// Aggregate per-task outcomes (Eq. 3-4 of the paper).
+pub fn aggregate(outcomes: &[TaskOutcome]) -> Metrics {
+    let n = outcomes.len().max(1) as f64;
+    let call = outcomes.iter().filter(|o| o.compiled).count() as f64;
+    let exec = outcomes.iter().filter(|o| o.correct).count() as f64;
+    let fast1 = outcomes
+        .iter()
+        .filter(|o| o.correct && o.speedup > 1.0)
+        .count() as f64;
+    let fast2 = outcomes
+        .iter()
+        .filter(|o| o.correct && o.speedup > 2.0)
+        .count() as f64;
+    let mean_speedup = outcomes
+        .iter()
+        .map(|o| if o.correct { o.speedup } else { 0.0 })
+        .sum::<f64>()
+        / n;
+    Metrics {
+        call_acc: call / n,
+        exec_acc: exec / n,
+        fast1: fast1 / n,
+        fast2: fast2 / n,
+        mean_speedup,
+        n_tasks: outcomes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o(compiled: bool, correct: bool, speedup: f64) -> TaskOutcome {
+        TaskOutcome { task_id: "t".into(), compiled, correct, speedup }
+    }
+
+    #[test]
+    fn aggregation_matches_paper_formulas() {
+        let outcomes = vec![
+            o(true, true, 2.5),   // fast1+fast2
+            o(true, true, 1.2),   // fast1
+            o(true, false, 9.0),  // wrong: speedup zeroed
+            o(false, false, 0.0), // compile fail
+        ];
+        let m = aggregate(&outcomes);
+        assert_eq!(m.call_acc, 0.75);
+        assert_eq!(m.exec_acc, 0.5);
+        assert_eq!(m.fast1, 0.5);
+        assert_eq!(m.fast2, 0.25);
+        assert!((m.mean_speedup - (2.5 + 1.2) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let m = aggregate(&[]);
+        assert_eq!(m.exec_acc, 0.0);
+        assert_eq!(m.mean_speedup, 0.0);
+    }
+
+    #[test]
+    fn incorrect_fast_kernels_do_not_count() {
+        let m = aggregate(&[o(true, false, 5.0)]);
+        assert_eq!(m.fast1, 0.0);
+        assert_eq!(m.mean_speedup, 0.0);
+    }
+}

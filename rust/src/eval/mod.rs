@@ -1,0 +1,12 @@
+//! Benchmark evaluation harness: runs every method (baseline LLM
+//! profiles, MTMC variants, ablations) over the task suites and computes
+//! the paper's metrics (execute/call accuracy, fast_1/fast_2, mean
+//! speedup vs PyTorch Eager).
+
+mod metrics;
+mod methods;
+mod harness;
+
+pub use harness::{evaluate, EvalCfg, SuiteResult, TaskResult};
+pub use methods::{table3_methods, table4_methods, MacroKind, Method};
+pub use metrics::{aggregate, Metrics};

@@ -1,0 +1,461 @@
+//! The analytic kernel cost model.
+//!
+//! For each fused kernel we derive (1) FLOPs, (2) HBM traffic as a
+//! function of the schedule (fusion kills intermediate round-trips,
+//! tiling multiplies operand reuse, loop order sets the coalescing
+//! efficiency, online/tiled reductions collapse multi-pass streams), and
+//! (3) occupancy from the shared-memory footprint. Time is the classic
+//! overlap-aware roofline:
+//!
+//! ```text
+//! t = max(t_comp, t_mem) + (1 - overlap) * min(t_comp, t_mem) + launch
+//! ```
+//!
+//! Calibration constants (naive effective cache tile, efficiency ladders)
+//! are documented inline; they were tuned so that the *relative* behaviour
+//! matches the paper's evaluation shape (naive generated kernels ~0.1-0.5x
+//! of PyTorch Eager; well-scheduled fused kernels up to ~2x; see
+//! EXPERIMENTS.md).
+
+use super::spec::GpuSpec;
+use crate::graph::{Graph, NodeId, Op, OpClass};
+use crate::kir::{Kernel, LoopOrder, Program};
+
+/// Detailed costing of one kernel (used by perf reports and tests).
+#[derive(Clone, Debug, Default)]
+pub struct CostBreakdown {
+    pub flops: f64,
+    pub hbm_bytes: f64,
+    pub t_comp_us: f64,
+    pub t_mem_us: f64,
+    pub overlap: f64,
+    pub occupancy: f64,
+    pub compute_eff: f64,
+    pub mem_eff: f64,
+    pub time_us: f64,
+}
+
+fn numel(s: &[usize]) -> f64 {
+    s.iter().product::<usize>() as f64
+}
+
+/// FLOPs of one node.
+pub fn op_flops(g: &Graph, shapes: &[Vec<usize>], id: NodeId) -> f64 {
+    let node = &g.nodes[id];
+    let out = numel(&shapes[id]);
+    match &node.op {
+        Op::Input => 0.0,
+        Op::MatMul => {
+            let a = &shapes[node.inputs[0]];
+            2.0 * a[0] as f64 * a[1] as f64 * shapes[id][1] as f64
+        }
+        Op::BatchMatMul => {
+            let a = &shapes[node.inputs[0]];
+            2.0 * a[0] as f64 * a[1] as f64 * a[2] as f64 * shapes[id][2] as f64
+        }
+        Op::Conv2d { .. } => {
+            let w = &shapes[node.inputs[1]];
+            // 2 * N * F * OH * OW * C * KH * KW
+            2.0 * out * w[1] as f64 * w[2] as f64 * w[3] as f64
+        }
+        Op::Attention => {
+            let q = &shapes[node.inputs[0]];
+            let k = &shapes[node.inputs[1]];
+            let (s_q, d) = (q[0] as f64, q[1] as f64);
+            let s_k = k[0] as f64;
+            2.0 * s_q * s_k * d * 2.0 + 5.0 * s_q * s_k
+        }
+        Op::LstmCell => {
+            let x = &shapes[node.inputs[0]];
+            let h = &shapes[node.inputs[1]];
+            2.0 * x[0] as f64 * (x[1] + h[1]) as f64 * 4.0 * h[1] as f64
+        }
+        Op::Gelu => 10.0 * out,
+        Op::Sigmoid | Op::Tanh | Op::Exp | Op::Sqrt => 4.0 * out,
+        Op::Softmax => 5.0 * numel(&shapes[node.inputs[0]]),
+        Op::LayerNorm => 8.0 * out,
+        Op::BatchNorm2d => 4.0 * out,
+        Op::MaxPool2d { k, .. } => (k * k) as f64 * out,
+        Op::GlobalAvgPool => numel(&shapes[node.inputs[0]]),
+        _ => out, // add/sub/mul/div/max/bias/relu/scale/reduce/argmax/cumsum/transpose
+    }
+}
+
+/// External input node ids of a kernel (tensors read from HBM) and output
+/// node ids (tensors written to HBM).
+fn kernel_io(kernel: &Kernel, g: &Graph) -> (Vec<NodeId>, Vec<NodeId>) {
+    let in_group = |n: NodeId| kernel.nodes.contains(&n);
+    let mut ext_in: Vec<NodeId> = Vec::new();
+    for &n in &kernel.nodes {
+        for &i in &g.nodes[n].inputs {
+            if !in_group(i) && !ext_in.contains(&i) {
+                ext_in.push(i);
+            }
+        }
+    }
+    let consumers = g.consumers();
+    let mut outs: Vec<NodeId> = Vec::new();
+    for &n in &kernel.nodes {
+        let escapes = consumers[n].iter().any(|&c| !in_group(c))
+            || g.outputs.contains(&n);
+        if escapes {
+            outs.push(n);
+        }
+    }
+    (ext_in, outs)
+}
+
+/// Effective reuse-tile when the kernel is *not* explicitly tiled: what
+/// the cache hierarchy grants a naive kernel. Larger L2 -> more free
+/// reuse (calibration constants; Table 2's L2 column is 6/40/50 MB).
+fn naive_reuse_tile(spec: &GpuSpec) -> f64 {
+    match spec.l2_mb {
+        0..=8 => 16.0,   // Volta-class
+        9..=44 => 24.0,  // Ampere-class
+        _ => 28.0,       // Hopper-class
+    }
+}
+
+/// HBM traffic (bytes) of one kernel under its schedule.
+fn kernel_traffic(kernel: &Kernel, g: &Graph, shapes: &[Vec<usize>],
+                  spec: &GpuSpec) -> f64 {
+    let (ext_in, outs) = kernel_io(kernel, g);
+    let anchor = kernel.anchor(g);
+    let anchor_node = &g.nodes[anchor];
+    let sched = &kernel.schedule;
+    let mut bytes = 0.0;
+
+    // operand streams
+    for &i in &ext_in {
+        let n = numel(&shapes[i]) * 4.0;
+        let is_contraction_operand = anchor_node.inputs.contains(&i)
+            && anchor_node.op.class() == OpClass::Contraction;
+        if is_contraction_operand {
+            // reuse model: each operand is re-streamed once per tile of
+            // the opposing parallel dimension
+            let (reuse_m, reuse_n) = match sched.block_tile {
+                Some((tm, tn, _)) => (tm as f64, tn as f64),
+                None => (naive_reuse_tile(spec), naive_reuse_tile(spec)),
+            };
+            let passes = match &anchor_node.op {
+                Op::MatMul | Op::BatchMatMul | Op::LstmCell => {
+                    // A re-read N/Tn times, B re-read M/Tm times
+                    let a_id = anchor_node.inputs[0];
+                    let out_shape = &shapes[anchor];
+                    if i == a_id {
+                        (out_shape[out_shape.len() - 1] as f64 / reuse_n).max(1.0)
+                    } else {
+                        (out_shape[out_shape.len() - 2] as f64 / reuse_m).max(1.0)
+                    }
+                }
+                Op::Conv2d { .. } => {
+                    // weights re-read per output tile; activations re-read
+                    // per filter tile — symmetric approximation
+                    let f = shapes[anchor][1] as f64;
+                    let x_id = anchor_node.inputs[0];
+                    if i == x_id {
+                        (f / reuse_m).max(1.0)
+                    } else {
+                        let spatial = (shapes[anchor][0] * shapes[anchor][2]
+                            * shapes[anchor][3]) as f64;
+                        (spatial / (reuse_m * reuse_n)).max(1.0).min(64.0)
+                    }
+                }
+                Op::Attention => {
+                    // K/V re-streamed per query tile
+                    let s_q = shapes[anchor_node.inputs[0]][0] as f64;
+                    if i == anchor_node.inputs[0] {
+                        1.0
+                    } else {
+                        (s_q / reuse_m).max(1.0)
+                    }
+                }
+                _ => 1.0,
+            };
+            bytes += n * passes;
+        } else {
+            bytes += n;
+        }
+    }
+
+    // intra-kernel multi-pass penalty for reductions/normalisations that
+    // are not tiled (naive softmax/layernorm re-reads its input per pass;
+    // a block-tiled version is single-pass "online")
+    for &n in &kernel.nodes {
+        let cls = g.nodes[n].op.class();
+        if cls == OpClass::Reduction && sched.block_tile.is_none() {
+            let extra_passes = match g.nodes[n].op {
+                Op::Softmax => 2.0,    // max pass + sum pass re-reads
+                Op::LayerNorm => 2.0,  // mean + var passes
+                Op::BatchNorm2d => 0.5,
+                _ => 0.5,
+            };
+            bytes += numel(&shapes[g.nodes[n].inputs[0]]) * 4.0 * extra_passes;
+        }
+    }
+
+    // attention without tiling materializes the S×S score/prob matrices
+    if matches!(anchor_node.op, Op::Attention) && sched.block_tile.is_none() {
+        let s_q = shapes[anchor_node.inputs[0]][0] as f64;
+        let s_k = shapes[anchor_node.inputs[1]][0] as f64;
+        bytes += s_q * s_k * 4.0 * 3.0; // write scores, read, write probs
+    }
+
+    // output stores
+    for &o in &outs {
+        bytes += numel(&shapes[o]) * 4.0;
+    }
+    bytes
+}
+
+/// Occupancy in (0, 1]: how much of the machine the schedule can fill.
+fn occupancy(kernel: &Kernel, spec: &GpuSpec) -> f64 {
+    match kernel.schedule.block_tile {
+        None => 0.6, // plenty of tiny blocks, but poorly shaped
+        Some(_) => {
+            let smem = kernel.schedule.smem_bytes() as f64;
+            if smem <= 0.0 {
+                return 0.6;
+            }
+            // GEMM-class kernels tolerate low block-residency well (ILP
+            // from register tiles); only a non-fitting schedule craters.
+            match (spec.smem_bytes() as f64 / smem).floor() as usize {
+                0 => 0.15, // does not fit: spills, serialisation
+                1 => 0.55,
+                2 => 0.80,
+                3 => 0.90,
+                _ => 1.0,
+            }
+        }
+    }
+}
+
+/// Compute-efficiency ladder: fraction of peak FLOPs the schedule's inner
+/// loop can sustain.
+fn compute_eff(kernel: &Kernel) -> f64 {
+    let s = &kernel.schedule;
+    let mut eff: f64 = 0.12; // naive scalar inner loop
+    if let Some((tm, tn, _)) = s.block_tile {
+        eff = 0.45;
+        if tm % 64 == 0 && tn % 64 == 0 {
+            eff += 0.10; // MXU/tensor-core-aligned macro tile
+        }
+    }
+    if s.reg_tile.is_some() {
+        eff += 0.25; // register blocking: the big ILP win
+    }
+    if s.vector_width >= 4 {
+        eff += 0.05;
+    }
+    eff.min(0.92)
+}
+
+/// Memory-efficiency: fraction of peak bandwidth the access pattern
+/// sustains.
+fn mem_eff(kernel: &Kernel) -> f64 {
+    let s = &kernel.schedule;
+    let mut eff: f64 = match s.loop_order {
+        LoopOrder::Naive => 0.35,
+        LoopOrder::Blocked => 0.75,
+        LoopOrder::Coalesced => 0.90,
+    };
+    if s.vector_width >= 4 {
+        eff += 0.08;
+    } else if s.vector_width == 2 {
+        eff += 0.04;
+    }
+    eff.min(0.98)
+}
+
+/// Comp/mem overlap from pipelining.
+fn overlap(kernel: &Kernel) -> f64 {
+    match kernel.schedule.pipeline_depth {
+        0 | 1 => 0.15,
+        2 => 0.55,
+        3 => 0.85,
+        _ => 0.88,
+    }
+}
+
+/// Price one kernel.
+pub fn kernel_time_us(kernel: &Kernel, g: &Graph, shapes: &[Vec<usize>],
+                      spec: &GpuSpec) -> CostBreakdown {
+    let flops: f64 = kernel.nodes.iter().map(|&n| op_flops(g, shapes, n)).sum();
+    let bytes = kernel_traffic(kernel, g, shapes, spec);
+    let occ = occupancy(kernel, spec);
+    let ce = compute_eff(kernel);
+    let me = mem_eff(kernel);
+    let ov = overlap(kernel);
+
+    // L2-resident bonus: small working sets stream from L2, not HBM
+    let l2_bytes = spec.l2_mb as f64 * 1e6;
+    let bw_mult = if bytes < l2_bytes * 0.5 { 1.8 } else { 1.0 };
+
+    let t_comp = flops / (spec.peak_flops() * ce * (0.5 + 0.5 * occ)) * 1e6;
+    let t_mem = bytes / (spec.peak_bw() * me * bw_mult * (0.6 + 0.4 * occ)) * 1e6;
+    let time = t_comp.max(t_mem) + (1.0 - ov) * t_comp.min(t_mem)
+        + spec.launch_overhead_us;
+    CostBreakdown {
+        flops,
+        hbm_bytes: bytes,
+        t_comp_us: t_comp,
+        t_mem_us: t_mem,
+        overlap: ov,
+        occupancy: occ,
+        compute_eff: ce,
+        mem_eff: me,
+        time_us: time,
+    }
+}
+
+/// Price a whole program (kernels execute back-to-back).
+pub fn program_time_us(p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                       spec: &GpuSpec) -> f64 {
+    p.kernels
+        .iter()
+        .map(|k| kernel_time_us(k, g, shapes, spec).time_us)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, Graph};
+    use crate::kir::{lower_naive, Schedule};
+
+    fn matmul_graph(m: usize, k: usize, n: usize) -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("mm");
+        let x = g.input("x", &[m, k]);
+        let w = g.weight("w", &[k, n]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(mm);
+        let shapes = infer_shapes(&g);
+        (g, shapes)
+    }
+
+    fn tiled(p: &Program, tile: (usize, usize, usize)) -> Program {
+        let mut p = p.clone();
+        p.kernels[0].schedule = Schedule {
+            block_tile: Some(tile),
+            reg_tile: Some((8, 8)),
+            pipeline_depth: 2,
+            loop_order: LoopOrder::Blocked,
+            vector_width: 4,
+        };
+        p
+    }
+
+    #[test]
+    fn tiling_cuts_traffic_and_time() {
+        let (g, shapes) = matmul_graph(4096, 4096, 4096);
+        let spec = GpuSpec::a100();
+        let naive = lower_naive(&g);
+        let opt = tiled(&naive, (128, 128, 32));
+        let c_naive = kernel_time_us(&naive.kernels[0], &g, &shapes, &spec);
+        let c_opt = kernel_time_us(&opt.kernels[0], &g, &shapes, &spec);
+        assert!(c_opt.hbm_bytes < c_naive.hbm_bytes / 3.0);
+        assert!(
+            c_opt.time_us < c_naive.time_us / 4.0,
+            "opt {:.0}us vs naive {:.0}us",
+            c_opt.time_us,
+            c_naive.time_us
+        );
+    }
+
+    #[test]
+    fn optimized_matmul_near_roofline() {
+        let (g, shapes) = matmul_graph(4096, 4096, 4096);
+        let spec = GpuSpec::a100();
+        let opt = tiled(&lower_naive(&g), (128, 128, 32));
+        let c = kernel_time_us(&opt.kernels[0], &g, &shapes, &spec);
+        let roofline_us = c.flops / spec.peak_flops() * 1e6;
+        let ratio = roofline_us / c.time_us;
+        assert!(
+            ratio > 0.5 && ratio <= 1.0,
+            "achieved/roofline {ratio:.2} out of band"
+        );
+    }
+
+    #[test]
+    fn fusion_removes_intermediate_traffic() {
+        let mut g = Graph::new("f");
+        let x = g.input("x", &[2048, 2048]);
+        let y = g.input("y", &[2048, 2048]);
+        let a = g.op(Op::Add, &[x, y]);
+        let r = g.op(Op::Relu, &[a]);
+        g.mark_output(r);
+        let shapes = infer_shapes(&g);
+        let spec = GpuSpec::a100();
+        let unfused = lower_naive(&g);
+        let mut fused = unfused.clone();
+        let k2 = fused.kernels.remove(1);
+        fused.kernels[0].nodes.extend(k2.nodes);
+        let t_un = program_time_us(&unfused, &g, &shapes, &spec);
+        let t_fu = program_time_us(&fused, &g, &shapes, &spec);
+        assert!(t_fu < t_un * 0.75, "fused {t_fu:.1} vs unfused {t_un:.1}");
+    }
+
+    #[test]
+    fn faster_gpu_is_faster() {
+        let (g, shapes) = matmul_graph(2048, 2048, 2048);
+        let opt = tiled(&lower_naive(&g), (128, 128, 32));
+        let tv = kernel_time_us(&opt.kernels[0], &g, &shapes, &GpuSpec::v100()).time_us;
+        let ta = kernel_time_us(&opt.kernels[0], &g, &shapes, &GpuSpec::a100()).time_us;
+        let th = kernel_time_us(&opt.kernels[0], &g, &shapes, &GpuSpec::h100()).time_us;
+        assert!(th < ta && ta < tv, "V100 {tv:.0} A100 {ta:.0} H100 {th:.0}");
+    }
+
+    #[test]
+    fn pipeline_improves_overlap_bound_time() {
+        let (g, shapes) = matmul_graph(4096, 1024, 4096);
+        let spec = GpuSpec::h100();
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule = Schedule {
+            block_tile: Some((128, 128, 32)),
+            reg_tile: Some((8, 8)),
+            pipeline_depth: 1,
+            loop_order: LoopOrder::Blocked,
+            vector_width: 4,
+        };
+        let t1 = kernel_time_us(&p.kernels[0], &g, &shapes, &spec).time_us;
+        p.kernels[0].schedule.pipeline_depth = 3;
+        let t3 = kernel_time_us(&p.kernels[0], &g, &shapes, &spec).time_us;
+        assert!(t3 < t1, "pipelined {t3:.1} vs unpipelined {t1:.1}");
+    }
+
+    #[test]
+    fn untiled_attention_pays_for_score_matrix() {
+        let mut g = Graph::new("att");
+        let q = g.input("q", &[4096, 128]);
+        let k = g.input("k", &[4096, 128]);
+        let v = g.input("v", &[4096, 128]);
+        let a = g.op(Op::Attention, &[q, k, v]);
+        g.mark_output(a);
+        let shapes = infer_shapes(&g);
+        let spec = GpuSpec::a100();
+        let naive = lower_naive(&g);
+        let c_naive = kernel_time_us(&naive.kernels[0], &g, &shapes, &spec);
+        let mut flash = naive.clone();
+        flash.kernels[0].schedule = Schedule {
+            block_tile: Some((128, 128, 64)),
+            reg_tile: Some((8, 8)),
+            pipeline_depth: 2,
+            loop_order: LoopOrder::Blocked,
+            vector_width: 4,
+        };
+        let c_flash = kernel_time_us(&flash.kernels[0], &g, &shapes, &spec);
+        assert!(c_flash.hbm_bytes < c_naive.hbm_bytes / 4.0);
+        assert!(c_flash.time_us < c_naive.time_us / 2.0);
+    }
+
+    #[test]
+    fn occupancy_penalises_oversized_smem() {
+        let (g, _shapes) = matmul_graph(1024, 1024, 1024);
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.block_tile = Some((256, 256, 64));
+        p.kernels[0].schedule.pipeline_depth = 2;
+        // (256*64 + 64*256)*4*2 = 256KB > V100's 96KB; occupancy floor
+        let occ = occupancy(&p.kernels[0], &GpuSpec::v100());
+        assert!(occ <= 0.25);
+    }
+}

@@ -1,0 +1,158 @@
+//! "PyTorch Eager" baseline pricing: one expert-library kernel per op.
+//!
+//! Library kernels are individually excellent (high efficiency ladder)
+//! but (a) pay a launch per op, (b) round-trip every intermediate through
+//! HBM, and (c) lose efficiency on shapes the library wasn't tuned for —
+//! the `affinity` factor, drawn deterministically per task, models the
+//! cuBLAS/cuDNN heuristic-table mismatch that lets generated kernels beat
+//! Eager on some tasks (the paper's fast_1 wins).
+
+use super::cost::op_flops;
+use super::spec::GpuSpec;
+use crate::graph::{Graph, Op, OpClass};
+
+fn numel(s: &[usize]) -> f64 {
+    s.iter().product::<usize>() as f64
+}
+
+/// Deterministic per-task library-affinity in [0.42, 1.0] from a stable
+/// hash of the task id (how well the library's tuning tables match the
+/// task's shapes). Above ~0.85 the shapes also hit the tensor-core (TF32)
+/// fast paths — see `eager_time_us`.
+pub fn library_affinity(task_id: &str) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in task_id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    0.42 + 0.58 * ((h >> 16) & 0xffff) as f64 / 65535.0
+}
+
+/// Shapes in the library's sweet spot additionally dispatch to
+/// tensor-core-accelerated (TF32) kernels — the reason generated f32
+/// Triton cannot beat cuBLAS on well-tuned shapes (paper: fast_1 at L1 is
+/// ~43-67%, not ~100%).
+fn tensor_core_bonus(affinity: f64) -> f64 {
+    if affinity > 0.85 { 1.5 } else { 1.0 }
+}
+
+/// Price the eager execution of a graph: every non-input node is its own
+/// library kernel.
+pub fn eager_time_us(g: &Graph, shapes: &[Vec<usize>], spec: &GpuSpec,
+                     affinity: f64) -> f64 {
+    let mut total = 0.0;
+    for (id, node) in g.nodes.iter().enumerate() {
+        if matches!(node.op, Op::Input) {
+            continue;
+        }
+        let flops = op_flops(g, shapes, id);
+        // library kernels stream inputs once and write the output once
+        let mut bytes = numel(&shapes[id]) * 4.0;
+        for &i in &node.inputs {
+            bytes += numel(&shapes[i]) * 4.0;
+        }
+        // eager attention also materializes scores (it is not flash
+        // unless the user opted into SDPA fused path; KernelBench's
+        // reference modules are the naive formulation)
+        if matches!(node.op, Op::Attention) {
+            let s_q = shapes[node.inputs[0]][0] as f64;
+            let s_k = shapes[node.inputs[1]][0] as f64;
+            bytes += s_q * s_k * 4.0 * 3.0;
+        }
+        let (ce, me) = match node.op.class() {
+            // cuBLAS/cuDNN-grade contraction (+TF32 on sweet-spot shapes)
+            OpClass::Contraction => {
+                (0.70 * affinity * tensor_core_bonus(affinity), 0.85)
+            }
+            OpClass::Reduction => (0.5, 0.82 * (0.72 + 0.28 * affinity)),
+            OpClass::Elementwise => (0.5, 0.88 * (0.75 + 0.25 * affinity)),
+            OpClass::Movement => (0.5, 0.80),
+            OpClass::Input => unreachable!(),
+        };
+        let l2_bytes = spec.l2_mb as f64 * 1e6;
+        let bw_mult = if bytes < l2_bytes * 0.5 { 1.8 } else { 1.0 };
+        let t_comp = flops / (spec.peak_flops() * ce) * 1e6;
+        let t_mem = bytes / (spec.peak_bw() * me * bw_mult) * 1e6;
+        // library kernels overlap copy/compute well (0.7)
+        total += t_comp.max(t_mem) + 0.3 * t_comp.min(t_mem)
+            + spec.launch_overhead_us;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use crate::kir::{lower_naive, LoopOrder, Schedule};
+
+    #[test]
+    fn affinity_deterministic_and_bounded() {
+        let a = library_affinity("kb1_000_matmul");
+        assert_eq!(a, library_affinity("kb1_000_matmul"));
+        assert!((0.55..=1.0).contains(&a));
+        assert_ne!(a, library_affinity("kb1_001_matmul"));
+    }
+
+    #[test]
+    fn eager_beats_naive_but_loses_to_optimized_gemm() {
+        let mut g = Graph::new("mm");
+        let x = g.input("x", &[4096, 4096]);
+        let w = g.weight("w", &[4096, 4096]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(mm);
+        let shapes = infer_shapes(&g);
+        let spec = GpuSpec::a100();
+        let eager = eager_time_us(&g, &shapes, &spec, 0.8);
+
+        let naive = lower_naive(&g);
+        let t_naive = super::super::program_time_us(&naive, &g, &shapes, &spec);
+        assert!(t_naive > eager * 2.0, "naive {t_naive:.0} vs eager {eager:.0}");
+
+        let mut opt = naive.clone();
+        opt.kernels[0].schedule = Schedule {
+            block_tile: Some((128, 128, 32)),
+            reg_tile: Some((8, 8)),
+            pipeline_depth: 3,
+            loop_order: LoopOrder::Blocked,
+            vector_width: 4,
+        };
+        let t_opt = super::super::program_time_us(&opt, &g, &shapes, &spec);
+        assert!(t_opt < eager, "opt {t_opt:.0} vs eager {eager:.0}");
+    }
+
+    #[test]
+    fn eager_pays_per_op_launches_on_fused_workloads() {
+        // a chain of elementwise ops: eager must launch each; a single
+        // fused generated kernel with good order wins
+        let mut g = Graph::new("chain");
+        let mut cur = g.input("x", &[4096, 1024]);
+        for _ in 0..6 {
+            cur = g.op(Op::Relu, &[cur]);
+            let y = g.input(&format!("y{cur}"), &[4096, 1024]);
+            cur = g.op(Op::Add, &[cur, y]);
+        }
+        g.mark_output(cur);
+        let shapes = infer_shapes(&g);
+        let spec = GpuSpec::a100();
+        let eager = eager_time_us(&g, &shapes, &spec, 1.0);
+        let mut fused = lower_naive(&g);
+        let all_nodes: Vec<_> = fused.kernels.iter().flat_map(|k| k.nodes.clone()).collect();
+        fused.kernels = vec![crate::kir::Kernel {
+            nodes: all_nodes,
+            schedule: Schedule {
+                block_tile: None,
+                reg_tile: None,
+                pipeline_depth: 1,
+                loop_order: LoopOrder::Coalesced,
+                vector_width: 4,
+            },
+            name: "fused".into(),
+        }];
+        let t_fused = super::super::program_time_us(&fused, &g, &shapes, &spec);
+        assert!(
+            t_fused < eager * 0.6,
+            "fused {t_fused:.0} vs eager {eager:.0}"
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Analytic GPU simulator: prices a scheduled [`Program`](crate::kir::Program)
+//! on a concrete GPU spec (Table 2 of the paper) and prices the
+//! "PyTorch Eager" expert-library baseline the benchmarks compare against.
+//!
+//! This is the substitution for the paper's physical V100/A100/H100
+//! testbeds (DESIGN.md): a roofline × occupancy × pipeline-overlap ×
+//! coalescing model that is monotone in exactly the axes the semantic
+//! optimization actions manipulate.
+
+mod spec;
+mod cost;
+mod eager;
+
+pub use cost::{kernel_time_us, op_flops, program_time_us, CostBreakdown};
+pub use eager::{eager_time_us, library_affinity};
+pub use spec::{GpuArch, GpuSpec};

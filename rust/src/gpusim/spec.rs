@@ -1,0 +1,133 @@
+//! GPU hardware specs — the exact Table 2 of the paper.
+
+/// Architecture generation (drives feature gates like cp.async).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuArch {
+    Volta,
+    Ampere,
+    Hopper,
+}
+
+/// One GPU platform (paper Table 2 numbers).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub arch: GpuArch,
+    pub sms: usize,
+    pub global_mem_gb: usize,
+    pub smem_per_sm_kb: usize,
+    pub l2_mb: usize,
+    pub mem_bw_gbs: f64,
+    pub fp32_tflops: f64,
+    /// Per-kernel launch overhead (µs) — CPU dispatch + driver; the same
+    /// order on all three platforms but slightly lower on newer parts.
+    pub launch_overhead_us: f64,
+}
+
+impl GpuSpec {
+    pub fn v100() -> GpuSpec {
+        GpuSpec {
+            name: "V100",
+            arch: GpuArch::Volta,
+            sms: 80,
+            global_mem_gb: 32,
+            smem_per_sm_kb: 96,
+            l2_mb: 6,
+            mem_bw_gbs: 900.0,
+            fp32_tflops: 15.7,
+            launch_overhead_us: 6.0,
+        }
+    }
+
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "A100",
+            arch: GpuArch::Ampere,
+            sms: 108,
+            global_mem_gb: 80,
+            smem_per_sm_kb: 164,
+            l2_mb: 40,
+            mem_bw_gbs: 1935.0,
+            fp32_tflops: 19.5,
+            launch_overhead_us: 5.0,
+        }
+    }
+
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            name: "H100",
+            arch: GpuArch::Hopper,
+            sms: 132,
+            global_mem_gb: 80,
+            smem_per_sm_kb: 228,
+            l2_mb: 50,
+            mem_bw_gbs: 3350.0,
+            fp32_tflops: 60.0,
+            launch_overhead_us: 4.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_uppercase().as_str() {
+            "V100" => Some(Self::v100()),
+            "A100" => Some(Self::a100()),
+            "H100" => Some(Self::h100()),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> Vec<GpuSpec> {
+        vec![Self::v100(), Self::a100(), Self::h100()]
+    }
+
+    /// cp.async-style deep pipelining exists on Ampere+ only; on Volta the
+    /// PipelineAsync action is architecturally invalid (the policy must
+    /// learn this — the paper's cross-hardware generalisation story).
+    pub fn supports_async_copy(&self) -> bool {
+        !matches!(self.arch, GpuArch::Volta)
+    }
+
+    /// Peak FLOP/s (f64).
+    pub fn peak_flops(&self) -> f64 {
+        self.fp32_tflops * 1e12
+    }
+
+    /// Peak bytes/s.
+    pub fn peak_bw(&self) -> f64 {
+        self.mem_bw_gbs * 1e9
+    }
+
+    /// Shared memory per SM in bytes.
+    pub fn smem_bytes(&self) -> usize {
+        self.smem_per_sm_kb * 1024
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let v = GpuSpec::v100();
+        assert_eq!((v.sms, v.smem_per_sm_kb, v.l2_mb), (80, 96, 6));
+        let a = GpuSpec::a100();
+        assert_eq!((a.sms, a.smem_per_sm_kb, a.l2_mb), (108, 164, 40));
+        let h = GpuSpec::h100();
+        assert_eq!((h.sms, h.smem_per_sm_kb, h.l2_mb), (132, 228, 50));
+        assert_eq!(h.fp32_tflops, 60.0);
+    }
+
+    #[test]
+    fn async_copy_gate() {
+        assert!(!GpuSpec::v100().supports_async_copy());
+        assert!(GpuSpec::a100().supports_async_copy());
+        assert!(GpuSpec::h100().supports_async_copy());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("a100").unwrap().name, "A100");
+        assert!(GpuSpec::by_name("B200").is_none());
+    }
+}

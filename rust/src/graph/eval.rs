@@ -1,0 +1,255 @@
+//! Reference executor ("PyTorch Eager" semantics) and the mutation-aware
+//! executor used to *measure* the correctness of micro-coded kernels.
+//!
+//! The micro-coding competence model (microcode::mutation) does not flip a
+//! "wrong" bit — it injects a concrete, executable semantic bug (boundary
+//! mishandling, missing-sync corruption, off-by-one, dropped epilogue) at a
+//! specific node. The eval harness then runs both executors on random
+//! inputs and compares with tolerance, exactly how KernelBench checks
+//! generated kernels.
+
+use super::graph_def::{Graph, NodeId};
+use super::op::Op;
+use crate::tensor::{self, Tensor};
+
+/// A concrete semantic bug attached to a node's computation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MutationKind {
+    /// Remainder rows/cols mishandled: final `frac` of the innermost axis
+    /// of the node output is stale (zeros) — classic tile-boundary bug.
+    BoundaryDrop { frac: f32 },
+    /// Missing __syncthreads between reduction phases: deterministic
+    /// pseudo-noise on the output, scaled by `scale` times value magnitude.
+    RaceCorruption { scale: f32 },
+    /// Off-by-one in the input index: output shifted by one element along
+    /// the flattened layout.
+    IndexOffset,
+    /// Dropped epilogue: the node computes the identity of its first input
+    /// (wrong shape bugs become compile errors upstream, this is the
+    /// silent flavour).
+    SkippedOp,
+    /// Accumulator initialised to garbage: constant added everywhere.
+    BadAccumInit { bias: f32 },
+}
+
+/// A mutation targets one node of the graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mutation {
+    pub node: NodeId,
+    pub kind: MutationKind,
+}
+
+/// Execute the graph with reference semantics. `inputs` maps over
+/// `graph.input_ids()` order.
+pub fn eval_graph(g: &Graph, inputs: &[Tensor]) -> Vec<Tensor> {
+    eval_graph_with_mutations(g, inputs, &[])
+}
+
+/// Execute with injected semantic bugs (empty slice = reference run).
+pub fn eval_graph_with_mutations(
+    g: &Graph,
+    inputs: &[Tensor],
+    mutations: &[Mutation],
+) -> Vec<Tensor> {
+    let input_ids = g.input_ids();
+    assert_eq!(
+        input_ids.len(),
+        inputs.len(),
+        "graph {} expects {} inputs, got {}",
+        g.name,
+        input_ids.len(),
+        inputs.len()
+    );
+    let mut vals: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for (slot, &id) in input_ids.iter().enumerate() {
+        vals[id] = Some(inputs[slot].clone());
+    }
+    // LstmCell carries hidden cell state internally per node evaluation;
+    // our graphs pass (x, h, c, w_ih, w_hh) explicitly and return h'.
+    for (id, node) in g.nodes.iter().enumerate() {
+        if matches!(node.op, Op::Input) {
+            continue;
+        }
+        let arg = |i: usize| -> &Tensor {
+            vals[node.inputs[i]]
+                .as_ref()
+                .expect("topological order violated")
+        };
+        let mut out = match &node.op {
+            Op::Input => unreachable!(),
+            Op::MatMul => tensor::matmul(arg(0), arg(1)),
+            Op::BatchMatMul => tensor::bmm(arg(0), arg(1)),
+            Op::Conv2d { stride, pad } => tensor::conv2d(arg(0), arg(1), *stride, *pad),
+            Op::Relu => tensor::relu(arg(0)),
+            Op::Gelu => tensor::gelu(arg(0)),
+            Op::Sigmoid => tensor::sigmoid(arg(0)),
+            Op::Tanh => tensor::tanh_t(arg(0)),
+            Op::Exp => tensor::exp_t(arg(0)),
+            Op::Sqrt => arg(0).map(|v| v.max(0.0).sqrt()),
+            Op::Scale(s) => tensor::scale(arg(0), *s),
+            Op::Add => tensor::add(arg(0), arg(1)),
+            Op::Sub => tensor::sub(arg(0), arg(1)),
+            Op::Mul => tensor::mul(arg(0), arg(1)),
+            Op::Div => tensor::div(arg(0), arg(1)),
+            Op::Max => tensor::maximum(arg(0), arg(1)),
+            Op::BiasAdd => tensor::add(arg(0), arg(1)),
+            Op::Softmax => tensor::softmax_last(arg(0)),
+            Op::LayerNorm => tensor::layernorm_last(arg(0), 1e-5),
+            Op::BatchNorm2d => tensor::batchnorm2d(arg(0), arg(1), arg(2), 1e-5),
+            Op::ReduceSum => tensor::reduce_last(arg(0), "sum"),
+            Op::ReduceMax => tensor::reduce_last(arg(0), "max"),
+            Op::ReduceMean => tensor::reduce_last(arg(0), "mean"),
+            Op::ArgMax => tensor::reduce_last(arg(0), "argmax"),
+            Op::CumSum => tensor::cumsum_last(arg(0)),
+            Op::MaxPool2d { k, stride } => tensor::maxpool2d(arg(0), *k, *stride),
+            Op::GlobalAvgPool => tensor::global_avgpool(arg(0)),
+            Op::Attention => tensor::attention(arg(0), arg(1), arg(2)),
+            Op::LstmCell => {
+                let (h, _c) = tensor::lstm_cell(arg(0), arg(1), arg(2), arg(3), arg(4));
+                h
+            }
+            Op::Transpose2 => tensor::transpose2(arg(0)),
+        };
+        for m in mutations.iter().filter(|m| m.node == id) {
+            out = apply_mutation(&out, node, arg(0), &m.kind);
+        }
+        vals[id] = Some(out);
+    }
+    g.outputs
+        .iter()
+        .map(|&o| vals[o].clone().expect("output not computed"))
+        .collect()
+}
+
+fn apply_mutation(out: &Tensor, _node: &super::graph_def::Node,
+                  first_input: &Tensor, kind: &MutationKind) -> Tensor {
+    match kind {
+        MutationKind::BoundaryDrop { frac } => {
+            let mut t = out.clone();
+            let n = t.len();
+            let keep = ((1.0 - frac) * n as f32) as usize;
+            for v in t.data_mut()[keep..].iter_mut() {
+                *v = 0.0;
+            }
+            t
+        }
+        MutationKind::RaceCorruption { scale } => {
+            let mut t = out.clone();
+            for (i, v) in t.data_mut().iter_mut().enumerate() {
+                // deterministic pseudo-noise: depends on position only, so
+                // repeated checks fail reproducibly
+                let h = (i as u32).wrapping_mul(2654435761);
+                let noise = ((h >> 8) & 0xffff) as f32 / 65535.0 - 0.5;
+                *v += *v * scale * noise;
+            }
+            t
+        }
+        MutationKind::IndexOffset => {
+            let mut t = out.clone();
+            let n = t.len();
+            if n > 1 {
+                let d = t.data_mut();
+                d.rotate_right(1);
+            }
+            t
+        }
+        MutationKind::SkippedOp => {
+            if first_input.shape() == out.shape() {
+                first_input.clone()
+            } else {
+                // shape-changing op cannot be silently skipped; manifest as
+                // a zeroed output instead (still wrong, still executable)
+                Tensor::zeros(out.shape())
+            }
+        }
+        MutationKind::BadAccumInit { bias } => out.map(|v| v + bias),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::util::Rng;
+
+    fn mlp() -> (Graph, Vec<Tensor>) {
+        let mut g = Graph::new("mlp");
+        let x = g.input("x", &[4, 8]);
+        let w = g.weight("w", &[8, 6]);
+        let b = g.weight("b", &[6]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let ba = g.op(Op::BiasAdd, &[mm, b]);
+        let r = g.op(Op::Relu, &[ba]);
+        g.mark_output(r);
+        let mut rng = Rng::new(1);
+        let inputs = vec![
+            Tensor::randn(&[4, 8], &mut rng),
+            Tensor::randn(&[8, 6], &mut rng),
+            Tensor::randn(&[6], &mut rng),
+        ];
+        (g, inputs)
+    }
+
+    #[test]
+    fn eval_matches_manual_composition() {
+        let (g, inp) = mlp();
+        let out = eval_graph(&g, &inp);
+        let manual = tensor::relu(&tensor::add(
+            &tensor::matmul(&inp[0], &inp[1]),
+            &inp[2],
+        ));
+        assert!(out[0].allclose(&manual, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn reference_run_is_deterministic() {
+        let (g, inp) = mlp();
+        assert_eq!(eval_graph(&g, &inp), eval_graph(&g, &inp));
+    }
+
+    #[test]
+    fn mutations_change_output() {
+        let (g, inp) = mlp();
+        let clean = eval_graph(&g, &inp);
+        for kind in [
+            MutationKind::BoundaryDrop { frac: 0.25 },
+            MutationKind::RaceCorruption { scale: 0.3 },
+            MutationKind::IndexOffset,
+            MutationKind::SkippedOp,
+            MutationKind::BadAccumInit { bias: 0.5 },
+        ] {
+            let muts = vec![Mutation { node: 3, kind: kind.clone() }];
+            let dirty = eval_graph_with_mutations(&g, &inp, &muts);
+            assert!(
+                !dirty[0].allclose(&clean[0], 1e-4, 1e-4),
+                "mutation {kind:?} did not perturb output"
+            );
+        }
+    }
+
+    #[test]
+    fn mutation_is_deterministic() {
+        let (g, inp) = mlp();
+        let muts = vec![Mutation {
+            node: 4,
+            kind: MutationKind::RaceCorruption { scale: 0.1 },
+        }];
+        assert_eq!(
+            eval_graph_with_mutations(&g, &inp, &muts),
+            eval_graph_with_mutations(&g, &inp, &muts)
+        );
+    }
+
+    #[test]
+    fn skipped_op_identity_when_shapes_match() {
+        let mut g = Graph::new("s");
+        let x = g.input("x", &[3, 3]);
+        let r = g.op(Op::Relu, &[x]);
+        g.mark_output(r);
+        let mut rng = Rng::new(2);
+        let inp = vec![Tensor::randn(&[3, 3], &mut rng)];
+        let muts = vec![Mutation { node: r, kind: MutationKind::SkippedOp }];
+        let out = eval_graph_with_mutations(&g, &inp, &muts);
+        assert_eq!(out[0], inp[0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Graph definition: a DAG of op nodes with a builder API.
+
+use super::op::Op;
+
+pub type NodeId = usize;
+
+/// One node: an op plus its input node ids.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    /// Human-readable name (stable across runs; used in kernel names,
+    /// region descriptions and reports).
+    pub name: String,
+    /// For `Op::Input`: the placeholder's shape.
+    pub input_shape: Option<Vec<usize>>,
+    /// For `Op::Input`: true if this is a weight/constant (affects the
+    /// cost model: weights may be resident, activations stream).
+    pub is_weight: bool,
+}
+
+/// A task's computation DAG. Nodes are topologically ordered by
+/// construction (inputs must exist before use).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Output node ids (usually one).
+    pub outputs: Vec<NodeId>,
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { nodes: Vec::new(), outputs: Vec::new(), name: name.to_string() }
+    }
+
+    /// Add an activation input placeholder.
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        self.push(Node {
+            op: Op::Input,
+            inputs: vec![],
+            name: name.to_string(),
+            input_shape: Some(shape.to_vec()),
+            is_weight: false,
+        })
+    }
+
+    /// Add a weight input placeholder.
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        self.push(Node {
+            op: Op::Input,
+            inputs: vec![],
+            name: name.to_string(),
+            input_shape: Some(shape.to_vec()),
+            is_weight: true,
+        })
+    }
+
+    /// Add an op node.
+    pub fn op(&mut self, op: Op, inputs: &[NodeId]) -> NodeId {
+        assert_eq!(
+            op.arity(),
+            inputs.len(),
+            "op {:?} expects {} inputs, got {}",
+            op,
+            op.arity(),
+            inputs.len()
+        );
+        for &i in inputs {
+            assert!(i < self.nodes.len(), "input {i} not yet defined");
+        }
+        let name = format!("{}_{}", op.mnemonic(), self.nodes.len());
+        self.push(Node {
+            op,
+            inputs: inputs.to_vec(),
+            name,
+            input_shape: None,
+            is_weight: false,
+        })
+    }
+
+    pub fn mark_output(&mut self, id: NodeId) {
+        if !self.outputs.contains(&id) {
+            self.outputs.push(id);
+        }
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        self.nodes.push(node);
+        self.nodes.len() - 1
+    }
+
+    /// Ids of all `Op::Input` nodes, in definition order.
+    pub fn input_ids(&self) -> Vec<NodeId> {
+        (0..self.nodes.len())
+            .filter(|&i| matches!(self.nodes[i].op, Op::Input))
+            .collect()
+    }
+
+    /// Consumers of each node (adjacency reversed).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for (id, node) in self.nodes.iter().enumerate() {
+            for &i in &node.inputs {
+                cons[i].push(id);
+            }
+        }
+        cons
+    }
+
+    /// Number of non-input op nodes.
+    pub fn op_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.op, Op::Input))
+            .count()
+    }
+
+    /// Validate topological order + arity (used by property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.op.arity() != node.inputs.len() {
+                return Err(format!("node {id}: arity mismatch"));
+            }
+            for &i in &node.inputs {
+                if i >= id {
+                    return Err(format!("node {id}: forward reference to {i}"));
+                }
+            }
+            if matches!(node.op, Op::Input) && node.input_shape.is_none() {
+                return Err(format!("node {id}: input without shape"));
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        if self.outputs.is_empty() {
+            return Err("graph has no outputs".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_relu() -> Graph {
+        let mut g = Graph::new("linear_relu");
+        let x = g.input("x", &[8, 16]);
+        let w = g.weight("w", &[16, 4]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        g
+    }
+
+    #[test]
+    fn builder_produces_valid_graph() {
+        let g = linear_relu();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.op_count(), 2);
+        assert_eq!(g.input_ids(), vec![0, 1]);
+    }
+
+    #[test]
+    fn consumers_reversed_edges() {
+        let g = linear_relu();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![2]); // x -> matmul
+        assert_eq!(cons[2], vec![3]); // matmul -> relu
+        assert!(cons[3].is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "expects")]
+    fn arity_checked() {
+        let mut g = Graph::new("bad");
+        let x = g.input("x", &[2, 2]);
+        g.op(Op::MatMul, &[x]);
+    }
+
+    #[test]
+    fn validate_catches_no_outputs() {
+        let mut g = Graph::new("noout");
+        g.input("x", &[1]);
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Operator-graph substrate: the "abstract algorithmic specification S"
+//! of the paper's task definition — what KernelBench expresses as naive
+//! PyTorch modules. A [`Graph`] is a DAG of [`Op`] nodes over named
+//! tensors; [`eval`] executes it with reference semantics ("PyTorch
+//! Eager"), [`shapes`] infers all intermediate shapes, and `kir::lower`
+//! turns it into schedulable kernels.
+
+mod op;
+mod graph_def;
+mod shapes;
+mod eval;
+
+pub use eval::{eval_graph, eval_graph_with_mutations, Mutation, MutationKind};
+pub use graph_def::{Graph, Node, NodeId};
+pub use op::{Op, OpClass};
+pub use shapes::infer_shapes;

@@ -1,0 +1,183 @@
+//! Operator vocabulary. Covers the ops named by KernelBench levels 1-3 and
+//! TritonBench (Table 1 of the paper): GEMM/conv/softmax singles, fused
+//! subgraphs, and network building blocks (LSTM cell, attention, norms).
+
+/// An operator applied to one or two inputs (weights are separate graph
+/// inputs, so e.g. `MatMul` has two predecessors).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder (activations or weights).
+    Input,
+    /// Dense matmul [m,k]x[k,n].
+    MatMul,
+    /// Batched matmul [b,m,k]x[b,k,n].
+    BatchMatMul,
+    /// conv2d NCHW with stride/pad.
+    Conv2d { stride: usize, pad: usize },
+    /// Elementwise unary.
+    Relu,
+    Gelu,
+    Sigmoid,
+    Tanh,
+    Exp,
+    Sqrt,
+    /// Scale by constant.
+    Scale(f32),
+    /// Elementwise binary (broadcasting).
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    /// Bias add (alias of Add with vector rhs; kept distinct because
+    /// epilogue-fusion treats it specially).
+    BiasAdd,
+    /// Row softmax over last axis.
+    Softmax,
+    /// LayerNorm over last axis.
+    LayerNorm,
+    /// BatchNorm2d (inference) — stats are inputs 2 and 3.
+    BatchNorm2d,
+    /// Reductions over last axis.
+    ReduceSum,
+    ReduceMax,
+    ReduceMean,
+    ArgMax,
+    CumSum,
+    /// 2-D max pooling.
+    MaxPool2d { k: usize, stride: usize },
+    /// Global average pooling NCHW -> NC.
+    GlobalAvgPool,
+    /// Single-head scaled-dot-product attention over (q, k, v).
+    Attention,
+    /// One LSTM cell step over (x, h, c, w_ih, w_hh) -> h' (c' internal).
+    LstmCell,
+    /// 2-D transpose.
+    Transpose2,
+}
+
+/// Coarse roofline class used by the cost model and region analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Dense contraction (MatMul/Conv/Attention core): compute-bound at
+    /// good schedules.
+    Contraction,
+    /// Elementwise / bias / scale: pure memory-bound streamers.
+    Elementwise,
+    /// Row/channel reductions + normalisations + pooling: memory-bound
+    /// with reuse along the reduced axis.
+    Reduction,
+    /// Data movement only.
+    Movement,
+    /// Graph input.
+    Input,
+}
+
+impl Op {
+    pub fn class(&self) -> OpClass {
+        use Op::*;
+        match self {
+            Input => OpClass::Input,
+            MatMul | BatchMatMul | Conv2d { .. } | Attention | LstmCell => {
+                OpClass::Contraction
+            }
+            Relu | Gelu | Sigmoid | Tanh | Exp | Sqrt | Scale(_) | Add | Sub
+            | Mul | Div | Max | BiasAdd => OpClass::Elementwise,
+            Softmax | LayerNorm | BatchNorm2d | ReduceSum | ReduceMax
+            | ReduceMean | ArgMax | CumSum | MaxPool2d { .. }
+            | GlobalAvgPool => OpClass::Reduction,
+            Transpose2 => OpClass::Movement,
+        }
+    }
+
+    /// Number of tensor inputs the op consumes.
+    pub fn arity(&self) -> usize {
+        use Op::*;
+        match self {
+            Input => 0,
+            Relu | Gelu | Sigmoid | Tanh | Exp | Sqrt | Scale(_) | Softmax
+            | LayerNorm | ReduceSum | ReduceMax | ReduceMean | ArgMax
+            | CumSum | MaxPool2d { .. } | GlobalAvgPool | Transpose2 => 1,
+            MatMul | BatchMatMul | Conv2d { .. } | Add | Sub | Mul | Div
+            | Max | BiasAdd => 2,
+            Attention => 3,
+            BatchNorm2d => 3,
+            LstmCell => 5,
+        }
+    }
+
+    /// Short mnemonic used in kernel names and pretty-printing.
+    pub fn mnemonic(&self) -> &'static str {
+        use Op::*;
+        match self {
+            Input => "in",
+            MatMul => "matmul",
+            BatchMatMul => "bmm",
+            Conv2d { .. } => "conv2d",
+            Relu => "relu",
+            Gelu => "gelu",
+            Sigmoid => "sigmoid",
+            Tanh => "tanh",
+            Exp => "exp",
+            Sqrt => "sqrt",
+            Scale(_) => "scale",
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Div => "div",
+            Max => "max",
+            BiasAdd => "bias",
+            Softmax => "softmax",
+            LayerNorm => "layernorm",
+            BatchNorm2d => "batchnorm",
+            ReduceSum => "rsum",
+            ReduceMax => "rmax",
+            ReduceMean => "rmean",
+            ArgMax => "argmax",
+            CumSum => "cumsum",
+            MaxPool2d { .. } => "maxpool",
+            GlobalAvgPool => "gavgpool",
+            Attention => "attention",
+            LstmCell => "lstmcell",
+            Transpose2 => "transpose",
+        }
+    }
+
+    /// Whether epilogue-fusion may absorb this op into a producer kernel.
+    pub fn fusible_as_epilogue(&self) -> bool {
+        matches!(self.class(), OpClass::Elementwise)
+            || matches!(self, Op::Softmax | Op::ReduceMax | Op::ReduceSum
+                             | Op::ReduceMean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_partition_ops() {
+        assert_eq!(Op::MatMul.class(), OpClass::Contraction);
+        assert_eq!(Op::Relu.class(), OpClass::Elementwise);
+        assert_eq!(Op::Softmax.class(), OpClass::Reduction);
+        assert_eq!(Op::Transpose2.class(), OpClass::Movement);
+    }
+
+    #[test]
+    fn arities() {
+        assert_eq!(Op::Input.arity(), 0);
+        assert_eq!(Op::Relu.arity(), 1);
+        assert_eq!(Op::MatMul.arity(), 2);
+        assert_eq!(Op::Attention.arity(), 3);
+        assert_eq!(Op::LstmCell.arity(), 5);
+    }
+
+    #[test]
+    fn epilogue_fusibility() {
+        assert!(Op::Relu.fusible_as_epilogue());
+        assert!(Op::BiasAdd.fusible_as_epilogue());
+        assert!(Op::Softmax.fusible_as_epilogue());
+        assert!(!Op::MatMul.fusible_as_epilogue());
+        assert!(!Op::Conv2d { stride: 1, pad: 0 }.fusible_as_epilogue());
+    }
+}

@@ -1,0 +1,191 @@
+//! Shape inference over the operator graph. Every node gets a concrete
+//! shape (the task suites always fix input shapes), which the lowering,
+//! cost model and featurizer all consume.
+
+use super::graph_def::Graph;
+use super::op::Op;
+
+/// Infer the shape of every node. Panics on rank/shape mismatches —
+/// task-suite construction is the only caller building new graphs, and it
+/// is exhaustively covered by tests.
+pub fn infer_shapes(g: &Graph) -> Vec<Vec<usize>> {
+    let mut shapes: Vec<Vec<usize>> = Vec::with_capacity(g.nodes.len());
+    for (id, node) in g.nodes.iter().enumerate() {
+        let s = |i: usize| -> &Vec<usize> { &shapes[node.inputs[i]] };
+        let shape = match &node.op {
+            Op::Input => node
+                .input_shape
+                .clone()
+                .unwrap_or_else(|| panic!("input {id} missing shape")),
+            Op::MatMul => {
+                let (a, b) = (s(0), s(1));
+                assert_eq!(a.len(), 2, "matmul lhs rank");
+                assert_eq!(b.len(), 2, "matmul rhs rank");
+                assert_eq!(a[1], b[0], "matmul k mismatch in {}", node.name);
+                vec![a[0], b[1]]
+            }
+            Op::BatchMatMul => {
+                let (a, b) = (s(0), s(1));
+                assert_eq!(a.len(), 3);
+                assert_eq!(b.len(), 3);
+                assert_eq!(a[0], b[0]);
+                assert_eq!(a[2], b[1]);
+                vec![a[0], a[1], b[2]]
+            }
+            Op::Conv2d { stride, pad } => {
+                let (x, w) = (s(0), s(1));
+                assert_eq!(x.len(), 4);
+                assert_eq!(w.len(), 4);
+                assert_eq!(x[1], w[1], "conv channels");
+                let oh = (x[2] + 2 * pad - w[2]) / stride + 1;
+                let ow = (x[3] + 2 * pad - w[3]) / stride + 1;
+                vec![x[0], w[0], oh, ow]
+            }
+            Op::Relu | Op::Gelu | Op::Sigmoid | Op::Tanh | Op::Exp | Op::Sqrt
+            | Op::Scale(_) | Op::Softmax | Op::LayerNorm | Op::CumSum => {
+                s(0).clone()
+            }
+            Op::Add | Op::Sub | Op::Mul | Op::Div | Op::Max => {
+                broadcast_shape(s(0), s(1))
+            }
+            Op::BiasAdd => {
+                let (x, b) = (s(0), s(1));
+                assert_eq!(b.len(), 1);
+                assert_eq!(*x.last().unwrap(), b[0], "bias length");
+                x.clone()
+            }
+            Op::BatchNorm2d => {
+                let x = s(0);
+                assert_eq!(x.len(), 4);
+                assert_eq!(s(1).len(), 1);
+                assert_eq!(s(2).len(), 1);
+                x.clone()
+            }
+            Op::ReduceSum | Op::ReduceMax | Op::ReduceMean | Op::ArgMax => {
+                let x = s(0);
+                assert!(!x.is_empty());
+                x[..x.len() - 1].to_vec()
+            }
+            Op::MaxPool2d { k, stride } => {
+                let x = s(0);
+                assert_eq!(x.len(), 4);
+                vec![x[0], x[1], (x[2] - k) / stride + 1, (x[3] - k) / stride + 1]
+            }
+            Op::GlobalAvgPool => {
+                let x = s(0);
+                assert_eq!(x.len(), 4);
+                vec![x[0], x[1]]
+            }
+            Op::Attention => {
+                let (q, k, v) = (s(0), s(1), s(2));
+                assert_eq!(q.len(), 2);
+                assert_eq!(q[1], k[1], "attention dim");
+                assert_eq!(k[0], v[0], "attention seq");
+                vec![q[0], v[1]]
+            }
+            Op::LstmCell => {
+                let (x, h) = (s(0), s(1));
+                assert_eq!(x.len(), 2);
+                assert_eq!(h.len(), 2);
+                // w_ih: [i, 4u], w_hh: [u, 4u]
+                assert_eq!(s(3)[0], x[1]);
+                assert_eq!(s(3)[1], 4 * h[1]);
+                assert_eq!(s(4)[0], h[1]);
+                h.clone()
+            }
+            Op::Transpose2 => {
+                let x = s(0);
+                assert_eq!(x.len(), 2);
+                vec![x[1], x[0]]
+            }
+        };
+        shapes.push(shape);
+    }
+    shapes
+}
+
+fn broadcast_shape(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let rank = a.len().max(b.len());
+    let pad = |s: &[usize]| -> Vec<usize> {
+        let mut v = vec![1; rank - s.len()];
+        v.extend_from_slice(s);
+        v
+    };
+    let (sa, sb) = (pad(a), pad(b));
+    (0..rank)
+        .map(|i| {
+            assert!(
+                sa[i] == sb[i] || sa[i] == 1 || sb[i] == 1,
+                "broadcast mismatch {a:?} vs {b:?}"
+            );
+            sa[i].max(sb[i])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn mlp_shapes() {
+        let mut g = Graph::new("mlp");
+        let x = g.input("x", &[32, 64]);
+        let w1 = g.weight("w1", &[64, 128]);
+        let b1 = g.weight("b1", &[128]);
+        let mm = g.op(Op::MatMul, &[x, w1]);
+        let ba = g.op(Op::BiasAdd, &[mm, b1]);
+        let r = g.op(Op::Relu, &[ba]);
+        g.mark_output(r);
+        let s = infer_shapes(&g);
+        assert_eq!(s[mm], vec![32, 128]);
+        assert_eq!(s[r], vec![32, 128]);
+    }
+
+    #[test]
+    fn conv_pool_shapes() {
+        let mut g = Graph::new("cnn");
+        let x = g.input("x", &[2, 3, 32, 32]);
+        let w = g.weight("w", &[8, 3, 3, 3]);
+        let c = g.op(Op::Conv2d { stride: 1, pad: 1 }, &[x, w]);
+        let p = g.op(Op::MaxPool2d { k: 2, stride: 2 }, &[c]);
+        let ga = g.op(Op::GlobalAvgPool, &[p]);
+        g.mark_output(ga);
+        let s = infer_shapes(&g);
+        assert_eq!(s[c], vec![2, 8, 32, 32]);
+        assert_eq!(s[p], vec![2, 8, 16, 16]);
+        assert_eq!(s[ga], vec![2, 8]);
+    }
+
+    #[test]
+    fn reduce_drops_last_axis() {
+        let mut g = Graph::new("r");
+        let x = g.input("x", &[4, 7, 9]);
+        let r = g.op(Op::ReduceMax, &[x]);
+        g.mark_output(r);
+        assert_eq!(infer_shapes(&g)[r], vec![4, 7]);
+    }
+
+    #[test]
+    fn attention_shape() {
+        let mut g = Graph::new("att");
+        let q = g.input("q", &[10, 16]);
+        let k = g.input("k", &[12, 16]);
+        let v = g.input("v", &[12, 16]);
+        let a = g.op(Op::Attention, &[q, k, v]);
+        g.mark_output(a);
+        assert_eq!(infer_shapes(&g)[a], vec![10, 16]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul k mismatch")]
+    fn shape_mismatch_panics() {
+        let mut g = Graph::new("bad");
+        let x = g.input("x", &[2, 3]);
+        let w = g.weight("w", &[4, 5]);
+        let m = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(m);
+        infer_shapes(&g);
+    }
+}

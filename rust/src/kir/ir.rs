@@ -1,0 +1,239 @@
+//! Core IR types: Schedule, Kernel, Program.
+
+use crate::graph::{Graph, Mutation, NodeId};
+
+/// Loop ordering of a kernel's iteration space — the Reorder action's
+/// target. Affects memory coalescing in the cost model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopOrder {
+    /// Straight-from-reference order: innermost loop strides the *outer*
+    /// tensor axis (row-major hostile). What naive generated code does.
+    Naive,
+    /// Innermost loop walks contiguous memory — fully coalesced.
+    Coalesced,
+    /// Block-contiguous (tile-major) order: coalesced within tiles,
+    /// strided across; the usual order after tiling.
+    Blocked,
+}
+
+/// Per-kernel schedule state. `Default` = the naive schedule produced by
+/// `lower_naive` (no tiles, no pipeline, naive order, scalar accesses).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// Shared-memory block tile (M, N, K) for contraction kernels, or
+    /// (rows, cols, 1) for reduction/elementwise kernels.
+    pub block_tile: Option<(usize, usize, usize)>,
+    /// Register sub-tile (m, n) under the block tile.
+    pub reg_tile: Option<(usize, usize)>,
+    /// Software pipeline stages: 1 = none, 2 = double buffer, >=3 = async
+    /// multi-stage (cp.async-style).
+    pub pipeline_depth: usize,
+    pub loop_order: LoopOrder,
+    /// Vectorized access width in elements (1, 2, 4, 8).
+    pub vector_width: usize,
+}
+
+impl Default for Schedule {
+    fn default() -> Self {
+        Schedule {
+            block_tile: None,
+            reg_tile: None,
+            pipeline_depth: 1,
+            loop_order: LoopOrder::Naive,
+            vector_width: 1,
+        }
+    }
+}
+
+impl Schedule {
+    /// Shared memory bytes per block implied by this schedule (f32).
+    /// Operand staging buffers times the pipeline multiplicity.
+    pub fn smem_bytes(&self) -> usize {
+        match self.block_tile {
+            None => 0,
+            Some((m, n, k)) => {
+                let operands = m * k + k * n;
+                operands * 4 * self.pipeline_depth.max(1)
+            }
+        }
+    }
+
+    /// A summary score in [0, ~5] of how "scheduled" this kernel is —
+    /// used by the observation featurizer.
+    pub fn sophistication(&self) -> f32 {
+        let mut s = 0.0;
+        if self.block_tile.is_some() {
+            s += 1.0;
+        }
+        if self.reg_tile.is_some() {
+            s += 1.0;
+        }
+        s += (self.pipeline_depth.saturating_sub(1) as f32).min(2.0) * 0.5;
+        if self.loop_order != LoopOrder::Naive {
+            s += 1.0;
+        }
+        if self.vector_width > 1 {
+            s += 0.5;
+        }
+        s
+    }
+}
+
+/// One fused kernel: a contiguous-in-topo-order group of graph nodes plus
+/// its schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Kernel {
+    pub nodes: Vec<NodeId>,
+    pub schedule: Schedule,
+    pub name: String,
+}
+
+impl Kernel {
+    /// The "anchor" node: the most expensive op in the group (contraction
+    /// if present, else the first reduction, else the first node). Tiling
+    /// decisions key off its iteration space.
+    pub fn anchor(&self, g: &Graph) -> NodeId {
+        use crate::graph::OpClass;
+        for &n in &self.nodes {
+            if g.nodes[n].op.class() == OpClass::Contraction {
+                return n;
+            }
+        }
+        for &n in &self.nodes {
+            if g.nodes[n].op.class() == OpClass::Reduction {
+                return n;
+            }
+        }
+        self.nodes[0]
+    }
+}
+
+/// A full scheduled program for one task graph, plus the semantic bugs the
+/// micro-coder has introduced so far (executed by the verif run).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Program {
+    pub kernels: Vec<Kernel>,
+    /// Injected semantic bugs (empty for a correct program).
+    pub mutations: Vec<Mutation>,
+    /// True if the last micro-coding step produced code that does not
+    /// compile — the program is unusable until regenerated.
+    pub compile_broken: bool,
+}
+
+impl Program {
+    /// Which kernel computes a given node, if any.
+    pub fn kernel_of(&self, node: NodeId) -> Option<usize> {
+        self.kernels
+            .iter()
+            .position(|k| k.nodes.contains(&node))
+    }
+
+    /// Invariants: every non-input node in exactly one kernel; kernels
+    /// internally topo-ordered; no empty kernels. Used by property tests
+    /// after every transform.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        let mut seen = vec![0usize; g.nodes.len()];
+        for (ki, k) in self.kernels.iter().enumerate() {
+            if k.nodes.is_empty() {
+                return Err(format!("kernel {ki} is empty"));
+            }
+            for w in k.nodes.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("kernel {ki} nodes not topo-sorted"));
+                }
+            }
+            for &n in &k.nodes {
+                if matches!(g.nodes[n].op, crate::graph::Op::Input) {
+                    return Err(format!("kernel {ki} contains input node {n}"));
+                }
+                seen[n] += 1;
+            }
+            if k.schedule.pipeline_depth > 1 && k.schedule.block_tile.is_none() {
+                return Err(format!(
+                    "kernel {ki} pipelined without block tile (nothing to stage)"
+                ));
+            }
+        }
+        for (n, node) in g.nodes.iter().enumerate() {
+            let is_input = matches!(node.op, crate::graph::Op::Input);
+            if is_input && seen[n] != 0 {
+                return Err(format!("input node {n} assigned to a kernel"));
+            }
+            if !is_input && seen[n] != 1 {
+                return Err(format!(
+                    "node {n} ({}) covered {} times",
+                    node.name, seen[n]
+                ));
+            }
+        }
+        // kernel execution order must respect cross-kernel dataflow
+        let mut kernel_idx = vec![usize::MAX; g.nodes.len()];
+        for (ki, k) in self.kernels.iter().enumerate() {
+            for &n in &k.nodes {
+                kernel_idx[n] = ki;
+            }
+        }
+        for (ki, k) in self.kernels.iter().enumerate() {
+            for &n in &k.nodes {
+                for &inp in &g.nodes[n].inputs {
+                    let pi = kernel_idx[inp];
+                    if pi != usize::MAX && pi > ki {
+                        return Err(format!(
+                            "kernel {ki} consumes node {inp} from later kernel {pi}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Mean schedule sophistication across kernels (featurizer input).
+    pub fn mean_sophistication(&self) -> f32 {
+        if self.kernels.is_empty() {
+            return 0.0;
+        }
+        self.kernels
+            .iter()
+            .map(|k| k.schedule.sophistication())
+            .sum::<f32>()
+            / self.kernels.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_schedule_is_naive() {
+        let s = Schedule::default();
+        assert_eq!(s.pipeline_depth, 1);
+        assert_eq!(s.loop_order, LoopOrder::Naive);
+        assert_eq!(s.smem_bytes(), 0);
+        assert_eq!(s.sophistication(), 0.0);
+    }
+
+    #[test]
+    fn smem_scales_with_pipeline() {
+        let mut s = Schedule::default();
+        s.block_tile = Some((64, 64, 32));
+        let single = s.smem_bytes();
+        s.pipeline_depth = 2;
+        assert_eq!(s.smem_bytes(), 2 * single);
+        assert_eq!(single, (64 * 32 + 32 * 64) * 4);
+    }
+
+    #[test]
+    fn sophistication_monotone() {
+        let mut s = Schedule::default();
+        let s0 = s.sophistication();
+        s.block_tile = Some((64, 64, 32));
+        let s1 = s.sophistication();
+        s.pipeline_depth = 2;
+        let s2 = s.sophistication();
+        s.loop_order = LoopOrder::Blocked;
+        let s3 = s.sophistication();
+        assert!(s0 < s1 && s1 < s2 && s2 < s3);
+    }
+}

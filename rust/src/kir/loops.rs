@@ -1,0 +1,189 @@
+//! Loop-nest derivation: the "AST" view of a kernel that region analysis
+//! and the pretty-printer consume. The nest is derived from the anchor
+//! op's iteration space plus the schedule's tiling decisions.
+
+use super::ir::Kernel;
+use crate::graph::{Graph, Op};
+
+/// Role of a loop in the nest (drives reorder/vectorize validity and the
+/// coalescing model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoopKind {
+    /// Parallel (grid) dimension.
+    Parallel,
+    /// Reduction dimension.
+    Reduction,
+    /// Spatial window (conv kernel window).
+    Window,
+}
+
+/// One loop of the nest, outermost first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Loop {
+    pub var: String,
+    pub extent: usize,
+    pub kind: LoopKind,
+    /// Tile size if this loop has been split by the schedule.
+    pub tile: Option<usize>,
+}
+
+/// Derive the loop nest of a kernel from its anchor op and schedule.
+pub fn loop_nest(kernel: &Kernel, g: &Graph, shapes: &[Vec<usize>]) -> Vec<Loop> {
+    let anchor = kernel.anchor(g);
+    let node = &g.nodes[anchor];
+    let out = &shapes[anchor];
+    let (bt, _rt) = (kernel.schedule.block_tile, kernel.schedule.reg_tile);
+    let mk = |var: &str, extent: usize, kind: LoopKind, tile: Option<usize>| Loop {
+        var: var.to_string(),
+        extent,
+        kind,
+        tile,
+    };
+    match &node.op {
+        Op::MatMul => {
+            let a = &shapes[node.inputs[0]];
+            let b = &shapes[node.inputs[1]];
+            vec![
+                mk("m", a[0], LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("n", b[1], LoopKind::Parallel, bt.map(|t| t.1)),
+                mk("k", a[1], LoopKind::Reduction, bt.map(|t| t.2)),
+            ]
+        }
+        Op::BatchMatMul => {
+            let a = &shapes[node.inputs[0]];
+            let b = &shapes[node.inputs[1]];
+            vec![
+                mk("b", a[0], LoopKind::Parallel, None),
+                mk("m", a[1], LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("n", b[2], LoopKind::Parallel, bt.map(|t| t.1)),
+                mk("k", a[2], LoopKind::Reduction, bt.map(|t| t.2)),
+            ]
+        }
+        Op::Conv2d { .. } => {
+            let x = &shapes[node.inputs[0]];
+            let w = &shapes[node.inputs[1]];
+            vec![
+                mk("n", out[0], LoopKind::Parallel, None),
+                mk("f", out[1], LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("y", out[2], LoopKind::Parallel, bt.map(|t| t.1)),
+                mk("x", out[3], LoopKind::Parallel, None),
+                mk("c", x[1], LoopKind::Reduction, bt.map(|t| t.2)),
+                mk("ky", w[2], LoopKind::Window, None),
+                mk("kx", w[3], LoopKind::Window, None),
+            ]
+        }
+        Op::Attention => {
+            let q = &shapes[node.inputs[0]];
+            let k = &shapes[node.inputs[1]];
+            vec![
+                mk("sq", q[0], LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("sk", k[0], LoopKind::Reduction, bt.map(|t| t.1)),
+                mk("d", q[1], LoopKind::Reduction, bt.map(|t| t.2)),
+            ]
+        }
+        Op::LstmCell => {
+            let x = &shapes[node.inputs[0]];
+            let h = &shapes[node.inputs[1]];
+            vec![
+                mk("b", x[0], LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("u", h[1] * 4, LoopKind::Parallel, bt.map(|t| t.1)),
+                mk("k", x[1] + h[1], LoopKind::Reduction, bt.map(|t| t.2)),
+            ]
+        }
+        // reductions / normalisations: rows parallel, last axis reduced
+        Op::Softmax | Op::LayerNorm | Op::ReduceSum | Op::ReduceMax
+        | Op::ReduceMean | Op::ArgMax | Op::CumSum => {
+            let x = &shapes[node.inputs[0]];
+            let rows: usize = x[..x.len() - 1].iter().product();
+            vec![
+                mk("row", rows.max(1), LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("col", *x.last().unwrap(), LoopKind::Reduction, bt.map(|t| t.1)),
+            ]
+        }
+        Op::MaxPool2d { .. } | Op::GlobalAvgPool | Op::BatchNorm2d => {
+            let x = &shapes[node.inputs[0]];
+            vec![
+                mk("nc", x[0] * x[1], LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("hw", x[2] * x[3], LoopKind::Reduction, bt.map(|t| t.1)),
+            ]
+        }
+        // pure elementwise / movement: flat 2-level nest
+        _ => {
+            let n: usize = out.iter().product();
+            let inner = out.last().copied().unwrap_or(1).max(1);
+            vec![
+                mk("i", (n / inner).max(1), LoopKind::Parallel, bt.map(|t| t.0)),
+                mk("j", inner, LoopKind::Parallel, bt.map(|t| t.1)),
+            ]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, Graph};
+    use crate::kir::{lower_naive, Schedule};
+
+    #[test]
+    fn matmul_nest_mnk() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[32, 64]);
+        let w = g.weight("w", &[64, 16]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(mm);
+        let shapes = infer_shapes(&g);
+        let p = lower_naive(&g);
+        let nest = loop_nest(&p.kernels[0], &g, &shapes);
+        assert_eq!(nest.len(), 3);
+        assert_eq!(nest[0].extent, 32);
+        assert_eq!(nest[2].kind, LoopKind::Reduction);
+        assert!(nest.iter().all(|l| l.tile.is_none()));
+    }
+
+    #[test]
+    fn tiles_show_in_nest() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[128, 128]);
+        let w = g.weight("w", &[128, 128]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(mm);
+        let shapes = infer_shapes(&g);
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule = Schedule {
+            block_tile: Some((64, 32, 16)),
+            ..Default::default()
+        };
+        let nest = loop_nest(&p.kernels[0], &g, &shapes);
+        assert_eq!(nest[0].tile, Some(64));
+        assert_eq!(nest[1].tile, Some(32));
+        assert_eq!(nest[2].tile, Some(16));
+    }
+
+    #[test]
+    fn softmax_nest_rows_cols() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[4, 7, 9]);
+        let s = g.op(Op::Softmax, &[x]);
+        g.mark_output(s);
+        let shapes = infer_shapes(&g);
+        let p = lower_naive(&g);
+        let nest = loop_nest(&p.kernels[0], &g, &shapes);
+        assert_eq!(nest[0].extent, 28);
+        assert_eq!(nest[1].extent, 9);
+        assert_eq!(nest[1].kind, LoopKind::Reduction);
+    }
+
+    #[test]
+    fn conv_nest_has_window_loops() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[1, 3, 8, 8]);
+        let w = g.weight("w", &[4, 3, 3, 3]);
+        let c = g.op(Op::Conv2d { stride: 1, pad: 1 }, &[x, w]);
+        g.mark_output(c);
+        let shapes = infer_shapes(&g);
+        let p = lower_naive(&g);
+        let nest = loop_nest(&p.kernels[0], &g, &shapes);
+        assert_eq!(nest.iter().filter(|l| l.kind == LoopKind::Window).count(), 2);
+    }
+}

@@ -1,0 +1,54 @@
+//! Naive lowering: one kernel per non-input graph node, default schedule.
+//! This is the "unoptimized reference code" MTMC starts from — what a
+//! straightforward Triton translation of the PyTorch module looks like
+//! before any optimization action is applied.
+
+use super::ir::{Kernel, Program, Schedule};
+use crate::graph::{Graph, Op};
+
+/// Lower a graph to the naive one-op-per-kernel program.
+pub fn lower_naive(g: &Graph) -> Program {
+    let mut kernels = Vec::new();
+    for (id, node) in g.nodes.iter().enumerate() {
+        if matches!(node.op, Op::Input) {
+            continue;
+        }
+        kernels.push(Kernel {
+            nodes: vec![id],
+            schedule: Schedule::default(),
+            name: format!("k{}_{}", kernels.len(), node.op.mnemonic()),
+        });
+    }
+    Program { kernels, mutations: Vec::new(), compile_broken: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+
+    #[test]
+    fn naive_lowering_covers_graph() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[4, 8]);
+        let w = g.weight("w", &[8, 4]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        let p = lower_naive(&g);
+        assert_eq!(p.kernels.len(), 2);
+        p.validate(&g).unwrap();
+        assert_eq!(p.kernel_of(mm), Some(0));
+        assert_eq!(p.kernel_of(r), Some(1));
+        assert!(p.kernel_of(x).is_none());
+    }
+
+    #[test]
+    fn naive_lowering_all_suites() {
+        for t in crate::tasks::kernelbench_level(3).iter().take(10) {
+            let p = lower_naive(&t.graph);
+            p.validate(&t.graph).unwrap_or_else(|e| panic!("{}: {e}", t.id));
+            assert_eq!(p.kernels.len(), t.graph.op_count());
+        }
+    }
+}

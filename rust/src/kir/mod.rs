@@ -1,0 +1,20 @@
+//! Kernel IR: the schedule-carrying representation the semantic actions
+//! operate on. A [`Program`] partitions a task graph into fused
+//! [`Kernel`]s, each carrying a [`Schedule`] (tiles, pipeline depth, loop
+//! order, vector width). `regions` derives the candidate *code regions*
+//! (paper §4.2: "determined based on the data flow and AST analysis") the
+//! Macro-Thinking action space indexes into, and `printer` renders
+//! pseudo-Triton/CUDA text for inspection and the Table 5 language
+//! ablation.
+
+mod ir;
+mod lower;
+mod loops;
+mod regions;
+mod printer;
+
+pub use ir::{Kernel, LoopOrder, Program, Schedule};
+pub use loops::{loop_nest, Loop, LoopKind};
+pub use lower::lower_naive;
+pub use printer::{render, TargetLang};
+pub use regions::{analyze_regions, Region, RegionKind, MAX_REGIONS};

@@ -1,0 +1,205 @@
+//! Candidate code-region analysis (paper §4.2): the action space is
+//! (optimization type × code region), where regions come from data-flow +
+//! AST analysis of the current program. We expose at most [`MAX_REGIONS`]
+//! slots; the policy's action mask hides empty slots.
+//!
+//! Region slots are ordered deterministically: kernel regions first (by
+//! kernel index), then fusion-edge regions (by producer index). This
+//! keeps the action space stable across a trajectory so the policy can
+//! learn positional semantics.
+
+use super::ir::Program;
+use crate::graph::{Graph, OpClass};
+
+/// Maximum region slots exposed to the policy (action space = 8 opt types
+/// x MAX_REGIONS + Stop).
+pub const MAX_REGIONS: usize = 8;
+
+/// What a region denotes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionKind {
+    /// A whole kernel (its dominant loop nest) — target of tiling,
+    /// pipelining, reordering, vectorizing.
+    Kernel { kernel: usize },
+    /// A fusible producer->consumer kernel edge — target of fusion.
+    FusionEdge { producer: usize, consumer: usize },
+}
+
+/// One candidate region with a human-readable description (the "lines 15
+/// to 20" part of the paper's action example).
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub kind: RegionKind,
+    pub describe: String,
+}
+
+/// Compute the candidate regions of a program.
+///
+/// Kernel regions are emitted for every kernel whose anchor is worth
+/// scheduling (everything except pure movement). Fusion edges are emitted
+/// for adjacent kernels where (a) the producer's sole consumer is the
+/// consumer kernel and (b) the consumer is epilogue-fusible or the
+/// producer is elementwise (producer fusion).
+pub fn analyze_regions(p: &Program, g: &Graph) -> Vec<Region> {
+    let mut out = Vec::new();
+    // kernel regions, hottest first: contraction anchors, then reductions,
+    // then elementwise — keeps slot 0 pointing at the hot loop nest.
+    let mut order: Vec<usize> = (0..p.kernels.len()).collect();
+    let rank = |ki: usize| -> usize {
+        match g.nodes[p.kernels[ki].anchor(g)].op.class() {
+            OpClass::Contraction => 0,
+            OpClass::Reduction => 1,
+            OpClass::Elementwise => 2,
+            _ => 3,
+        }
+    };
+    order.sort_by_key(|&ki| (rank(ki), ki));
+    for &ki in &order {
+        if out.len() >= MAX_REGIONS {
+            break;
+        }
+        let k = &p.kernels[ki];
+        // movement-anchored kernels stay schedulable too: loop order and
+        // vector width are exactly what a transpose kernel tunes
+        out.push(Region {
+            kind: RegionKind::Kernel { kernel: ki },
+            describe: format!(
+                "kernel `{}` (ops {})",
+                k.name,
+                k.nodes
+                    .iter()
+                    .map(|&n| g.nodes[n].op.mnemonic())
+                    .collect::<Vec<_>>()
+                    .join("+")
+            ),
+        });
+    }
+    // fusion edges
+    let consumers = g.consumers();
+    for (pi, pk) in p.kernels.iter().enumerate() {
+        if out.len() >= MAX_REGIONS {
+            break;
+        }
+        // kernel outputs = nodes whose consumers are outside the kernel
+        let last = *pk.nodes.last().unwrap();
+        let outside: Vec<usize> = consumers[last]
+            .iter()
+            .copied()
+            .filter(|c| !pk.nodes.contains(c))
+            .collect();
+        if outside.is_empty() {
+            continue;
+        }
+        // single consuming kernel?
+        let mut ckis: Vec<usize> = outside
+            .iter()
+            .filter_map(|&c| p.kernel_of(c))
+            .collect();
+        ckis.sort();
+        ckis.dedup();
+        if ckis.len() != 1 {
+            continue;
+        }
+        let ci = ckis[0];
+        if ci == pi {
+            continue;
+        }
+        // graph outputs must stay materialized: if the producer's last
+        // node is a graph output, fusing would still need the write-out;
+        // allow it (epilogue keeps the store) — no constraint here.
+        let ck = &p.kernels[ci];
+        let consumer_first_op = &g.nodes[ck.nodes[0]].op;
+        let producer_anchor_cls = g.nodes[pk.anchor(g)].op.class();
+        let fusible = consumer_first_op.fusible_as_epilogue()
+            || producer_anchor_cls == OpClass::Elementwise;
+        if !fusible {
+            continue;
+        }
+        out.push(Region {
+            kind: RegionKind::FusionEdge { producer: pi, consumer: ci },
+            describe: format!(
+                "edge `{}` -> `{}`",
+                pk.name, p.kernels[ci].name
+            ),
+        });
+    }
+    out.truncate(MAX_REGIONS);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Op};
+    use crate::kir::lower_naive;
+
+    fn gemm_bias_relu() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[64, 64]);
+        let w = g.weight("w", &[64, 64]);
+        let b = g.weight("b", &[64]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let ba = g.op(Op::BiasAdd, &[mm, b]);
+        let r = g.op(Op::Relu, &[ba]);
+        g.mark_output(r);
+        g
+    }
+
+    #[test]
+    fn regions_include_kernels_and_edges() {
+        let g = gemm_bias_relu();
+        let p = lower_naive(&g);
+        let regions = analyze_regions(&p, &g);
+        let kernels = regions
+            .iter()
+            .filter(|r| matches!(r.kind, RegionKind::Kernel { .. }))
+            .count();
+        let edges = regions
+            .iter()
+            .filter(|r| matches!(r.kind, RegionKind::FusionEdge { .. }))
+            .count();
+        assert_eq!(kernels, 3);
+        assert_eq!(edges, 2, "matmul->bias and bias->relu edges");
+    }
+
+    #[test]
+    fn contraction_kernel_ranked_first() {
+        let g = gemm_bias_relu();
+        let p = lower_naive(&g);
+        let regions = analyze_regions(&p, &g);
+        match regions[0].kind {
+            RegionKind::Kernel { kernel } => {
+                assert_eq!(p.kernels[kernel].name.contains("matmul"), true)
+            }
+            _ => panic!("first region should be the matmul kernel"),
+        }
+    }
+
+    #[test]
+    fn bounded_by_max_regions() {
+        // L3 networks have tens of kernels; regions must stay <= 8
+        for t in crate::tasks::kernelbench_level(3).iter().take(5) {
+            let p = lower_naive(&t.graph);
+            let r = analyze_regions(&p, &t.graph);
+            assert!(r.len() <= MAX_REGIONS);
+            assert!(!r.is_empty());
+        }
+    }
+
+    #[test]
+    fn no_edge_when_consumer_not_fusible() {
+        // matmul -> matmul edge is not an epilogue fusion candidate
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[32, 32]);
+        let w1 = g.weight("w1", &[32, 32]);
+        let w2 = g.weight("w2", &[32, 32]);
+        let m1 = g.op(Op::MatMul, &[x, w1]);
+        let m2 = g.op(Op::MatMul, &[m1, w2]);
+        g.mark_output(m2);
+        let p = lower_naive(&g);
+        let regions = analyze_regions(&p, &g);
+        assert!(regions
+            .iter()
+            .all(|r| !matches!(r.kind, RegionKind::FusionEdge { .. })));
+    }
+}

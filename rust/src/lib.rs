@@ -1,0 +1,65 @@
+//! # qimeng-mtmc
+//!
+//! Reproduction of **QiMeng-Kernel: Macro-Thinking Micro-Coding (MTMC)**
+//! (AAAI 2026) as a three-layer rust + JAX + Pallas system.
+//!
+//! - **Layer 3 (this crate)** — the MTMC coordinator: kernel IR and
+//!   schedule transforms ([`kir`], [`transform`]), AST/dataflow region
+//!   analysis, the Micro-Coding engine with per-LLM competence models
+//!   ([`microcode`]), the analytic GPU simulator ([`gpusim`]), the
+//!   tree-structured RL environment ([`env`], [`dataset`]), the PPO
+//!   orchestrator ([`train`]), and the benchmark harness regenerating every
+//!   paper table ([`eval`], [`report`]).
+//! - **Layer 2** — the Macro-Thinking policy network (JAX, AOT-lowered to
+//!   HLO text; loaded by [`runtime`] through PJRT).
+//! - **Layer 1** — Pallas kernels inside the L2 model (fused linear layers,
+//!   masked softmax head).
+//!
+//! Python never runs on the request path: the macro-thinking loop calls
+//! the compiled artifacts through [`runtime::PjrtRuntime`].
+//!
+//! See `DESIGN.md` for the system inventory, the per-experiment index and
+//! the substitution table (simulated GPUs / LLMs per the repro policy).
+
+pub mod util;
+pub mod testkit;
+pub mod tensor;
+pub mod graph;
+pub mod tasks;
+pub mod kir;
+pub mod transform;
+pub mod gpusim;
+pub mod microcode;
+pub mod env;
+pub mod dataset;
+pub mod runtime;
+pub mod policy;
+pub mod train;
+pub mod eval;
+pub mod report;
+
+/// Crate-wide result alias (library errors are `thiserror` enums per
+/// module; binaries use `anyhow`).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Well-known repository paths.
+pub mod paths {
+    use std::path::PathBuf;
+
+    /// The AOT artifact directory: `$QIMENG_ARTIFACTS` if set, else
+    /// `<crate root>/artifacts` (where `make artifacts` writes).
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("QIMENG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    /// Default location for trained policy parameters.
+    pub fn default_policy_path() -> PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("data")
+            .join("policy.bin")
+    }
+}

@@ -1,0 +1,361 @@
+//! `repro` — the qimeng-mtmc command line.
+//!
+//! Subcommands:
+//!   specs                         print the simulated GPU table (Table 2)
+//!   tasks [--suite S]             list benchmark suites and sizes
+//!   dataset --out F [...]         generate the offline trajectory dataset
+//!   train [--iters N] [...]       PPO-train the Macro-Thinking policy
+//!   optimize --task ID [...]      optimize one task, show the schedule story
+//!   eval --suite S [...]          evaluate a method over a suite
+//!   table N                       regenerate paper table N (3,4,5,6,7)
+
+use anyhow::{bail, Context, Result};
+use qimeng_mtmc::dataset::{generate, save_trajectories, DatasetCfg};
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::kir::{lower_naive, render, TargetLang};
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::paths;
+use qimeng_mtmc::report::{metric_cells, Table};
+use qimeng_mtmc::runtime::{save_params, ParamSet, PjrtRuntime, TrainState};
+use qimeng_mtmc::tasks::{
+    kernelbench_level, kernelbench_suite, training_corpus, tritonbench_g,
+    tritonbench_t, Task,
+};
+use qimeng_mtmc::train::{train_ppo, PpoCfg};
+use qimeng_mtmc::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.cmd.as_str() {
+        "specs" => cmd_specs(),
+        "tasks" => cmd_tasks(&args),
+        "dataset" => cmd_dataset(&args),
+        "train" => cmd_train(&args),
+        "optimize" => cmd_optimize(&args),
+        "eval" => cmd_eval(&args),
+        "table" => cmd_table(&args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+repro — QiMeng-Kernel MTMC reproduction (see DESIGN.md)
+
+USAGE: repro <command> [flags]
+
+COMMANDS:
+  specs                      simulated GPU specs (paper Table 2)
+  tasks [--suite kb1|kb2|kb3|tbg|tbt|corpus]
+  dataset --out data/trees.bin [--tasks 200] [--per-task 64] [--seed N]
+  train [--iters 60] [--tasks 40] [--out data/policy.bin] [--gpu A100]
+  optimize --task kb2_000_gemm_bias_act [--gpu A100] [--show-code]
+  eval --suite kb2 [--gpu A100] [--method mtmc|greedy|<profile>] [--limit N]
+  table 3|4|5|6|7            regenerate a paper table
+";
+
+fn gpu(args: &Args) -> Result<GpuSpec> {
+    let name = args.get_or("gpu", "A100");
+    GpuSpec::by_name(name).with_context(|| format!("unknown GPU {name}"))
+}
+
+fn suite_tasks(name: &str) -> Result<Vec<Task>> {
+    Ok(match name {
+        "kb1" => kernelbench_level(1),
+        "kb2" => kernelbench_level(2),
+        "kb3" => kernelbench_level(3),
+        "kb" => kernelbench_suite(),
+        "tbg" => tritonbench_g(),
+        "tbt" => tritonbench_t(),
+        "corpus" => training_corpus(200),
+        other => bail!("unknown suite `{other}`"),
+    })
+}
+
+fn cmd_specs() -> Result<()> {
+    let mut t = Table::new(
+        "Simulated GPU platforms (paper Table 2)",
+        &["Feature", "V100", "A100", "H100"],
+    );
+    let specs = GpuSpec::all();
+    let row = |name: &str, f: &dyn Fn(&GpuSpec) -> String| {
+        let mut cells = vec![name.to_string()];
+        cells.extend(specs.iter().map(|s| f(s)));
+        cells
+    };
+    t.row(row("Architecture", &|s| format!("{:?}", s.arch)));
+    t.row(row("SMs", &|s| s.sms.to_string()));
+    t.row(row("Global Memory (GB)", &|s| s.global_mem_gb.to_string()));
+    t.row(row("Shared Memory / SM (KB)", &|s| s.smem_per_sm_kb.to_string()));
+    t.row(row("L2 Cache (MB)", &|s| s.l2_mb.to_string()));
+    t.row(row("Memory Bandwidth (GB/s)", &|s| format!("{:.0}", s.mem_bw_gbs)));
+    t.row(row("FP32 TFLOPS", &|s| format!("{}", s.fp32_tflops)));
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_tasks(args: &Args) -> Result<()> {
+    let which = args.get_or("suite", "all");
+    let suites: Vec<(&str, Vec<Task>)> = if which == "all" {
+        vec![
+            ("kb1", kernelbench_level(1)),
+            ("kb2", kernelbench_level(2)),
+            ("kb3", kernelbench_level(3)),
+            ("tbg", tritonbench_g()),
+            ("tbt", tritonbench_t()),
+        ]
+    } else {
+        vec![(which, suite_tasks(which)?)]
+    };
+    for (name, tasks) in suites {
+        println!("{name}: {} tasks", tasks.len());
+        if args.has("verbose") {
+            for t in &tasks {
+                println!(
+                    "  {}  ops={} family={}",
+                    t.id,
+                    t.complexity(),
+                    t.family.label()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let out = std::path::PathBuf::from(args.get_or("out", "data/trees.bin"));
+    let n_tasks = args.usize_or("tasks", 200);
+    let cfg = DatasetCfg {
+        per_task: args.usize_or("per-task", 64),
+        seed: args.u64_or("seed", 0xDA7A),
+        threads: args.usize_or(
+            "threads",
+            qimeng_mtmc::util::parallel::default_threads(),
+        ),
+        ..Default::default()
+    };
+    let tasks = training_corpus(n_tasks);
+    let spec = gpu(args)?;
+    eprintln!(
+        "generating {} x {} episodes on {}...",
+        n_tasks, cfg.per_task, spec.name
+    );
+    let t0 = std::time::Instant::now();
+    let (trajs, stats) = generate(&tasks, &spec, ProfileId::GeminiFlash25, &cfg);
+    save_trajectories(&trajs, &out)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "wrote {} trajectories ({} steps) to {} in {:.1}s ({:.0} steps/s)",
+        stats.trajectories,
+        stats.steps,
+        out.display(),
+        dt,
+        stats.steps as f64 / dt
+    );
+    println!(
+        "mean reward {:.3}, mean final speedup {:.2}x, correct-step rate {:.0}%",
+        stats.mean_reward,
+        stats.mean_final_speedup,
+        stats.correct_step_frac * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = PjrtRuntime::load(&paths::artifacts_dir())
+        .context("load artifacts (run `make artifacts`)")?;
+    let tasks = training_corpus(args.usize_or("tasks", 40));
+    let spec = gpu(args)?;
+    let cfg = PpoCfg {
+        iterations: args.usize_or("iters", 60),
+        seed: args.u64_or("seed", 0x9902),
+        ..Default::default()
+    };
+    let params = ParamSet::init(&rt.meta.raw, cfg.seed ^ 0x11)?;
+    let mut state = TrainState::new(params);
+    let logs = train_ppo(&rt, &mut state, &tasks, &spec, &cfg)?;
+    let default_out = paths::default_policy_path();
+    let out = std::path::PathBuf::from(
+        args.get_or("out", default_out.to_str().unwrap()),
+    );
+    save_params(&state.params, &out)?;
+    let first = logs.first().unwrap();
+    let last = logs.last().unwrap();
+    println!(
+        "trained {} iters on {}: reward {:+.3} -> {:+.3}, speedup {:.2}x -> {:.2}x",
+        logs.len(),
+        spec.name,
+        first.mean_episode_reward,
+        last.mean_episode_reward,
+        first.mean_final_speedup,
+        last.mean_final_speedup
+    );
+    println!("saved policy to {}", out.display());
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let id = args.get("task").context("--task <id> required")?;
+    let all: Vec<Task> = kernelbench_suite()
+        .into_iter()
+        .chain(tritonbench_g())
+        .chain(tritonbench_t())
+        .collect();
+    let task = all
+        .iter()
+        .find(|t| t.id == id)
+        .with_context(|| format!("no task `{id}` (see `repro tasks`)"))?;
+    let spec = gpu(args)?;
+    let cfg = EvalCfg { seed: args.u64_or("seed", 1), ..Default::default() };
+    let shapes = qimeng_mtmc::graph::infer_shapes(&task.graph);
+    let affinity = qimeng_mtmc::gpusim::library_affinity(&task.id);
+    let eager =
+        qimeng_mtmc::gpusim::eager_time_us(&task.graph, &shapes, &spec, affinity);
+    println!("task {} on {} | eager {:.1}us", task.id, spec.name, eager);
+
+    let mut env = qimeng_mtmc::env::OptimEnv::new(
+        task,
+        spec.clone(),
+        qimeng_mtmc::microcode::LlmProfile::get(ProfileId::GeminiPro25),
+        cfg.env.clone(),
+        cfg.seed,
+    );
+    println!("step  0: naive lowering, speedup {:.2}x", env.state.speedup);
+    let mut step = 1;
+    let mut failed: std::collections::HashSet<usize> = Default::default();
+    while !env.state.done {
+        let mask = env.mask();
+        let choice = (0..mask.len() - 1)
+            .filter(|&a| mask[a] && !failed.contains(&a))
+            .filter_map(|a| {
+                let act = qimeng_mtmc::transform::decode_action(a);
+                qimeng_mtmc::transform::apply_action(
+                    &env.state.program, &task.graph, &shapes, &act, &spec, 1.0,
+                )
+                .ok()
+                .map(|p| {
+                    (a, qimeng_mtmc::gpusim::program_time_us(
+                        &p, &task.graph, &shapes, &spec,
+                    ))
+                })
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let Some((a, t_next)) = choice else { break };
+        let t_now = eager / env.state.speedup;
+        if t_next >= t_now * 0.99 {
+            break;
+        }
+        let act = qimeng_mtmc::transform::decode_action(a);
+        let before = env.state.path_hash;
+        let r = env.step(a);
+        if env.state.path_hash == before {
+            failed.insert(a);
+        } else {
+            failed.clear();
+        }
+        println!(
+            "step {step:>2}: {:?} on region {} -> {}, speedup {:.2}x",
+            act.opt,
+            act.region,
+            signal_brief(&r),
+            env.state.speedup
+        );
+        step += 1;
+    }
+    println!("best speedup {:.2}x over eager", env.state.best_speedup);
+    if args.has("show-code") {
+        let lang = if args.get_or("lang", "triton") == "cuda" {
+            TargetLang::Cuda
+        } else {
+            TargetLang::Triton
+        };
+        println!(
+            "\n--- naive ---\n{}",
+            render(&lower_naive(&task.graph), &task.graph, &shapes, lang)
+        );
+        println!(
+            "--- optimized ---\n{}",
+            render(&env.state.best_program, &task.graph, &shapes, lang)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut tasks = suite_tasks(args.get_or("suite", "kb2"))?;
+    if let Some(limit) = args.get("limit") {
+        tasks.truncate(limit.parse()?);
+    }
+    let spec = gpu(args)?;
+    let cfg = EvalCfg { seed: args.u64_or("seed", 0xE7A1), ..Default::default() };
+    let method = match args.get_or("method", "mtmc") {
+        "mtmc" => Method::Mtmc {
+            macro_kind: MacroKind::LearnedOrGreedy {
+                params_path: Some(paths::default_policy_path()),
+            },
+            micro: ProfileId::GeminiPro25,
+        },
+        "greedy" => Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiPro25,
+        },
+        other => Method::Baseline { profile: profile_by_name(other)? },
+    };
+    let r = evaluate(&method, &tasks, &spec, &cfg);
+    let mut t = Table::new(
+        &format!("{} on {} ({})", r.method, r.suite, r.gpu),
+        &["Method", "CallAcc(%)", "ExecAcc(%)", "fast1/fast2(%)", "Mean Speedup"],
+    );
+    t.row(metric_cells(&r, true));
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn profile_by_name(name: &str) -> Result<ProfileId> {
+    use ProfileId::*;
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "gemini-pro" => GeminiPro25,
+        "gemini-flash" => GeminiFlash25,
+        "claude-37" => Claude37Sonnet,
+        "claude-4" => Claude4Sonnet,
+        "o4-mini" => O4Mini,
+        "gpt-4o" => Gpt4o,
+        "deepseek-r1" => DeepSeekR1,
+        "deepseek-v3" => DeepSeekV3,
+        "nemotron" => LlamaNemotron,
+        "qwen3" => Qwen3,
+        "qwen-coder" => QwenCoder32B,
+        "gemini-cli" => GeminiCli,
+        "kevin" => Kevin32B,
+        "kernelllm" => KernelLlm,
+        other => bail!("unknown profile `{other}`"),
+    })
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let n = args
+        .positional
+        .first()
+        .context("table number required (3,4,5,6,7)")?;
+    println!(
+        "table {n} is regenerated by `cargo bench --bench table{n}` \
+         (see DESIGN.md per-experiment index)"
+    );
+    Ok(())
+}
+
+fn signal_brief(r: &qimeng_mtmc::env::StepResult) -> &'static str {
+    use qimeng_mtmc::env::StepSignal::*;
+    match r.signal {
+        CompileFail => "compile-fail",
+        WrongResult => "wrong-result",
+        Rejected => "rejected",
+        Correct { .. } => "ok",
+        Stop { .. } => "stop",
+    }
+}

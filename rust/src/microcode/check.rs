@@ -1,0 +1,121 @@
+//! Correctness measurement: run the (possibly mutated) program semantics
+//! on the verification graph against the clean reference, exactly how the
+//! benchmarks check generated kernels (random inputs + allclose).
+
+use crate::graph::{eval_graph, eval_graph_with_mutations, Graph};
+use crate::kir::Program;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+pub const VERIF_RTOL: f32 = 1e-3;
+pub const VERIF_ATOL: f32 = 1e-3;
+
+/// Result of a correctness check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CheckOutcome {
+    /// Did not compile — "call" failure in TritonBench terms.
+    CompileFail,
+    /// Ran but produced wrong numbers — "execute" failure.
+    WrongResult,
+    /// Correct.
+    Correct,
+}
+
+/// Draw deterministic verification inputs for a graph.
+pub fn verif_inputs(g: &Graph, rng: &mut Rng) -> Vec<Tensor> {
+    g.input_ids()
+        .iter()
+        .map(|&id| {
+            let shape = g.nodes[id].input_shape.as_ref().unwrap();
+            Tensor::randn(shape, rng)
+        })
+        .collect()
+}
+
+/// Check a program against the clean reference on `trials` random input
+/// draws (benchmarks use several trials to catch data-dependent bugs).
+pub fn check_correct(p: &Program, verif_graph: &Graph, trials: usize,
+                     seed: u64) -> CheckOutcome {
+    if p.compile_broken {
+        return CheckOutcome::CompileFail;
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..trials.max(1) {
+        let inputs = verif_inputs(verif_graph, &mut rng);
+        let clean = eval_graph(verif_graph, &inputs);
+        let got = eval_graph_with_mutations(verif_graph, &inputs, &p.mutations);
+        for (c, g_) in clean.iter().zip(&got) {
+            if !g_.allclose(c, VERIF_RTOL, VERIF_ATOL) {
+                return CheckOutcome::WrongResult;
+            }
+        }
+    }
+    CheckOutcome::Correct
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Mutation, MutationKind, Op};
+    use crate::kir::lower_naive;
+
+    fn demo() -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[6, 8]);
+        let w = g.weight("w", &[8, 4]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        g
+    }
+
+    #[test]
+    fn clean_program_is_correct() {
+        let g = demo();
+        let p = lower_naive(&g);
+        assert_eq!(check_correct(&p, &g, 3, 42), CheckOutcome::Correct);
+    }
+
+    #[test]
+    fn mutated_program_detected() {
+        let g = demo();
+        let mut p = lower_naive(&g);
+        p.mutations.push(Mutation {
+            node: 2,
+            kind: MutationKind::RaceCorruption { scale: 0.5 },
+        });
+        assert_eq!(check_correct(&p, &g, 3, 42), CheckOutcome::WrongResult);
+    }
+
+    #[test]
+    fn compile_broken_detected_first() {
+        let g = demo();
+        let mut p = lower_naive(&g);
+        p.compile_broken = true;
+        assert_eq!(check_correct(&p, &g, 3, 42), CheckOutcome::CompileFail);
+    }
+
+    #[test]
+    fn check_is_deterministic_in_seed() {
+        let g = demo();
+        let mut p = lower_naive(&g);
+        p.mutations.push(Mutation {
+            node: 3,
+            kind: MutationKind::BoundaryDrop { frac: 0.3 },
+        });
+        assert_eq!(check_correct(&p, &g, 2, 1), check_correct(&p, &g, 2, 1));
+    }
+
+    #[test]
+    fn tiny_boundary_bug_still_caught() {
+        // a 2% boundary drop on a small tensor must still flip at least
+        // one element beyond tolerance in 3 trials
+        let g = demo();
+        let mut p = lower_naive(&g);
+        p.mutations.push(Mutation {
+            node: 3,
+            kind: MutationKind::BoundaryDrop { frac: 0.05 },
+        });
+        assert_eq!(check_correct(&p, &g, 3, 9), CheckOutcome::WrongResult);
+    }
+}

@@ -1,0 +1,223 @@
+//! One atomic micro-coding step: the MTMC inference-pipeline inner loop.
+//!
+//! Given the current program and a semantic action, the engine (1) applies
+//! the schedule transform with profile-skill parameters, then (2) draws
+//! from the competence model whether the *implementation* of that change
+//! is faulty — a compile error (program unusable this step) or an
+//! executable semantic bug injected at the transformed node.
+
+use super::profiles::LlmProfile;
+use crate::graph::{Graph, Mutation, MutationKind};
+use crate::kir::{analyze_regions, Program, RegionKind};
+use crate::transform::{apply_action, Action, TransformError};
+use crate::util::Rng;
+
+/// Outcome of one micro-coding step.
+#[derive(Clone, Debug)]
+pub enum StepOutcome {
+    /// Transform applied, implementation correct.
+    Ok(Program),
+    /// Transform applied but the implementation carries a silent bug
+    /// (mutation already attached to the program).
+    Buggy(Program),
+    /// The generated code does not compile; the program state is the
+    /// previous one (callers decide whether to retry).
+    CompileError,
+    /// The action was semantically invalid for this state (the transform
+    /// layer rejected it).
+    Rejected(TransformError),
+}
+
+/// The graph node a buggy implementation of `action` perturbs: a node of
+/// the kernel the region denotes.
+fn bug_site(p: &Program, g: &Graph, action: &Action) -> Option<usize> {
+    let regions = analyze_regions(p, g);
+    let region = regions.get(action.region)?;
+    let k = match region.kind {
+        RegionKind::Kernel { kernel } => kernel,
+        RegionKind::FusionEdge { consumer, .. } => consumer,
+    };
+    p.kernels.get(k).map(|k| *k.nodes.last().unwrap())
+}
+
+/// Draw the concrete bug a faulty implementation introduces; tied to the
+/// action type (tiling bugs are boundary bugs, pipeline bugs are races...).
+pub(crate) fn draw_bug(action: &Action, rng: &mut Rng) -> MutationKind {
+    use crate::transform::OptType::*;
+    match action.opt {
+        TileShared | TileReg => MutationKind::BoundaryDrop {
+            frac: 0.05 + 0.2 * rng.f32(),
+        },
+        PipelineDouble | PipelineAsync => MutationKind::RaceCorruption {
+            scale: 0.05 + 0.4 * rng.f32(),
+        },
+        FuseProducer | FuseEpilogue => {
+            if rng.bool(0.5) {
+                MutationKind::SkippedOp
+            } else {
+                MutationKind::BadAccumInit { bias: 0.1 + rng.f32() }
+            }
+        }
+        Reorder => MutationKind::IndexOffset,
+        Vectorize => MutationKind::BoundaryDrop { frac: 0.02 + 0.1 * rng.f32() },
+    }
+}
+
+/// Execute one micro-coding step.
+///
+/// `cuda`: target language is CUDA (Table 5 ablation) — higher error rates.
+pub fn micro_step(
+    p: &Program,
+    g: &Graph,
+    shapes: &[Vec<usize>],
+    action: &Action,
+    profile: &LlmProfile,
+    spec: &crate::gpusim::GpuSpec,
+    cuda: bool,
+    rng: &mut Rng,
+) -> StepOutcome {
+    // parameter skill with per-step jitter: even strong models sometimes
+    // pick a mediocre tile
+    let quality = (profile.param_skill as f32
+        + 0.25 * (rng.f32() - 0.5))
+        .clamp(0.05, 1.0);
+    let next = match apply_action(p, g, shapes, action, spec, quality) {
+        Ok(next) => next,
+        Err(e) => return StepOutcome::Rejected(e),
+    };
+    let err_p = profile.atomic_step_err(
+        action.opt.implementation_complexity(),
+        g.op_count(),
+        cuda,
+    );
+    if rng.bool(err_p) {
+        if rng.bool(profile.compile_frac) {
+            StepOutcome::CompileError
+        } else {
+            let mut buggy = next;
+            if let Some(site) = bug_site(p, g, action) {
+                buggy.mutations.push(Mutation {
+                    node: site,
+                    kind: draw_bug(action, rng),
+                });
+            }
+            StepOutcome::Buggy(buggy)
+        }
+    } else {
+        StepOutcome::Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GpuSpec;
+    use crate::graph::Op;
+    use crate::kir::lower_naive;
+    use crate::microcode::profiles::ProfileId;
+    use crate::transform::OptType;
+
+    fn setup() -> (Graph, Vec<Vec<usize>>, Program) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[1024, 1024]);
+        let w = g.weight("w", &[1024, 1024]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        let shapes = crate::graph::infer_shapes(&g);
+        let p = lower_naive(&g);
+        (g, shapes, p)
+    }
+
+    #[test]
+    fn strong_model_mostly_succeeds_on_atomic_steps() {
+        let (g, shapes, p) = setup();
+        let profile = LlmProfile::get(ProfileId::GeminiPro25);
+        let spec = GpuSpec::a100();
+        let action = Action { opt: OptType::TileShared, region: 0 };
+        let mut rng = Rng::new(7);
+        let mut ok = 0;
+        let n = 300;
+        for _ in 0..n {
+            match micro_step(&p, &g, &shapes, &action, &profile, &spec, false, &mut rng) {
+                StepOutcome::Ok(next) => {
+                    assert!(next.kernels[0].schedule.block_tile.is_some());
+                    ok += 1;
+                }
+                StepOutcome::Buggy(b) => assert!(!b.mutations.is_empty()),
+                StepOutcome::CompileError => {}
+                StepOutcome::Rejected(e) => panic!("unexpected reject: {e}"),
+            }
+        }
+        assert!(ok as f64 / n as f64 > 0.9, "ok rate {}", ok as f64 / n as f64);
+    }
+
+    #[test]
+    fn weak_model_fails_more() {
+        let (g, shapes, p) = setup();
+        let spec = GpuSpec::a100();
+        let action = Action { opt: OptType::PipelineDouble, region: 0 };
+        // must tile first for pipeline to be legal
+        let tiled = apply_action(&p, &g, &shapes,
+                                 &Action { opt: OptType::TileShared, region: 0 },
+                                 &spec, 1.0).unwrap();
+        let count_fail = |id: ProfileId| -> usize {
+            let profile = LlmProfile::get(id);
+            let mut rng = Rng::new(11);
+            (0..400)
+                .filter(|_| {
+                    !matches!(
+                        micro_step(&tiled, &g, &shapes, &action, &profile,
+                                   &spec, false, &mut rng),
+                        StepOutcome::Ok(_)
+                    )
+                })
+                .count()
+        };
+        let strong = count_fail(ProfileId::GeminiPro25);
+        let weak = count_fail(ProfileId::QwenCoder32B);
+        assert!(weak > strong * 2, "weak {weak} vs strong {strong}");
+    }
+
+    #[test]
+    fn rejected_actions_do_not_consume_luck() {
+        let (g, shapes, p) = setup();
+        let profile = LlmProfile::get(ProfileId::GeminiPro25);
+        let spec = GpuSpec::a100();
+        // vectorize before reorder is invalid on a naive kernel
+        let action = Action { opt: OptType::Vectorize, region: 0 };
+        let mut rng = Rng::new(3);
+        match micro_step(&p, &g, &shapes, &action, &profile, &spec, false, &mut rng) {
+            StepOutcome::Rejected(_) => {}
+            other => panic!("expected rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bugs_attach_to_transformed_kernel() {
+        let (g, shapes, p) = setup();
+        let profile = LlmProfile {
+            atomic_err: 1.0,      // always err
+            compile_frac: 0.0,    // always a silent bug
+            ..LlmProfile::get(ProfileId::Gpt4o)
+        };
+        let spec = GpuSpec::a100();
+        let action = Action { opt: OptType::TileShared, region: 0 };
+        let mut rng = Rng::new(5);
+        // atomic_step_err caps at 0.9, so draw until the error fires
+        for _ in 0..64 {
+            match micro_step(&p, &g, &shapes, &action, &profile, &spec, false,
+                             &mut rng) {
+                StepOutcome::Buggy(b) => {
+                    assert_eq!(b.mutations.len(), 1);
+                    assert!(matches!(b.mutations[0].kind,
+                                     MutationKind::BoundaryDrop { .. }));
+                    return;
+                }
+                StepOutcome::Ok(_) => continue,
+                other => panic!("expected ok/buggy, got {other:?}"),
+            }
+        }
+        panic!("no buggy outcome in 64 draws at p=0.9");
+    }
+}

@@ -1,0 +1,22 @@
+//! Micro-Coding engine: turns semantic optimization actions into concrete
+//! schedule changes, through a per-LLM **competence model** that reproduces
+//! the failure distribution the benchmarks measure (compile errors,
+//! silent numeric bugs, suboptimal parameter choices).
+//!
+//! The engine *actually applies* the transformation ([`crate::transform`])
+//! and *actually injects* executable semantic bugs
+//! ([`crate::graph::Mutation`]) — correctness is then measured by running
+//! the mutated verif graph against the clean one ([`check`]), never
+//! assumed. This is the documented substitution for calling a live LLM
+//! (DESIGN.md): the distribution of outcomes is calibrated per model, but
+//! every outcome is a real program with a real (in)correctness.
+
+mod profiles;
+mod coder;
+mod check;
+mod singlepass;
+
+pub use check::{check_correct, CheckOutcome, VERIF_ATOL, VERIF_RTOL};
+pub use coder::{micro_step, StepOutcome};
+pub use profiles::{LlmProfile, ProfileId};
+pub use singlepass::{single_pass_generate, SinglePassMode, SinglePassOutcome};

@@ -1,0 +1,220 @@
+//! Non-learned policies: random, heuristic-ladder (LLM-as-macro-thinker),
+//! and freeform (no action space) — the Table 7 ablation arms.
+
+use super::{Policy, PolicyDecision};
+use crate::kir::MAX_REGIONS;
+use crate::transform::{OptType, ACTION_DIM, STOP_ACTION};
+use crate::util::Rng;
+
+/// Uniform over valid actions.
+pub struct RandomPolicy;
+
+impl Policy for RandomPolicy {
+    fn act(&mut self, _obs: &[f32], mask: &[bool], rng: &mut Rng)
+           -> PolicyDecision {
+        let valid: Vec<usize> = (0..ACTION_DIM).filter(|&a| mask[a]).collect();
+        let action = *rng.choose(&valid);
+        PolicyDecision {
+            action,
+            logp: -(valid.len() as f32).ln(),
+            value: 0.0,
+        }
+    }
+
+    fn name(&self) -> String {
+        "random".into()
+    }
+}
+
+/// Expert-preference ladder with mistakes: tries opt types in the order a
+/// kernel engineer would (tile the hot nest, fuse, reorder, register-tile,
+/// pipeline, vectorize), preferring region 0 (the hottest). With
+/// probability `mistake_rate` it instead picks uniformly (a misjudged
+/// proposal), and after `patience` successful picks it stops.
+pub struct HeuristicPolicy {
+    pub label: String,
+    pub mistake_rate: f64,
+    pub patience: usize,
+    steps_taken: usize,
+}
+
+impl HeuristicPolicy {
+    pub fn new(label: &str, mistake_rate: f64, patience: usize) -> Self {
+        HeuristicPolicy {
+            label: label.to_string(),
+            mistake_rate,
+            patience,
+            steps_taken: 0,
+        }
+    }
+
+    /// Profile-flavoured proposers used in the Table 7 ablation.
+    pub fn gpt4o() -> Self {
+        Self::new("GPT-4o-proposer", 0.50, 3)
+    }
+    pub fn deepseek_v3() -> Self {
+        Self::new("DS-V3-proposer", 0.40, 4)
+    }
+    pub fn gemini_flash() -> Self {
+        Self::new("GF-2.5-proposer", 0.32, 4)
+    }
+
+    const LADDER: [OptType; 8] = [
+        OptType::TileShared,
+        OptType::FuseEpilogue,
+        OptType::Reorder,
+        OptType::TileReg,
+        OptType::PipelineDouble,
+        OptType::FuseProducer,
+        OptType::PipelineAsync,
+        OptType::Vectorize,
+    ];
+}
+
+impl Policy for HeuristicPolicy {
+    fn act(&mut self, _obs: &[f32], mask: &[bool], rng: &mut Rng)
+           -> PolicyDecision {
+        self.steps_taken += 1;
+        if self.steps_taken > self.patience + 1 && rng.bool(0.5) {
+            return PolicyDecision { action: STOP_ACTION, logp: 0.0, value: 0.0 };
+        }
+        if rng.bool(self.mistake_rate) {
+            let valid: Vec<usize> =
+                (0..ACTION_DIM).filter(|&a| mask[a]).collect();
+            return PolicyDecision {
+                action: *rng.choose(&valid),
+                logp: 0.0,
+                value: 0.0,
+            };
+        }
+        for opt in Self::LADDER {
+            for region in 0..MAX_REGIONS {
+                let idx = opt.index() * MAX_REGIONS + region;
+                if mask[idx] {
+                    return PolicyDecision { action: idx, logp: 0.0, value: 0.0 };
+                }
+            }
+        }
+        PolicyDecision { action: STOP_ACTION, logp: 0.0, value: 0.0 }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// No action space at all: proposals are frequently outside what region
+/// analysis supports — modelled as uniform draws over the *whole* action
+/// set, valid or not (invalid ones are Rejected by the transform layer,
+/// wasting the step, exactly what unconstrained text suggestions do).
+pub struct FreeformPolicy {
+    pub label: String,
+    /// Probability of emitting an arbitrary (possibly invalid) proposal.
+    pub wildness: f64,
+    inner: HeuristicPolicy,
+}
+
+impl FreeformPolicy {
+    pub fn new(label: &str, wildness: f64, mistake_rate: f64) -> Self {
+        FreeformPolicy {
+            label: label.to_string(),
+            wildness,
+            inner: HeuristicPolicy::new(label, mistake_rate, 3),
+        }
+    }
+
+    pub fn gpt4o() -> Self {
+        Self::new("GPT-4o-freeform", 0.65, 0.5)
+    }
+    pub fn deepseek_v3() -> Self {
+        Self::new("DS-V3-freeform", 0.55, 0.4)
+    }
+    pub fn gemini_flash() -> Self {
+        Self::new("GF-2.5-freeform", 0.45, 0.32)
+    }
+}
+
+impl Policy for FreeformPolicy {
+    fn act(&mut self, obs: &[f32], mask: &[bool], rng: &mut Rng)
+           -> PolicyDecision {
+        if rng.bool(self.wildness) {
+            // unconstrained suggestion: ignores the mask entirely
+            PolicyDecision {
+                action: rng.below(ACTION_DIM),
+                logp: 0.0,
+                value: 0.0,
+            }
+        } else {
+            self.inner.act(obs, mask, rng)
+        }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_with(valid: &[usize]) -> Vec<bool> {
+        let mut m = vec![false; ACTION_DIM];
+        for &v in valid {
+            m[v] = true;
+        }
+        m[STOP_ACTION] = true;
+        m
+    }
+
+    #[test]
+    fn random_respects_mask() {
+        let mut p = RandomPolicy;
+        let mask = mask_with(&[3, 17]);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let d = p.act(&[], &mask, &mut rng);
+            assert!(mask[d.action]);
+        }
+    }
+
+    #[test]
+    fn heuristic_prefers_tiling_first() {
+        let mut p = HeuristicPolicy::new("test", 0.0, 10);
+        // tile_shared region 0 = index 0
+        let mask = mask_with(&[0, 8, 16]);
+        let mut rng = Rng::new(2);
+        let d = p.act(&[], &mask, &mut rng);
+        assert_eq!(d.action, 0);
+    }
+
+    #[test]
+    fn heuristic_eventually_stops() {
+        let mut p = HeuristicPolicy::new("test", 0.0, 2);
+        let mask = mask_with(&[0]);
+        let mut rng = Rng::new(3);
+        let mut stopped = false;
+        for _ in 0..50 {
+            if p.act(&[], &mask, &mut rng).action == STOP_ACTION {
+                stopped = true;
+                break;
+            }
+        }
+        assert!(stopped);
+    }
+
+    #[test]
+    fn freeform_emits_invalid_proposals() {
+        let mut p = FreeformPolicy::new("t", 1.0, 0.0);
+        let mask = mask_with(&[0]);
+        let mut rng = Rng::new(4);
+        let mut hit_invalid = false;
+        for _ in 0..100 {
+            let d = p.act(&[], &mask, &mut rng);
+            if !mask[d.action] {
+                hit_invalid = true;
+            }
+        }
+        assert!(hit_invalid, "freeform never left the valid set");
+    }
+}

@@ -1,0 +1,39 @@
+//! Macro-Thinking policies.
+//!
+//! - [`PjrtPolicy`] — the learned policy: featurized observation through
+//!   the AOT-compiled L2 network (Pallas kernels inside) via PJRT. This is
+//!   the paper's RL-finetuned lightweight LLM.
+//! - [`RandomPolicy`] — uniform over valid actions (Table 7 "random").
+//! - [`HeuristicPolicy`] — an expert-preference ladder with a per-model
+//!   mistake rate: what a *prompted* general LLM does when asked to pick
+//!   the next optimization within the structured action space (Table 7
+//!   "w/o policy w/ AS").
+//! - [`FreeformPolicy`] — proposals unconstrained by the action space,
+//!   frequently invalid/unimplementable (Table 7 "w/o policy w/o AS").
+
+mod kinds;
+mod pjrt;
+
+pub use kinds::{FreeformPolicy, HeuristicPolicy, RandomPolicy};
+pub use pjrt::PjrtPolicy;
+
+use crate::util::Rng;
+
+/// One policy decision.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyDecision {
+    pub action: usize,
+    /// Behaviour log-probability of the chosen action (0.0 for
+    /// non-probabilistic policies).
+    pub logp: f32,
+    /// Value estimate (0.0 for policies without a critic).
+    pub value: f32,
+}
+
+/// A Macro-Thinking decision maker.
+pub trait Policy {
+    /// Choose an action given the observation and validity mask.
+    fn act(&mut self, obs: &[f32], mask: &[bool], rng: &mut Rng)
+           -> PolicyDecision;
+    fn name(&self) -> String;
+}

@@ -1,0 +1,51 @@
+//! The learned policy: L2 network via PJRT, greedy-or-sample decoding.
+
+use super::{Policy, PolicyDecision};
+use crate::runtime::{ParamSet, PjrtRuntime};
+use crate::util::Rng;
+
+/// Learned Macro-Thinking policy backed by the `policy_fwd_b1` artifact.
+pub struct PjrtPolicy<'r> {
+    pub rt: &'r PjrtRuntime,
+    pub params: ParamSet,
+    /// Sample from the categorical (training/exploration) vs argmax
+    /// (evaluation) decoding.
+    pub sample: bool,
+    pub label: String,
+}
+
+impl<'r> PjrtPolicy<'r> {
+    pub fn new(rt: &'r PjrtRuntime, params: ParamSet, sample: bool) -> Self {
+        PjrtPolicy { rt, params, sample, label: "mtmc-policy".into() }
+    }
+}
+
+impl Policy for PjrtPolicy<'_> {
+    fn act(&mut self, obs: &[f32], mask: &[bool], rng: &mut Rng)
+           -> PolicyDecision {
+        let mask_f: Vec<f32> =
+            mask.iter().map(|&m| if m { 1.0 } else { 0.0 }).collect();
+        let (logp, value) = self
+            .rt
+            .fwd_b1(&self.params, obs, &mask_f)
+            .expect("policy forward failed");
+        let action = if self.sample {
+            rng.categorical_logp(&logp)
+        } else {
+            logp.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        debug_assert!(mask[action], "policy sampled a masked action");
+        PolicyDecision { action, logp: logp[action], value }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+// Integration coverage lives in rust/tests/runtime_pjrt.rs (requires
+// artifacts).

@@ -1,0 +1,106 @@
+//! Table formatting for the regenerated paper tables (plain text, aligned
+//! columns — printed by `cargo bench` and the CLI).
+
+use crate::eval::SuiteResult;
+
+/// A simple aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Standard metric row: Accuracy(%), fast1/fast2(%), Mean Speedup.
+pub fn metric_cells(r: &SuiteResult, with_call_acc: bool) -> Vec<String> {
+    let m = &r.metrics;
+    let mut cells = vec![r.method.clone()];
+    if with_call_acc {
+        cells.push(format!("{:.2}", m.call_acc * 100.0));
+    }
+    cells.push(format!("{:.0}", m.exec_acc * 100.0));
+    cells.push(format!("{:.0}/{:.0}", m.fast1 * 100.0, m.fast2 * 100.0));
+    cells.push(format!("{:.2}", m.mean_speedup));
+    cells
+}
+
+/// Write rendered tables to a results file (appended, with a timestamp
+/// marker line the EXPERIMENTS.md references).
+pub fn append_report(path: &std::path::Path, text: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{text}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Acc"]);
+        t.row(vec!["short".into(), "1".into()]);
+        t.row(vec!["a-much-longer-method".into(), "100".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header and rows align on the second column
+        let col = lines[1].find("Acc").unwrap();
+        assert_eq!(lines[3].len() >= col, true);
+        assert!(lines[4].contains("a-much-longer-method"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,208 @@
+//! The PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use super::params::ParamSet;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed artifacts/meta.json.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub num_params: usize,
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    pub fn parse(raw: Json) -> Result<ArtifactMeta> {
+        let cfg = raw.get("config").context("meta.json: no config")?;
+        let g = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(|j| j.as_usize())
+                .with_context(|| format!("meta.json: config.{k}"))
+        };
+        Ok(ArtifactMeta {
+            obs_dim: g("obs_dim")?,
+            act_dim: g("act_dim")?,
+            hidden: g("hidden")?,
+            train_batch: g("train_batch")?,
+            eval_batch: g("eval_batch")?,
+            num_params: raw
+                .get("num_params")
+                .and_then(|j| j.as_usize())
+                .context("meta.json: num_params")?,
+            raw,
+        })
+    }
+}
+
+/// Adam optimizer state + step counter, shaped like the parameters.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub params: ParamSet,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub t: f32,
+}
+
+impl TrainState {
+    pub fn new(params: ParamSet) -> TrainState {
+        let zeros: Vec<Vec<f32>> =
+            params.values.iter().map(|p| vec![0.0; p.len()]).collect();
+        TrainState { m: zeros.clone(), v: zeros, params, t: 0.0 }
+    }
+}
+
+/// One PPO minibatch, row-major.
+pub struct TrainBatch<'a> {
+    pub obs: &'a [f32],      // [B * obs_dim]
+    pub mask: &'a [f32],     // [B * act_dim]
+    pub act: &'a [i32],      // [B]
+    pub old_logp: &'a [f32], // [B]
+    pub adv: &'a [f32],      // [B]
+    pub ret: &'a [f32],      // [B]
+}
+
+/// Compiled artifacts + the CPU PJRT client.
+pub struct PjrtRuntime {
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+fn param_literal(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(values);
+    if shape.len() <= 1 {
+        Ok(lit)
+    } else {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact in `dir` (built by `make
+    /// artifacts`).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("read {dir:?}/meta.json — run `make artifacts`"))?;
+        let meta = ArtifactMeta::parse(
+            Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("{e}"))?,
+        )?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for name in ["policy_fwd_b1", "policy_fwd_b64", "train_step"] {
+            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.insert(name.to_string(), client.compile(&comp)?);
+        }
+        Ok(PjrtRuntime { meta, client, exes })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Policy forward at batch 1 — the macro-thinking request path.
+    /// Returns (logp[act_dim], value).
+    pub fn fwd_b1(&self, params: &ParamSet, obs: &[f32], mask: &[f32])
+                  -> Result<(Vec<f32>, f32)> {
+        let (logp, value) = self.fwd(params, obs, mask, 1, "policy_fwd_b1")?;
+        Ok((logp, value[0]))
+    }
+
+    /// Batched policy forward (batch = meta.eval_batch).
+    pub fn fwd_batch(&self, params: &ParamSet, obs: &[f32], mask: &[f32])
+                     -> Result<(Vec<f32>, Vec<f32>)> {
+        self.fwd(params, obs, mask, self.meta.eval_batch, "policy_fwd_b64")
+    }
+
+    fn fwd(&self, params: &ParamSet, obs: &[f32], mask: &[f32], batch: usize,
+           exe: &str) -> Result<(Vec<f32>, Vec<f32>)> {
+        if obs.len() != batch * self.meta.obs_dim {
+            bail!("obs length {} != {}x{}", obs.len(), batch, self.meta.obs_dim);
+        }
+        if mask.len() != batch * self.meta.act_dim {
+            bail!("mask length {} != {}x{}", mask.len(), batch, self.meta.act_dim);
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(params.values.len() + 2);
+        for i in 0..params.values.len() {
+            args.push(param_literal(&params.values[i], &params.shapes[i])?);
+        }
+        args.push(literal_2d(obs, batch, self.meta.obs_dim)?);
+        args.push(literal_2d(mask, batch, self.meta.act_dim)?);
+        let result = self.exes[exe].execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            bail!("fwd returned {} outputs, expected 2", outs.len());
+        }
+        let logp = outs[0].to_vec::<f32>()?;
+        let value = outs[1].to_vec::<f32>()?;
+        Ok((logp, value))
+    }
+
+    /// One fused PPO+Adam update (batch = meta.train_batch). Returns the
+    /// metrics vector [loss, pg_loss, v_loss, entropy, approx_kl,
+    /// grad_norm] and replaces the train state in place.
+    pub fn train_step(&self, state: &mut TrainState, batch: &TrainBatch)
+                      -> Result<Vec<f32>> {
+        let b = self.meta.train_batch;
+        if batch.act.len() != b {
+            bail!("train batch size {} != {}", batch.act.len(), b);
+        }
+        let np = state.params.values.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * np + 7);
+        for i in 0..np {
+            args.push(param_literal(&state.params.values[i],
+                                    &state.params.shapes[i])?);
+        }
+        for i in 0..np {
+            args.push(param_literal(&state.m[i], &state.params.shapes[i])?);
+        }
+        for i in 0..np {
+            args.push(param_literal(&state.v[i], &state.params.shapes[i])?);
+        }
+        args.push(xla::Literal::scalar(state.t));
+        args.push(literal_2d(batch.obs, b, self.meta.obs_dim)?);
+        args.push(literal_2d(batch.mask, b, self.meta.act_dim)?);
+        args.push(xla::Literal::vec1(batch.act));
+        args.push(xla::Literal::vec1(batch.old_logp));
+        args.push(xla::Literal::vec1(batch.adv));
+        args.push(xla::Literal::vec1(batch.ret));
+        let result = self.exes["train_step"].execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 * np + 1 {
+            bail!("train_step returned {} outputs, expected {}", outs.len(),
+                  3 * np + 1);
+        }
+        for (i, out) in outs.iter().take(np).enumerate() {
+            state.params.values[i] = out.to_vec::<f32>()?;
+        }
+        for (i, out) in outs.iter().skip(np).take(np).enumerate() {
+            state.m[i] = out.to_vec::<f32>()?;
+        }
+        for (i, out) in outs.iter().skip(2 * np).take(np).enumerate() {
+            state.v[i] = out.to_vec::<f32>()?;
+        }
+        state.t += 1.0;
+        let metrics = outs[3 * np].to_vec::<f32>()?;
+        Ok(metrics)
+    }
+}
+
+// PJRT integration tests live in rust/tests/runtime_pjrt.rs (they need
+// `make artifacts` to have run).

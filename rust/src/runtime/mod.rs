@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them on the CPU PJRT client. This is the **only** bridge
+//! between the rust coordinator and the L2/L1 model — python never runs
+//! at inference or training time.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser re-assigns ids (see /opt/xla-example/README.md).
+
+mod client;
+mod params;
+
+pub use client::{ArtifactMeta, PjrtRuntime, TrainBatch, TrainState};
+pub use params::{load_params, save_params, ParamSet};

@@ -1,0 +1,183 @@
+//! Policy parameter set: shapes from artifacts/meta.json, values owned by
+//! the rust side (initialised here, updated by the train_step artifact),
+//! persisted as a simple binary file.
+
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Named f32 arrays in the exact positional order of the HLO parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Build from meta.json's `param_specs` with policy-style init
+    /// (scaled normal for matrices — matching `model.init_params` — zero
+    /// for vectors; the logits head is down-scaled for a near-uniform
+    /// initial policy).
+    pub fn init(meta: &Json, seed: u64) -> Result<ParamSet> {
+        let specs = meta
+            .get("param_specs")
+            .and_then(|j| j.as_arr())
+            .context("meta.json missing param_specs")?;
+        let mut rng = Rng::new(seed);
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut values = Vec::new();
+        for spec in specs {
+            let name = spec.idx(0).and_then(|j| j.as_str())
+                .context("param spec name")?.to_string();
+            let shape: Vec<usize> = spec
+                .idx(1)
+                .and_then(|j| j.as_arr())
+                .context("param spec shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let n: usize = shape.iter().product();
+            let vals = if shape.len() == 2 {
+                let mut scale = (2.0 / shape[0] as f64).sqrt() as f32;
+                if name == "wl" {
+                    scale *= 0.01;
+                }
+                (0..n).map(|_| scale * rng.normal() as f32).collect()
+            } else {
+                vec![0.0f32; n]
+            };
+            names.push(name);
+            shapes.push(shape);
+            values.push(vals);
+        }
+        Ok(ParamSet { names, shapes, values })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+}
+
+const MAGIC: &[u8; 8] = b"QMMCPAR1";
+
+/// Persist a parameter set (binary: magic, count, then per-array name
+/// length/name/rank/dims/f32 data, little-endian).
+pub fn save_params(p: &ParamSet, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(p.values.len() as u32).to_le_bytes())?;
+    for i in 0..p.values.len() {
+        let name = p.names[i].as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(p.shapes[i].len() as u32).to_le_bytes())?;
+        for &d in &p.shapes[i] {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let bytes: Vec<u8> = p.values[i]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_params(path: &Path) -> Result<ParamSet> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a parameter file");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+    if count > 1024 {
+        bail!("implausible param count {count}");
+    }
+    let mut out = ParamSet { names: vec![], shapes: vec![], values: vec![] };
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let nlen = u32::from_le_bytes(u32b) as usize;
+        let mut name = vec![0u8; nlen];
+        f.read_exact(&mut name)?;
+        f.read_exact(&mut u32b)?;
+        let rank = u32::from_le_bytes(u32b) as usize;
+        let mut shape = Vec::with_capacity(rank);
+        let mut u64b = [0u8; 8];
+        for _ in 0..rank {
+            f.read_exact(&mut u64b)?;
+            shape.push(u64::from_le_bytes(u64b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0u8; n * 4];
+        f.read_exact(&mut data)?;
+        let values: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.names.push(String::from_utf8(name)?);
+        out.shapes.push(shape);
+        out.values.push(values);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_meta() -> Json {
+        Json::parse(
+            r#"{"param_specs":[["w1",[4,8]],["b1",[8]],["wl",[8,3]]]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_shapes_and_scaling() {
+        let p = ParamSet::init(&demo_meta(), 1).unwrap();
+        assert_eq!(p.names, vec!["w1", "b1", "wl"]);
+        assert_eq!(p.values[0].len(), 32);
+        assert!(p.values[1].iter().all(|&v| v == 0.0));
+        // wl is down-scaled 100x
+        let w1_mag: f32 = p.values[0].iter().map(|v| v.abs()).sum::<f32>() / 32.0;
+        let wl_mag: f32 = p.values[2].iter().map(|v| v.abs()).sum::<f32>() / 24.0;
+        assert!(wl_mag < w1_mag / 10.0);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let a = ParamSet::init(&demo_meta(), 7).unwrap();
+        let b = ParamSet::init(&demo_meta(), 7).unwrap();
+        assert_eq!(a, b);
+        let c = ParamSet::init(&demo_meta(), 8).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = ParamSet::init(&demo_meta(), 3).unwrap();
+        let dir = std::env::temp_dir().join("qimeng_param_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        save_params(&p, &path).unwrap();
+        let q = load_params(&path).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("qimeng_param_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a param file").unwrap();
+        assert!(load_params(&path).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Training corpus: tasks for offline-trajectory generation and PPO,
+//! **disjoint from the benchmark suites** (different seed stream =>
+//! different dimension draws; the paper likewise trains on a curated
+//! non-benchmark corpus). Mix spans all families so the policy sees every
+//! hardware-exploitation pattern.
+
+use super::families::Family;
+use super::kernelbench::{gen_tasks_pub, BENCH_SEED};
+use super::{Suite, Task};
+
+/// Corpus seed stream is offset far from every benchmark seed.
+const CORPUS_SEED: u64 = BENCH_SEED ^ 0x5EED_0DD;
+
+/// Shape signature used for the disjointness filter.
+fn sig(t: &Task) -> (Family, Vec<Vec<usize>>) {
+    (t.family, crate::graph::infer_shapes(&t.graph))
+}
+
+/// Generate `n` training tasks (repeats cycle the mix with new dimension
+/// draws). Any candidate whose (family, shape-signature) collides with a
+/// benchmark task is dropped — the corpus contains **no benchmark
+/// instances**, matching the paper's offline-dataset construction.
+pub fn training_corpus(n: usize) -> Vec<Task> {
+    let mut bench_sigs: Vec<(Family, Vec<Vec<usize>>)> = Vec::new();
+    for t in super::kernelbench_suite() {
+        bench_sigs.push(sig(&t));
+    }
+    for t in super::tritonbench_g().into_iter().chain(super::tritonbench_t()) {
+        bench_sigs.push(sig(&t));
+    }
+    training_corpus_filtered(n, &bench_sigs)
+}
+
+fn training_corpus_filtered(
+    n: usize,
+    bench_sigs: &[(Family, Vec<Vec<usize>>)],
+) -> Vec<Task> {
+    let unit = [
+        (Family::Matmul, 3),
+        (Family::Conv2d, 3),
+        (Family::Softmax, 2),
+        (Family::LayerNorm, 1),
+        (Family::ReduceRow, 1),
+        (Family::Elementwise, 2),
+        (Family::BatchMatmul, 1),
+        (Family::GemmBiasAct, 4),
+        (Family::GemmReduce, 2),
+        (Family::ConvAct, 2),
+        (Family::ConvBnAct, 1),
+        (Family::AddNorm, 2),
+        (Family::GemmSoftmax, 2),
+        (Family::Geglu, 1),
+        (Family::ResidualBlock, 2),
+        (Family::Mlp, 2),
+        (Family::ConvNet, 1),
+        (Family::LstmSeq, 1),
+        (Family::TransformerBlock, 2),
+        (Family::FlashAttention, 2),
+        (Family::FusedLayerNorm, 1),
+        (Family::CrossEntropy, 1),
+        (Family::AdamStep, 1),
+    ]; // 40 per round
+    let mut out = Vec::with_capacity(n);
+    let mut round = 0u64;
+    while out.len() < n {
+        let tasks = gen_tasks_pub(
+            Suite::TrainCorpus,
+            &format!("tc{round}"),
+            &unit,
+            CORPUS_SEED + round * 7919,
+        );
+        for t in tasks {
+            if out.len() >= n {
+                break;
+            }
+            let ts = sig(&t);
+            if bench_sigs.iter().any(|b| *b == ts) {
+                continue; // would duplicate a benchmark instance
+            }
+            out.push(t);
+        }
+        round += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn corpus_disjoint_from_benchmarks_by_dims() {
+        // Same family may appear, but the perf dimension draws must not
+        // reproduce any benchmark task's shape signature.
+        let corpus = training_corpus(80);
+        let bench = crate::tasks::kernelbench_suite();
+        let sig = |t: &Task| -> Vec<Vec<usize>> { infer_shapes(&t.graph) };
+        let bench_sigs: Vec<_> = bench
+            .iter()
+            .map(|t| (t.family, sig(t)))
+            .collect();
+        let mut collisions = 0;
+        for c in &corpus {
+            let cs = sig(c);
+            for (bf, bs) in &bench_sigs {
+                if *bf == c.family && *bs == cs {
+                    collisions += 1;
+                }
+            }
+        }
+        assert_eq!(collisions, 0, "corpus leaked benchmark shapes");
+    }
+
+    #[test]
+    fn corpus_sized_and_valid() {
+        let c = training_corpus(50);
+        assert_eq!(c.len(), 50);
+        for t in &c {
+            assert_eq!(t.suite, Suite::TrainCorpus);
+            t.graph.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn corpus_extends_beyond_one_round() {
+        let c = training_corpus(90);
+        assert_eq!(c.len(), 90);
+        assert!(c.iter().any(|t| t.id.starts_with("tc1_")));
+    }
+}

@@ -1,0 +1,139 @@
+//! KernelBench-like suite generation: 100 L1 singles, 100 L2 fusions,
+//! 50 L3 networks (paper Table 1). Deterministic from fixed seeds; the
+//! training corpus (corpus.rs) uses a disjoint seed stream.
+
+use super::families::{build, Family, Scale};
+use super::{Suite, Task};
+use crate::util::Rng;
+
+/// Seed base for benchmark suites (corpus uses BASE+1 stream).
+pub(crate) const BENCH_SEED: u64 = 0xBEAC4;
+
+/// Shared generator (also used by tritonbench.rs / corpus.rs).
+pub(crate) fn gen_tasks_pub(
+    suite: Suite,
+    prefix: &str,
+    mix: &[(Family, usize)],
+    seed: u64,
+) -> Vec<Task> {
+    gen_tasks(suite, prefix, mix, seed)
+}
+
+fn gen_tasks(
+    suite: Suite,
+    prefix: &str,
+    mix: &[(Family, usize)],
+    seed: u64,
+) -> Vec<Task> {
+    let mut out = Vec::new();
+    let mut master = Rng::new(seed);
+    for &(family, count) in mix {
+        for i in 0..count {
+            let mut r_perf = master.split((i as u64) << 8);
+            let mut r_verif = r_perf.clone();
+            let graph = build(family, Scale::Perf, &mut r_perf);
+            let verif_graph = build(family, Scale::Verif, &mut r_verif);
+            out.push(Task {
+                id: format!("{prefix}_{:03}_{}", out.len(), family.label()),
+                suite,
+                family,
+                graph,
+                verif_graph,
+            });
+        }
+    }
+    out
+}
+
+/// KernelBench level 1/2/3 task lists.
+pub fn kernelbench_level(level: usize) -> Vec<Task> {
+    match level {
+        1 => gen_tasks(
+            Suite::KernelBenchL1,
+            "kb1",
+            &[
+                (Family::Matmul, 18),
+                (Family::BatchMatmul, 8),
+                (Family::Conv2d, 18),
+                (Family::Softmax, 10),
+                (Family::LayerNorm, 8),
+                (Family::BatchNorm, 6),
+                (Family::ReduceRow, 8),
+                (Family::ArgMax, 4),
+                (Family::CumSum, 4),
+                (Family::Elementwise, 8),
+                (Family::MaxPool, 4),
+                (Family::AvgPool, 2),
+                (Family::Transpose, 2),
+            ],
+            BENCH_SEED,
+        ),
+        2 => gen_tasks(
+            Suite::KernelBenchL2,
+            "kb2",
+            &[
+                (Family::GemmBiasAct, 24),
+                (Family::GemmReduce, 14),
+                (Family::ConvAct, 14),
+                (Family::ConvBnAct, 10),
+                (Family::AddNorm, 10),
+                (Family::GemmSoftmax, 10),
+                (Family::Geglu, 8),
+                (Family::ResidualBlock, 10),
+            ],
+            BENCH_SEED + 2,
+        ),
+        3 => gen_tasks(
+            Suite::KernelBenchL3,
+            "kb3",
+            &[
+                (Family::Mlp, 10),
+                (Family::ConvNet, 10),
+                (Family::LstmSeq, 8),
+                (Family::TransformerBlock, 8),
+                (Family::MiniGpt, 8),
+                (Family::VitBlock, 6),
+            ],
+            BENCH_SEED + 3,
+        ),
+        _ => panic!("KernelBench has levels 1-3"),
+    }
+}
+
+/// All 250 KernelBench tasks.
+pub fn kernelbench_suite() -> Vec<Task> {
+    let mut v = kernelbench_level(1);
+    v.extend(kernelbench_level(2));
+    v.extend(kernelbench_level(3));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = kernelbench_level(1);
+        let b = kernelbench_level(1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.graph.nodes.len(), y.graph.nodes.len());
+        }
+    }
+
+    #[test]
+    fn level_complexity_ordering() {
+        let c1: f64 = kernelbench_level(1).iter().map(|t| t.complexity() as f64).sum::<f64>() / 100.0;
+        let c2: f64 = kernelbench_level(2).iter().map(|t| t.complexity() as f64).sum::<f64>() / 100.0;
+        let c3: f64 = kernelbench_level(3).iter().map(|t| t.complexity() as f64).sum::<f64>() / 50.0;
+        assert!(c1 < c2, "L1 {c1} should be simpler than L2 {c2}");
+        assert!(c2 < c3, "L2 {c2} should be simpler than L3 {c3}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_level_panics() {
+        kernelbench_level(4);
+    }
+}

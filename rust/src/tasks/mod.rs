@@ -1,0 +1,133 @@
+//! Benchmark task suites mirroring the paper's Table 1:
+//!
+//! - KernelBench-like: Level 1 (100 single ops), Level 2 (100 fused
+//!   subgraphs), Level 3 (50 small networks);
+//! - TritonBench-like: G (184 real-world kernels), T (166 PyTorch-aligned
+//!   interface kernels);
+//! - a 200-task *training corpus* disjoint from both (different dimension
+//!   draws and seed stream) used to build the offline RL trees.
+//!
+//! Each [`Task`] carries two graphs with identical topology: the **perf
+//! graph** at paper-scale dimensions (what the analytic GPU cost model
+//! prices) and the **verif graph** at small dimensions (what the
+//! functional executor runs for correctness checks).
+
+mod families;
+mod kernelbench;
+mod tritonbench;
+mod corpus;
+
+pub use families::{Family, Scale};
+pub use corpus::training_corpus;
+pub use kernelbench::{kernelbench_level, kernelbench_suite};
+pub use tritonbench::{tritonbench_g, tritonbench_t};
+
+use crate::graph::Graph;
+
+/// Which suite a task belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Suite {
+    KernelBenchL1,
+    KernelBenchL2,
+    KernelBenchL3,
+    TritonG,
+    TritonT,
+    TrainCorpus,
+}
+
+impl Suite {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Suite::KernelBenchL1 => "KernelBench-L1",
+            Suite::KernelBenchL2 => "KernelBench-L2",
+            Suite::KernelBenchL3 => "KernelBench-L3",
+            Suite::TritonG => "TritonBench-G",
+            Suite::TritonT => "TritonBench-T",
+            Suite::TrainCorpus => "TrainCorpus",
+        }
+    }
+}
+
+/// One benchmark task.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Stable id, e.g. "kb1_017_matmul".
+    pub id: String,
+    pub suite: Suite,
+    pub family: Family,
+    /// Paper-scale graph (costed by gpusim).
+    pub graph: Graph,
+    /// Small-shape twin (executed for correctness).
+    pub verif_graph: Graph,
+}
+
+impl Task {
+    /// Difficulty proxy used by the competence model: op count of the
+    /// graph (L1 ~1-2, L2 ~2-5, L3 tens).
+    pub fn complexity(&self) -> usize {
+        self.graph.op_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+
+    #[test]
+    fn suite_sizes_match_paper() {
+        assert_eq!(kernelbench_level(1).len(), 100);
+        assert_eq!(kernelbench_level(2).len(), 100);
+        assert_eq!(kernelbench_level(3).len(), 50);
+        assert_eq!(tritonbench_g().len(), 184);
+        assert_eq!(tritonbench_t().len(), 166);
+        assert_eq!(training_corpus(200).len(), 200);
+    }
+
+    #[test]
+    fn all_tasks_valid_and_shaped() {
+        let mut all = kernelbench_suite();
+        all.extend(tritonbench_g());
+        all.extend(tritonbench_t());
+        all.extend(training_corpus(40));
+        for t in &all {
+            t.graph.validate().unwrap_or_else(|e| panic!("{}: {e}", t.id));
+            t.verif_graph
+                .validate()
+                .unwrap_or_else(|e| panic!("{}: {e}", t.id));
+            infer_shapes(&t.graph);
+            infer_shapes(&t.verif_graph);
+            assert_eq!(
+                t.graph.nodes.len(),
+                t.verif_graph.nodes.len(),
+                "{}: topology mismatch between perf and verif graphs",
+                t.id
+            );
+        }
+    }
+
+    #[test]
+    fn task_ids_unique() {
+        let mut all = kernelbench_suite();
+        all.extend(tritonbench_g());
+        all.extend(tritonbench_t());
+        let mut ids: Vec<&str> = all.iter().map(|t| t.id.as_str()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate task ids");
+    }
+
+    #[test]
+    fn verif_graphs_are_small() {
+        for t in kernelbench_suite() {
+            let shapes = infer_shapes(&t.verif_graph);
+            let biggest = shapes.iter().map(|s| s.iter().product::<usize>()).max().unwrap();
+            assert!(
+                biggest <= 1 << 16,
+                "{}: verif tensor too big ({biggest})",
+                t.id
+            );
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! TritonBench-like suites: G (184 real-world kernels) and T (166
+//! PyTorch-aligned interface kernels) — paper Table 1's mix
+//! (FlashAttention, BMM, Cumsum / Adam, SGD, BatchNorm, Argmax, ...).
+
+use super::families::Family;
+use super::kernelbench::BENCH_SEED;
+use super::{Suite, Task};
+
+fn gen(suite: Suite, prefix: &str, mix: &[(Family, usize)], seed: u64) -> Vec<Task> {
+    // reuse the kernelbench generator machinery
+    super::kernelbench::gen_tasks_pub(suite, prefix, mix, seed)
+}
+
+/// TRITONBENCH-G: 184 real-world cases.
+pub fn tritonbench_g() -> Vec<Task> {
+    gen(
+        Suite::TritonG,
+        "tbg",
+        &[
+            (Family::FlashAttention, 28),
+            (Family::BatchMatmul, 22),
+            (Family::CumSum, 16),
+            (Family::GemmSoftmax, 18),
+            (Family::Geglu, 16),
+            (Family::FusedLayerNorm, 20),
+            (Family::CrossEntropy, 16),
+            (Family::SoftmaxBwdish, 12),
+            (Family::ResidualBlock, 12),
+            (Family::GemmBiasAct, 14),
+            (Family::Matmul, 10),
+        ],
+        BENCH_SEED + 10,
+    )
+}
+
+/// TRITONBENCH-T: 166 PyTorch-aligned interface kernels.
+pub fn tritonbench_t() -> Vec<Task> {
+    gen(
+        Suite::TritonT,
+        "tbt",
+        &[
+            (Family::AdamStep, 20),
+            (Family::SgdStep, 16),
+            (Family::BatchNorm, 18),
+            (Family::ArgMax, 14),
+            (Family::Softmax, 18),
+            (Family::LayerNorm, 16),
+            (Family::ReduceRow, 16),
+            (Family::Elementwise, 20),
+            (Family::Matmul, 14),
+            (Family::Conv2d, 14),
+        ],
+        BENCH_SEED + 11,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g_has_real_world_mix() {
+        let g = tritonbench_g();
+        assert_eq!(g.len(), 184);
+        assert!(g.iter().any(|t| t.family == Family::FlashAttention));
+        assert!(g.iter().all(|t| t.suite == Suite::TritonG));
+    }
+
+    #[test]
+    fn t_has_pytorch_aligned_mix() {
+        let t = tritonbench_t();
+        assert_eq!(t.len(), 166);
+        assert!(t.iter().any(|t| t.family == Family::AdamStep));
+        assert!(t.iter().all(|t| t.suite == Suite::TritonT));
+    }
+}

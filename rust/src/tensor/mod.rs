@@ -1,0 +1,10 @@
+//! Dense f32 tensor substrate: the functional executor under the operator
+//! graph and the micro-coded kernels. Keeps everything row-major and
+//! f32 (the simulator's correctness checks are tolerance-based, so a single
+//! dtype suffices; the *performance* dtype story lives in `gpusim`).
+
+mod core;
+mod ops;
+
+pub use core::Tensor;
+pub use ops::*;

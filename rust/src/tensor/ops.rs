@@ -1,0 +1,555 @@
+//! Operator kernels over [`Tensor`]: the reference numerics for every op in
+//! the task graphs ("PyTorch Eager" semantics in the simulator). All are
+//! straightforward, allocation-per-op implementations — *clarity over
+//! speed*; the hot paths of the coordinator never run these on large
+//! shapes (correctness checks use small verification shapes).
+
+use super::Tensor;
+
+// ------------------------------------------------------------ elementwise
+
+pub fn relu(x: &Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+pub fn gelu(x: &Tensor) -> Tensor {
+    // tanh approximation (matches PyTorch's default gelu closely enough
+    // for 1e-4 tolerances on the verification shapes)
+    x.map(|v| {
+        0.5 * v * (1.0 + ((0.7978845608 * (v + 0.044715 * v * v * v)) as f32).tanh())
+    })
+}
+
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    x.map(|v| 1.0 / (1.0 + (-v).exp()))
+}
+
+pub fn tanh_t(x: &Tensor) -> Tensor {
+    x.map(f32::tanh)
+}
+
+pub fn exp_t(x: &Tensor) -> Tensor {
+    x.map(f32::exp)
+}
+
+pub fn scale(x: &Tensor, s: f32) -> Tensor {
+    x.map(|v| v * s)
+}
+
+/// Broadcast binary op. Supports numpy-style right-aligned broadcasting.
+pub fn binary_bcast(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    if a.shape() == b.shape() {
+        return a.zip(b, f);
+    }
+    let rank = a.rank().max(b.rank());
+    let pad = |s: &[usize]| -> Vec<usize> {
+        let mut v = vec![1; rank - s.len()];
+        v.extend_from_slice(s);
+        v
+    };
+    let sa = pad(a.shape());
+    let sb = pad(b.shape());
+    let mut out_shape = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let (da, db) = (sa[i], sb[i]);
+        assert!(
+            da == db || da == 1 || db == 1,
+            "broadcast mismatch {:?} vs {:?}",
+            a.shape(),
+            b.shape()
+        );
+        out_shape.push(da.max(db));
+    }
+    let mut out = Tensor::zeros(&out_shape);
+    let n = out.len();
+    let mut idx = vec![0usize; rank];
+    for lin in 0..n {
+        // decode multi-index
+        let mut rem = lin;
+        for d in (0..rank).rev() {
+            idx[d] = rem % out_shape[d];
+            rem /= out_shape[d];
+        }
+        let off = |s: &[usize]| -> usize {
+            let mut o = 0;
+            for d in 0..rank {
+                let i = if s[d] == 1 { 0 } else { idx[d] };
+                o = o * s[d] + i;
+            }
+            o
+        };
+        out.data_mut()[lin] = f(a.data()[off(&sa)], b.data()[off(&sb)]);
+    }
+    out
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_bcast(a, b, |x, y| x + y)
+}
+
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_bcast(a, b, |x, y| x - y)
+}
+
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_bcast(a, b, |x, y| x * y)
+}
+
+pub fn div(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_bcast(a, b, |x, y| x / y)
+}
+
+pub fn maximum(a: &Tensor, b: &Tensor) -> Tensor {
+    binary_bcast(a, b, f32::max)
+}
+
+// --------------------------------------------------------------- matmul
+
+/// 2-D matmul: [m,k] @ [k,n] -> [m,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner-dim mismatch");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        for p in 0..k {
+            let av = ad[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Batched matmul: [b,m,k] @ [b,k,n] -> [b,m,n].
+pub fn bmm(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 3);
+    assert_eq!(b.rank(), 3);
+    let (bs, m, k) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+    assert_eq!(b.shape()[0], bs);
+    assert_eq!(b.shape()[1], k);
+    let n = b.shape()[2];
+    let mut out = Tensor::zeros(&[bs, m, n]);
+    for bi in 0..bs {
+        let asl = Tensor::new(&[m, k], a.data()[bi * m * k..(bi + 1) * m * k].to_vec());
+        let bsl = Tensor::new(&[k, n], b.data()[bi * k * n..(bi + 1) * k * n].to_vec());
+        let o = matmul(&asl, &bsl);
+        out.data_mut()[bi * m * n..(bi + 1) * m * n].copy_from_slice(o.data());
+    }
+    out
+}
+
+/// 2-D transpose.
+pub fn transpose2(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            out.data_mut()[j * m + i] = a.data()[i * n + j];
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------------- conv
+
+/// conv2d NCHW: x[n,c,h,w] * w[o,c,kh,kw] -> [n,o,h',w'], stride/pad.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (oc, c2, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(c, c2, "conv channel mismatch");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    for ni in 0..n {
+        for oi in 0..oc {
+            for yi in 0..oh {
+                for xi in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..c {
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let sy = yi * stride + ky;
+                                let sx = xi * stride + kx;
+                                if sy < pad || sx < pad {
+                                    continue;
+                                }
+                                let (sy, sx) = (sy - pad, sx - pad);
+                                if sy >= h || sx >= wd {
+                                    continue;
+                                }
+                                acc += x.at(&[ni, ci, sy, sx])
+                                    * w.at(&[oi, ci, ky, kx]);
+                            }
+                        }
+                    }
+                    out.set(&[ni, oi, yi, xi], acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2-D max pooling NCHW.
+pub fn maxpool2d(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for yi in 0..oh {
+                for xi in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            m = m.max(x.at(&[ni, ci, yi * stride + ky, xi * stride + kx]));
+                        }
+                    }
+                    out.set(&[ni, ci, yi, xi], m);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool NCHW -> [n, c].
+pub fn global_avgpool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let mut out = Tensor::zeros(&[n, c]);
+    for ni in 0..n {
+        for ci in 0..c {
+            let mut s = 0.0;
+            for yi in 0..h {
+                for xi in 0..w {
+                    s += x.at(&[ni, ci, yi, xi]);
+                }
+            }
+            out.set(&[ni, ci], s / (h * w) as f32);
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------- reductions
+
+/// Reduce over the last axis. kind: "sum" | "max" | "mean" | "argmax".
+pub fn reduce_last(x: &Tensor, kind: &str) -> Tensor {
+    let rank = x.rank();
+    assert!(rank >= 1);
+    let last = x.shape()[rank - 1];
+    let outer: usize = x.shape()[..rank - 1].iter().product();
+    let mut out = Tensor::zeros(&x.shape()[..rank - 1].to_vec());
+    for i in 0..outer {
+        let row = &x.data()[i * last..(i + 1) * last];
+        let v = match kind {
+            "sum" => row.iter().sum::<f32>(),
+            "mean" => row.iter().sum::<f32>() / last as f32,
+            "max" => row.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+            "argmax" => {
+                let mut bi = 0;
+                let mut bv = f32::NEG_INFINITY;
+                for (j, &val) in row.iter().enumerate() {
+                    if val > bv {
+                        bv = val;
+                        bi = j;
+                    }
+                }
+                bi as f32
+            }
+            _ => panic!("unknown reduce kind {kind}"),
+        };
+        out.data_mut()[i] = v;
+    }
+    out
+}
+
+/// Cumulative sum along the last axis.
+pub fn cumsum_last(x: &Tensor) -> Tensor {
+    let rank = x.rank();
+    let last = x.shape()[rank - 1];
+    let outer: usize = x.shape()[..rank - 1].iter().product();
+    let mut out = x.clone();
+    for i in 0..outer {
+        let row = &mut out.data_mut()[i * last..(i + 1) * last];
+        for j in 1..last {
+            row[j] += row[j - 1];
+        }
+    }
+    out
+}
+
+/// Numerically-stable softmax over the last axis.
+pub fn softmax_last(x: &Tensor) -> Tensor {
+    let rank = x.rank();
+    let last = x.shape()[rank - 1];
+    let outer: usize = x.shape()[..rank - 1].iter().product();
+    let mut out = x.clone();
+    for i in 0..outer {
+        let row = &mut out.data_mut()[i * last..(i + 1) * last];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    out
+}
+
+/// LayerNorm over the last axis (no affine).
+pub fn layernorm_last(x: &Tensor, eps: f32) -> Tensor {
+    let rank = x.rank();
+    let last = x.shape()[rank - 1];
+    let outer: usize = x.shape()[..rank - 1].iter().product();
+    let mut out = x.clone();
+    for i in 0..outer {
+        let row = &mut out.data_mut()[i * last..(i + 1) * last];
+        let mean = row.iter().sum::<f32>() / last as f32;
+        let var = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / last as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+    out
+}
+
+/// BatchNorm (inference) over channel dim of NCHW using given stats.
+pub fn batchnorm2d(x: &Tensor, mean: &Tensor, var: &Tensor, eps: f32) -> Tensor {
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    assert_eq!(mean.len(), c);
+    assert_eq!(var.len(), c);
+    let mut out = x.clone();
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (var.data()[ci] + eps).sqrt();
+            let mu = mean.data()[ci];
+            for yi in 0..h {
+                for xi in 0..w {
+                    let v = out.at(&[ni, ci, yi, xi]);
+                    out.set(&[ni, ci, yi, xi], (v - mu) * inv);
+                }
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------ attention
+
+/// Single-head scaled-dot-product attention: q,k,v are [s, d].
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let d = q.shape()[1] as f32;
+    let scores = scale(&matmul(q, &transpose2(k)), 1.0 / d.sqrt());
+    let probs = softmax_last(&scores);
+    matmul(&probs, v)
+}
+
+/// One LSTM cell step. x:[b,i], h:[b,u], c:[b,u], w_ih:[i,4u], w_hh:[u,4u].
+/// Gate order: i, f, g, o (PyTorch convention). Returns (h', c').
+pub fn lstm_cell(
+    x: &Tensor,
+    h: &Tensor,
+    c: &Tensor,
+    w_ih: &Tensor,
+    w_hh: &Tensor,
+) -> (Tensor, Tensor) {
+    let b = x.shape()[0];
+    let u = h.shape()[1];
+    let gates = add(&matmul(x, w_ih), &matmul(h, w_hh)); // [b, 4u]
+    let mut hn = Tensor::zeros(&[b, u]);
+    let mut cn = Tensor::zeros(&[b, u]);
+    for bi in 0..b {
+        for ui in 0..u {
+            let ig = 1.0 / (1.0 + (-gates.at(&[bi, ui])).exp());
+            let fg = 1.0 / (1.0 + (-gates.at(&[bi, u + ui])).exp());
+            let gg = gates.at(&[bi, 2 * u + ui]).tanh();
+            let og = 1.0 / (1.0 + (-gates.at(&[bi, 3 * u + ui])).exp());
+            let cv = fg * c.at(&[bi, ui]) + ig * gg;
+            cn.set(&[bi, ui], cv);
+            hn.set(&[bi, ui], og * cv.tanh());
+        }
+    }
+    (hn, cn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn bmm_matches_per_slice_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[3, 4, 5], &mut rng);
+        let b = Tensor::randn(&[3, 5, 2], &mut rng);
+        let c = bmm(&a, &b);
+        for bi in 0..3 {
+            let asl = Tensor::new(&[4, 5], a.data()[bi * 20..(bi + 1) * 20].to_vec());
+            let bsl = Tensor::new(&[5, 2], b.data()[bi * 10..(bi + 1) * 10].to_vec());
+            let expect = matmul(&asl, &bsl);
+            let got = Tensor::new(&[4, 2], c.data()[bi * 8..(bi + 1) * 8].to_vec());
+            assert!(got.allclose(&expect, 1e-6, 1e-6));
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[5, 7], &mut rng);
+        assert_eq!(transpose2(&transpose2(&a)), a);
+    }
+
+    #[test]
+    fn broadcast_add_bias() {
+        let x = Tensor::new(&[2, 3], vec![0.; 6]);
+        let b = Tensor::new(&[3], vec![1., 2., 3.]);
+        let y = add(&x, &b);
+        assert_eq!(y.data(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[4, 9], &mut rng);
+        let p = softmax_last(&x);
+        for i in 0..4 {
+            let s: f32 = p.data()[i * 9..(i + 1) * 9].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_on_large_values() {
+        let x = Tensor::new(&[1, 3], vec![1e4, -1e4, 0.0]);
+        let p = softmax_last(&x);
+        assert!(p.data().iter().all(|v| v.is_finite()));
+        assert!((p.data()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv2d_known_3x3() {
+        // 1x1x3x3 input, 1x1x2x2 all-ones filter, stride 1, no pad
+        let x = Tensor::new(&[1, 1, 3, 3], (1..=9).map(|v| v as f32).collect());
+        let w = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let y = conv2d(&x, &w, 1, 0);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[12., 16., 24., 28.]);
+    }
+
+    #[test]
+    fn conv2d_padding_keeps_shape() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[1, 2, 5, 5], &mut rng);
+        let w = Tensor::randn(&[3, 2, 3, 3], &mut rng);
+        let y = conv2d(&x, &w, 1, 1);
+        assert_eq!(y.shape(), &[1, 3, 5, 5]);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::new(&[1, 1, 2, 2], vec![1., 5., 3., 2.]);
+        let y = maxpool2d(&x, 2, 2);
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn reduce_kinds() {
+        let x = Tensor::new(&[2, 3], vec![1., 5., 3., -1., -5., -3.]);
+        assert_eq!(reduce_last(&x, "sum").data(), &[9., -9.]);
+        assert_eq!(reduce_last(&x, "max").data(), &[5., -1.]);
+        assert_eq!(reduce_last(&x, "mean").data(), &[3., -3.]);
+        assert_eq!(reduce_last(&x, "argmax").data(), &[1., 0.]);
+    }
+
+    #[test]
+    fn cumsum_last_axis() {
+        let x = Tensor::new(&[2, 3], vec![1., 2., 3., 10., 20., 30.]);
+        assert_eq!(cumsum_last(&x).data(), &[1., 3., 6., 10., 30., 60.]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[3, 16], &mut rng);
+        let y = layernorm_last(&x, 1e-5);
+        for i in 0..3 {
+            let row = &y.data()[i * 16..(i + 1) * 16];
+            let m: f32 = row.iter().sum::<f32>() / 16.0;
+            let v: f32 = row.iter().map(|x| (x - m).powi(2)).sum::<f32>() / 16.0;
+            assert!(m.abs() < 1e-5);
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn attention_uniform_when_scores_equal() {
+        // q orthogonal to all k -> scores 0 -> uniform avg of v rows
+        let q = Tensor::zeros(&[1, 4]);
+        let k = Tensor::new(&[2, 4], vec![1., 0., 0., 0., 0., 1., 0., 0.]);
+        let v = Tensor::new(&[2, 4], vec![2., 0., 0., 0., 0., 4., 0., 0.]);
+        let o = attention(&q, &k, &v);
+        assert!((o.at(&[0, 0]) - 1.0).abs() < 1e-6);
+        assert!((o.at(&[0, 1]) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lstm_cell_gates_behave() {
+        // zero inputs and states -> c' = 0.5*tanh(0)*... = i*g = 0.5*0 = 0
+        let b = 2;
+        let (i, u) = (3, 4);
+        let x = Tensor::zeros(&[b, i]);
+        let h = Tensor::zeros(&[b, u]);
+        let c = Tensor::full(&[b, u], 1.0);
+        let w_ih = Tensor::zeros(&[i, 4 * u]);
+        let w_hh = Tensor::zeros(&[u, 4 * u]);
+        let (hn, cn) = lstm_cell(&x, &h, &c, &w_ih, &w_hh);
+        // f gate = sigmoid(0) = 0.5 -> c' = 0.5
+        assert!(cn.data().iter().all(|&v| (v - 0.5).abs() < 1e-6));
+        // h' = sigmoid(0) * tanh(0.5)
+        let expect = 0.5 * 0.5f32.tanh();
+        assert!(hn.data().iter().all(|&v| (v - expect).abs() < 1e-6));
+    }
+
+    #[test]
+    fn global_avgpool_means() {
+        let x = Tensor::new(&[1, 2, 2, 2], vec![1., 2., 3., 4., 10., 20., 30., 40.]);
+        let y = global_avgpool(&x);
+        assert_eq!(y.data(), &[2.5, 25.0]);
+    }
+}

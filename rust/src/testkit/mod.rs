@@ -1,0 +1,191 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! A [`Gen`] produces random cases from an [`crate::util::Rng`]; [`check`]
+//! runs a property over many cases and, on failure, re-runs a bounded
+//! shrink loop (halving-style simplification via `Shrink`) before
+//! panicking with the minimal counterexample it found.
+//!
+//! Used by `rust/tests/properties.rs` for coordinator invariants (routing,
+//! schedule legality, reward monotonicity, serialization round-trips).
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with env QIMENG_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("QIMENG_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator of random values.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn gen(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Values that know how to produce simpler versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate simplifications, most aggressive first. Default: none.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            let mut minus_last = self.clone();
+            minus_last.pop();
+            out.push(minus_last);
+        }
+        out
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs; shrink on first failure.
+///
+/// Panics with the minimal counterexample (debug-printed) so `cargo test`
+/// reports it like a normal assertion failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: Gen<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let value = gen.gen(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // shrink loop: breadth-limited greedy descent
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in best.shrink() {
+                    budget = budget.saturating_sub(1);
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={seed}, case {case_idx}/{cases}):\n  \
+                 counterexample: {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(1, 64, |r: &mut Rng| r.below(100), |&n| {
+            if n < 100 { Ok(()) } else { Err("oob".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        check(2, 64, |r: &mut Rng| r.below(100), |&n| {
+            if n < 101 && n != 42 && n % 97 != 3 {
+                Ok(())
+            } else {
+                Err("boom".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_usize_descends() {
+        let s = 10usize.shrink();
+        assert!(s.contains(&0) && s.contains(&5) && s.contains(&9));
+    }
+
+    #[test]
+    fn shrink_vec_shortens() {
+        let v = vec![1usize, 2, 3, 4];
+        let s = v.shrink();
+        assert!(s.iter().all(|c| c.len() < v.len()));
+    }
+}

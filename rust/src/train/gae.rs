@@ -1,0 +1,87 @@
+//! Generalised Advantage Estimation over episode buffers.
+
+/// Compute GAE advantages and returns for a flat buffer of transitions.
+/// `dones[i]` marks the *last* step of an episode (no bootstrapping across
+/// episode ends; terminal value is 0 — episodes always end via Stop).
+pub fn compute_gae(rewards: &[f64], values: &[f32], dones: &[bool],
+                   gamma: f64, lam: f64) -> (Vec<f32>, Vec<f32>) {
+    let n = rewards.len();
+    assert_eq!(values.len(), n);
+    assert_eq!(dones.len(), n);
+    let mut adv = vec![0f32; n];
+    let mut ret = vec![0f32; n];
+    let mut last_gae = 0f64;
+    for i in (0..n).rev() {
+        let (next_value, next_nonterminal) = if dones[i] {
+            (0.0, 0.0)
+        } else if i + 1 < n {
+            (values[i + 1] as f64, 1.0)
+        } else {
+            // buffer truncated mid-episode: bootstrap with own value
+            (values[i] as f64, 1.0)
+        };
+        let delta = rewards[i] + gamma * next_value * next_nonterminal
+            - values[i] as f64;
+        last_gae = delta + gamma * lam * next_nonterminal * last_gae;
+        if dones[i] {
+            last_gae = delta;
+        }
+        adv[i] = last_gae as f32;
+        ret[i] = (last_gae + values[i] as f64) as f32;
+    }
+    (adv, ret)
+}
+
+/// In-place advantage normalisation (zero mean, unit std).
+pub fn normalize(adv: &mut [f32]) {
+    let n = adv.len().max(1) as f32;
+    let mean: f32 = adv.iter().sum::<f32>() / n;
+    let var: f32 = adv.iter().map(|a| (a - mean).powi(2)).sum::<f32>() / n;
+    let inv = 1.0 / (var.sqrt() + 1e-8);
+    for a in adv.iter_mut() {
+        *a = (*a - mean) * inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_episode() {
+        let (adv, ret) = compute_gae(&[1.0], &[0.25], &[true], 0.99, 0.95);
+        // terminal: delta = r - v = 0.75
+        assert!((adv[0] - 0.75).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_leakage_across_episodes() {
+        // two one-step episodes: second's reward must not affect first
+        let (adv_a, _) = compute_gae(&[1.0, 100.0], &[0.0, 0.0],
+                                     &[true, true], 0.99, 0.95);
+        let (adv_b, _) = compute_gae(&[1.0, -100.0], &[0.0, 0.0],
+                                     &[true, true], 0.99, 0.95);
+        assert_eq!(adv_a[0], adv_b[0]);
+    }
+
+    #[test]
+    fn discounting_accumulates() {
+        let (adv, _) = compute_gae(&[0.0, 0.0, 1.0], &[0.0, 0.0, 0.0],
+                                   &[false, false, true], 0.9, 1.0);
+        assert!(adv[0] > 0.0 && adv[0] < adv[1] && adv[1] < adv[2]);
+        assert!((adv[2] - 1.0).abs() < 1e-6);
+        assert!((adv[1] - 0.9).abs() < 1e-6);
+        assert!((adv[0] - 0.81).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        normalize(&mut a);
+        let mean: f32 = a.iter().sum::<f32>() / 5.0;
+        let var: f32 = a.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / 5.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,11 @@
+//! PPO training orchestrator (paper §4.2 "Training Methodology"): the
+//! TWOSOME-style action-likelihood policy is optimized with PPO + GAE on
+//! the tree-structured offline environment. The heavy math (loss, grads,
+//! Adam) runs in the AOT-compiled `train_step` artifact; rust owns
+//! rollouts, advantage estimation, batching and logging.
+
+mod gae;
+mod ppo;
+
+pub use gae::compute_gae;
+pub use ppo::{train_ppo, IterLog, PpoCfg};

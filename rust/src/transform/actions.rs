@@ -1,0 +1,122 @@
+//! Discrete action encoding: (opt type, region slot) <-> index.
+
+use crate::kir::MAX_REGIONS;
+
+/// The 8 refined optimization types — Tiling, Fusion, Pipeline, Reorder of
+/// §3.2, each split into the two variants experts actually distinguish,
+/// plus Vectorize ("refines and extends", §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptType {
+    TileShared,
+    TileReg,
+    FuseProducer,
+    FuseEpilogue,
+    PipelineDouble,
+    PipelineAsync,
+    Reorder,
+    Vectorize,
+}
+
+pub const NUM_OPT_TYPES: usize = 8;
+
+/// Total policy action dimension: 8 × 8 + Stop = 65. Must equal the L2
+/// model's `act_dim` (artifacts/meta.json is checked at runtime load).
+pub const ACTION_DIM: usize = NUM_OPT_TYPES * MAX_REGIONS + 1;
+
+/// Index of the terminal Stop action.
+pub const STOP_ACTION: usize = ACTION_DIM - 1;
+
+pub const ALL_OPT_TYPES: [OptType; NUM_OPT_TYPES] = [
+    OptType::TileShared,
+    OptType::TileReg,
+    OptType::FuseProducer,
+    OptType::FuseEpilogue,
+    OptType::PipelineDouble,
+    OptType::PipelineAsync,
+    OptType::Reorder,
+    OptType::Vectorize,
+];
+
+impl OptType {
+    pub fn index(&self) -> usize {
+        ALL_OPT_TYPES.iter().position(|t| t == self).unwrap()
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptType::TileShared => "tile_shared",
+            OptType::TileReg => "tile_reg",
+            OptType::FuseProducer => "fuse_producer",
+            OptType::FuseEpilogue => "fuse_epilogue",
+            OptType::PipelineDouble => "pipeline_double",
+            OptType::PipelineAsync => "pipeline_async",
+            OptType::Reorder => "reorder",
+            OptType::Vectorize => "vectorize",
+        }
+    }
+
+    /// Relative implementation complexity (drives the micro-coder error
+    /// model: pipelining is harder to get right than vectorizing).
+    pub fn implementation_complexity(&self) -> f64 {
+        match self {
+            OptType::TileShared => 1.3,
+            OptType::TileReg => 1.1,
+            OptType::FuseProducer => 1.5,
+            OptType::FuseEpilogue => 1.2,
+            OptType::PipelineDouble => 1.7,
+            OptType::PipelineAsync => 2.0,
+            OptType::Reorder => 1.0,
+            OptType::Vectorize => 0.8,
+        }
+    }
+}
+
+/// A semantic optimization action: what + where.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Action {
+    pub opt: OptType,
+    pub region: usize,
+}
+
+/// Encode to the policy's discrete index (Stop = STOP_ACTION).
+pub fn encode_action(a: &Action) -> usize {
+    a.opt.index() * MAX_REGIONS + a.region
+}
+
+/// Decode a non-Stop index.
+pub fn decode_action(idx: usize) -> Action {
+    assert!(idx < STOP_ACTION, "cannot decode Stop/{idx}");
+    Action { opt: ALL_OPT_TYPES[idx / MAX_REGIONS], region: idx % MAX_REGIONS }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_l2_model() {
+        assert_eq!(ACTION_DIM, 65);
+        assert_eq!(STOP_ACTION, 64);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for idx in 0..STOP_ACTION {
+            let a = decode_action(idx);
+            assert_eq!(encode_action(&a), idx);
+            assert!(a.region < MAX_REGIONS);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn stop_cannot_decode() {
+        decode_action(STOP_ACTION);
+    }
+
+    #[test]
+    fn complexity_ordering_sane() {
+        assert!(OptType::PipelineAsync.implementation_complexity()
+            > OptType::Vectorize.implementation_complexity());
+    }
+}

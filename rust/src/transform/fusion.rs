@@ -1,0 +1,166 @@
+//! FuseProducer / FuseEpilogue: merge two kernels across a dataflow edge,
+//! eliminating the intermediate HBM round-trip.
+
+use super::TransformError;
+use crate::graph::{Graph, OpClass};
+use crate::kir::Program;
+
+/// `producer_mode`: true = FuseProducer (a cheap producer is folded into
+/// the consumer's loop nest, keeping the *consumer's* schedule), false =
+/// FuseEpilogue (the consumer is absorbed after the producer's store,
+/// keeping the *producer's* schedule).
+pub fn check_fuse(p: &Program, g: &Graph, producer: usize, consumer: usize,
+                  producer_mode: bool) -> Result<(), TransformError> {
+    if producer >= p.kernels.len() || consumer >= p.kernels.len() {
+        return Err(TransformError::NotApplicable("stale edge".into()));
+    }
+    if producer == consumer {
+        return Err(TransformError::NotApplicable("self edge".into()));
+    }
+    let pk = &p.kernels[producer];
+    let ck = &p.kernels[consumer];
+    let p_anchor_cls = g.nodes[pk.anchor(g)].op.class();
+    if producer_mode {
+        // folding the producer into the consumer re-computes it per
+        // consumer tile: only cheap (elementwise/movement) producers
+        if !matches!(p_anchor_cls, OpClass::Elementwise | OpClass::Movement) {
+            return Err(TransformError::NotApplicable(
+                "producer fusion requires a cheap producer".into(),
+            ));
+        }
+    } else {
+        // epilogue fusion: every op of the consumer must be epilogue-safe
+        for &n in &ck.nodes {
+            if !g.nodes[n].op.fusible_as_epilogue() {
+                return Err(TransformError::NotApplicable(format!(
+                    "`{}` cannot run as an epilogue",
+                    g.nodes[n].op.mnemonic()
+                )));
+            }
+        }
+    }
+    // the consumer must depend only on the producer among later kernels —
+    // merging must not reorder other dataflow. Since kernels are stored in
+    // topo order and we merge adjacent-in-dataflow kernels, it suffices
+    // that no kernel strictly between them feeds the consumer.
+    let lo = producer.min(consumer);
+    let hi = producer.max(consumer);
+    for mid in lo + 1..hi {
+        let mk = &p.kernels[mid];
+        for &n in &p.kernels[hi].nodes {
+            for &inp in &g.nodes[n].inputs {
+                if mk.nodes.contains(&inp) {
+                    return Err(TransformError::NotApplicable(
+                        "an intervening kernel feeds the consumer".into(),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn fuse(p: &mut Program, producer: usize, consumer: usize,
+            producer_mode: bool) {
+    let (lo, hi) = (producer.min(consumer), producer.max(consumer));
+    let hi_kernel = p.kernels.remove(hi);
+    let lo_kernel = &mut p.kernels[lo];
+    lo_kernel.nodes.extend(hi_kernel.nodes.iter().copied());
+    lo_kernel.nodes.sort_unstable();
+    // schedule of the "dominant" side survives
+    let keep_consumer_schedule = producer_mode;
+    let surviving = if keep_consumer_schedule == (hi == consumer) {
+        // hi side's schedule should survive
+        hi_kernel.schedule
+    } else {
+        lo_kernel.schedule.clone()
+    };
+    lo_kernel.schedule = surviving;
+    lo_kernel.name = format!("{}+{}", lo_kernel.name, hi_kernel.name);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, Graph, Op};
+    use crate::gpusim::{program_time_us, GpuSpec};
+    use crate::kir::lower_naive;
+
+    fn gemm_relu() -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[1024, 1024]);
+        let w = g.weight("w", &[1024, 1024]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        let s = infer_shapes(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn epilogue_fusion_merges_and_validates() {
+        let (g, shapes) = gemm_relu();
+        let mut p = lower_naive(&g);
+        check_fuse(&p, &g, 0, 1, false).unwrap();
+        fuse(&mut p, 0, 1, false);
+        assert_eq!(p.kernels.len(), 1);
+        p.validate(&g).unwrap();
+        let t_fused = program_time_us(&p, &g, &shapes, &GpuSpec::a100());
+        let t_unfused =
+            program_time_us(&lower_naive(&g), &g, &shapes, &GpuSpec::a100());
+        assert!(t_fused < t_unfused);
+    }
+
+    #[test]
+    fn matmul_cannot_be_producer_fused() {
+        let (g, _) = gemm_relu();
+        let p = lower_naive(&g);
+        // producer 0 anchor is a contraction -> producer fusion invalid
+        assert!(check_fuse(&p, &g, 0, 1, true).is_err());
+        // but epilogue fusion of relu into matmul is fine
+        assert!(check_fuse(&p, &g, 0, 1, false).is_ok());
+    }
+
+    #[test]
+    fn producer_fusion_keeps_consumer_schedule() {
+        // relu -> matmul: fold relu into matmul's nest
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[256, 256]);
+        let w = g.weight("w", &[256, 256]);
+        let r = g.op(Op::Relu, &[x]);
+        let mm = g.op(Op::MatMul, &[r, w]);
+        g.mark_output(mm);
+        let mut p = lower_naive(&g);
+        p.kernels[1].schedule.block_tile = Some((64, 64, 16));
+        check_fuse(&p, &g, 0, 1, true).unwrap();
+        fuse(&mut p, 0, 1, true);
+        assert_eq!(p.kernels.len(), 1);
+        assert_eq!(p.kernels[0].schedule.block_tile, Some((64, 64, 16)));
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn epilogue_fusion_keeps_producer_schedule() {
+        let (g, _) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.block_tile = Some((128, 64, 32));
+        fuse(&mut p, 0, 1, false);
+        assert_eq!(p.kernels[0].schedule.block_tile, Some((128, 64, 32)));
+    }
+
+    #[test]
+    fn intervening_dependency_blocks_fusion() {
+        // k0 -> k1 -> k2 and also k0 -> k2: fusing k0 into k2 across k1
+        // must be rejected (k1 feeds k2).
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[64, 64]);
+        let a = g.op(Op::Relu, &[x]);
+        let b = g.op(Op::Tanh, &[a]);
+        let c = g.op(Op::Add, &[a, b]);
+        g.mark_output(c);
+        let p = lower_naive(&g);
+        assert!(check_fuse(&p, &g, 0, 2, true).is_err());
+        // adjacent fusion is fine
+        assert!(check_fuse(&p, &g, 1, 2, true).is_ok());
+    }
+}

@@ -1,0 +1,213 @@
+//! The semantic optimization action space (paper §4.2): 8 refined
+//! optimization types × [`MAX_REGIONS`] candidate code regions + Stop =
+//! 65 discrete actions. Each action *application* is a real schedule
+//! transformation over the kernel IR with validity checking; parameter
+//! choices (tile sizes, stage counts, widths) are derived from the target
+//! GPU spec, degraded by the micro-coder's `quality` skill in [0,1].
+
+mod actions;
+mod tiling;
+mod fusion;
+mod pipeline;
+mod reorder;
+mod vectorize;
+
+pub use actions::{
+    decode_action, encode_action, Action, OptType, ACTION_DIM, NUM_OPT_TYPES,
+    STOP_ACTION,
+};
+
+use crate::gpusim::GpuSpec;
+use crate::graph::Graph;
+use crate::kir::{analyze_regions, Program, Region, RegionKind};
+
+/// Why a transform cannot apply.
+#[derive(thiserror::Error, Debug, Clone, PartialEq)]
+pub enum TransformError {
+    #[error("region slot {0} is empty")]
+    EmptyRegion(usize),
+    #[error("not applicable: {0}")]
+    NotApplicable(String),
+}
+
+/// Validity mask over the full action space for the current program
+/// state. `mask[STOP_ACTION]` is always true.
+pub fn action_mask(p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                   spec: &GpuSpec) -> Vec<bool> {
+    let regions = analyze_regions(p, g);
+    let mut mask = vec![false; ACTION_DIM];
+    mask[STOP_ACTION] = true;
+    for a in 0..STOP_ACTION {
+        let action = decode_action(a);
+        mask[a] = check_action(p, g, shapes, &regions, &action, spec).is_ok();
+    }
+    mask
+}
+
+/// Check whether an action applies (without applying it).
+pub fn check_action(p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                    regions: &[Region], action: &Action,
+                    spec: &GpuSpec) -> Result<(), TransformError> {
+    let region = regions
+        .get(action.region)
+        .ok_or(TransformError::EmptyRegion(action.region))?;
+    match (action.opt, &region.kind) {
+        (OptType::TileShared, RegionKind::Kernel { kernel }) => {
+            tiling::check_tile_shared(p, g, shapes, *kernel, spec)
+        }
+        (OptType::TileReg, RegionKind::Kernel { kernel }) => {
+            tiling::check_tile_reg(p, g, *kernel)
+        }
+        (OptType::FuseProducer, RegionKind::FusionEdge { producer, consumer }) => {
+            fusion::check_fuse(p, g, *producer, *consumer, true)
+        }
+        (OptType::FuseEpilogue, RegionKind::FusionEdge { producer, consumer }) => {
+            fusion::check_fuse(p, g, *producer, *consumer, false)
+        }
+        (OptType::PipelineDouble, RegionKind::Kernel { kernel }) => {
+            pipeline::check_pipeline(p, *kernel, 2, spec)
+        }
+        (OptType::PipelineAsync, RegionKind::Kernel { kernel }) => {
+            pipeline::check_pipeline(p, *kernel, 3, spec)
+        }
+        (OptType::Reorder, RegionKind::Kernel { kernel }) => {
+            reorder::check_reorder(p, *kernel)
+        }
+        (OptType::Vectorize, RegionKind::Kernel { kernel }) => {
+            vectorize::check_vectorize(p, *kernel)
+        }
+        _ => Err(TransformError::NotApplicable(format!(
+            "{:?} does not target {:?}",
+            action.opt, region.kind
+        ))),
+    }
+}
+
+/// Apply an action, producing the next program. `quality` in [0,1] is the
+/// micro-coder's parameter skill (1.0 = ideal parameters).
+pub fn apply_action(p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                    action: &Action, spec: &GpuSpec,
+                    quality: f32) -> Result<Program, TransformError> {
+    let regions = analyze_regions(p, g);
+    check_action(p, g, shapes, &regions, action, spec)?;
+    let region = &regions[action.region];
+    let mut next = p.clone();
+    match (action.opt, &region.kind) {
+        (OptType::TileShared, RegionKind::Kernel { kernel }) => {
+            tiling::tile_shared(&mut next, g, shapes, *kernel, spec, quality)
+        }
+        (OptType::TileReg, RegionKind::Kernel { kernel }) => {
+            tiling::tile_reg(&mut next, *kernel, quality)
+        }
+        (OptType::FuseProducer, RegionKind::FusionEdge { producer, consumer }) => {
+            fusion::fuse(&mut next, *producer, *consumer, true)
+        }
+        (OptType::FuseEpilogue, RegionKind::FusionEdge { producer, consumer }) => {
+            fusion::fuse(&mut next, *producer, *consumer, false)
+        }
+        (OptType::PipelineDouble, RegionKind::Kernel { kernel }) => {
+            pipeline::pipeline(&mut next, *kernel, 2)
+        }
+        (OptType::PipelineAsync, RegionKind::Kernel { kernel }) => {
+            pipeline::pipeline(&mut next, *kernel, 3 + (quality > 0.8) as usize)
+        }
+        (OptType::Reorder, RegionKind::Kernel { kernel }) => {
+            reorder::reorder(&mut next, *kernel, quality)
+        }
+        (OptType::Vectorize, RegionKind::Kernel { kernel }) => {
+            vectorize::vectorize(&mut next, *kernel, quality)
+        }
+        _ => unreachable!("checked above"),
+    }
+    debug_assert_eq!(next.validate(g), Ok(()));
+    Ok(next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Op;
+    use crate::kir::lower_naive;
+
+    fn demo() -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[1024, 1024]);
+        let w = g.weight("w", &[1024, 1024]);
+        let b = g.weight("b", &[1024]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let ba = g.op(Op::BiasAdd, &[mm, b]);
+        let r = g.op(Op::Relu, &[ba]);
+        g.mark_output(r);
+        let shapes = crate::graph::infer_shapes(&g);
+        (g, shapes)
+    }
+
+    #[test]
+    fn mask_has_stop_and_some_actions() {
+        let (g, shapes) = demo();
+        let p = lower_naive(&g);
+        let mask = action_mask(&p, &g, &shapes, &GpuSpec::a100());
+        assert!(mask[STOP_ACTION]);
+        assert!(mask.iter().filter(|&&m| m).count() > 3);
+    }
+
+    #[test]
+    fn applying_every_valid_action_keeps_program_valid() {
+        let (g, shapes) = demo();
+        let p = lower_naive(&g);
+        let spec = GpuSpec::h100();
+        let mask = action_mask(&p, &g, &shapes, &spec);
+        let mut applied = 0;
+        for a in 0..STOP_ACTION {
+            if !mask[a] {
+                continue;
+            }
+            let next = apply_action(&p, &g, &shapes, &decode_action(a), &spec, 1.0)
+                .unwrap_or_else(|e| panic!("action {a}: {e}"));
+            next.validate(&g).unwrap();
+            applied += 1;
+        }
+        assert!(applied >= 3);
+    }
+
+    #[test]
+    fn invalid_action_is_rejected_not_panicking() {
+        let (g, shapes) = demo();
+        let p = lower_naive(&g);
+        let spec = GpuSpec::a100();
+        // PipelineDouble before any tiling must be rejected
+        let regions = analyze_regions(&p, &g);
+        let a = Action { opt: OptType::PipelineDouble, region: 0 };
+        assert!(check_action(&p, &g, &shapes, &regions, &a, &spec).is_err());
+    }
+
+    #[test]
+    fn async_pipeline_gated_on_volta() {
+        let (g, shapes) = demo();
+        let mut p = lower_naive(&g);
+        // tile first so pipelining is otherwise legal
+        p = apply_action(
+            &p, &g, &shapes,
+            &Action { opt: OptType::TileShared, region: 0 },
+            &GpuSpec::v100(), 1.0,
+        )
+        .unwrap();
+        let regions = analyze_regions(&p, &g);
+        let a = Action { opt: OptType::PipelineAsync, region: 0 };
+        assert!(check_action(&p, &g, &shapes, &regions, &a, &GpuSpec::v100()).is_err());
+        assert!(check_action(&p, &g, &shapes, &regions, &a, &GpuSpec::a100()).is_ok());
+    }
+
+    #[test]
+    fn quality_degrades_tile_choice() {
+        let (g, shapes) = demo();
+        let p = lower_naive(&g);
+        let spec = GpuSpec::h100();
+        let a = Action { opt: OptType::TileShared, region: 0 };
+        let good = apply_action(&p, &g, &shapes, &a, &spec, 1.0).unwrap();
+        let bad = apply_action(&p, &g, &shapes, &a, &spec, 0.1).unwrap();
+        let tg = good.kernels[0].schedule.block_tile.unwrap();
+        let tb = bad.kernels[0].schedule.block_tile.unwrap();
+        assert!(tb.0 * tb.1 < tg.0 * tg.1, "bad {tb:?} vs good {tg:?}");
+    }
+}

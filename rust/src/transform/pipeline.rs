@@ -1,0 +1,96 @@
+//! PipelineDouble / PipelineAsync: software-pipeline the staged operand
+//! loads of a tiled kernel (double buffering, then cp.async-style deeper
+//! stages on Ampere+).
+
+use super::TransformError;
+use crate::gpusim::GpuSpec;
+use crate::kir::Program;
+
+pub fn check_pipeline(p: &Program, kernel: usize, target_depth: usize,
+                      spec: &GpuSpec) -> Result<(), TransformError> {
+    let k = &p.kernels[kernel];
+    let s = &k.schedule;
+    if s.block_tile.is_none() {
+        return Err(TransformError::NotApplicable(
+            "nothing to pipeline: no staged (tiled) loads".into(),
+        ));
+    }
+    if target_depth >= 3 && !spec.supports_async_copy() {
+        return Err(TransformError::NotApplicable(format!(
+            "{} has no async-copy path (pre-Ampere)",
+            spec.name
+        )));
+    }
+    if s.pipeline_depth >= target_depth {
+        return Err(TransformError::NotApplicable(format!(
+            "already at pipeline depth {}",
+            s.pipeline_depth
+        )));
+    }
+    // the deeper buffer must still fit in shared memory
+    let smem_at_depth = s.smem_bytes() / s.pipeline_depth.max(1) * target_depth;
+    if smem_at_depth > spec.smem_bytes() {
+        return Err(TransformError::NotApplicable(format!(
+            "depth-{target_depth} staging needs {smem_at_depth}B > {}B smem",
+            spec.smem_bytes()
+        )));
+    }
+    Ok(())
+}
+
+pub fn pipeline(p: &mut Program, kernel: usize, depth: usize) {
+    p.kernels[kernel].schedule.pipeline_depth = depth.max(2).min(4);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Op};
+    use crate::kir::lower_naive;
+
+    fn tiled_program() -> (Graph, Program) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[512, 512]);
+        let w = g.weight("w", &[512, 512]);
+        let m = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(m);
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.block_tile = Some((64, 64, 32));
+        (g, p)
+    }
+
+    #[test]
+    fn requires_tile() {
+        let (g, _) = tiled_program();
+        let p = lower_naive(&g);
+        assert!(check_pipeline(&p, 0, 2, &GpuSpec::a100()).is_err());
+    }
+
+    #[test]
+    fn double_then_async_progression() {
+        let (_g, mut p) = tiled_program();
+        let spec = GpuSpec::a100();
+        check_pipeline(&p, 0, 2, &spec).unwrap();
+        pipeline(&mut p, 0, 2);
+        assert_eq!(p.kernels[0].schedule.pipeline_depth, 2);
+        check_pipeline(&p, 0, 3, &spec).unwrap();
+        pipeline(&mut p, 0, 3);
+        // cannot re-apply at same depth
+        assert!(check_pipeline(&p, 0, 3, &spec).is_err());
+    }
+
+    #[test]
+    fn volta_rejects_async() {
+        let (_g, p) = tiled_program();
+        assert!(check_pipeline(&p, 0, 3, &GpuSpec::v100()).is_err());
+        assert!(check_pipeline(&p, 0, 2, &GpuSpec::v100()).is_ok());
+    }
+
+    #[test]
+    fn smem_budget_enforced() {
+        let (_g, mut p) = tiled_program();
+        // giant tile: (256*128 + 128*256)*4 = 256KB per stage
+        p.kernels[0].schedule.block_tile = Some((256, 256, 128));
+        assert!(check_pipeline(&p, 0, 2, &GpuSpec::v100()).is_err());
+    }
+}

@@ -1,0 +1,71 @@
+//! Reorder: loop interchange for memory-access locality (coalescing).
+
+use super::TransformError;
+use crate::kir::{LoopOrder, Program};
+
+pub fn check_reorder(p: &Program, kernel: usize) -> Result<(), TransformError> {
+    let s = &p.kernels[kernel].schedule;
+    match s.loop_order {
+        LoopOrder::Naive => Ok(()),
+        LoopOrder::Blocked if s.block_tile.is_none() => Ok(()),
+        LoopOrder::Blocked => Err(TransformError::NotApplicable(
+            "tiled kernel is already tile-major; interchange would break \
+             the staging structure"
+                .into(),
+        )),
+        LoopOrder::Coalesced => Err(TransformError::NotApplicable(
+            "already fully coalesced".into(),
+        )),
+    }
+}
+
+/// Interchange to the coalesced order. Low quality lands on the blocked
+/// (partially-coalesced) order instead — a correct but weaker interchange.
+pub fn reorder(p: &mut Program, kernel: usize, quality: f32) {
+    let s = &mut p.kernels[kernel].schedule;
+    s.loop_order = if s.block_tile.is_some() || quality < 0.4 {
+        LoopOrder::Blocked
+    } else {
+        LoopOrder::Coalesced
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Op};
+    use crate::kir::lower_naive;
+
+    fn prog() -> Program {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[512, 512]);
+        let r = g.op(Op::Relu, &[x]);
+        g.mark_output(r);
+        lower_naive(&g)
+    }
+
+    #[test]
+    fn naive_to_coalesced() {
+        let mut p = prog();
+        check_reorder(&p, 0).unwrap();
+        reorder(&mut p, 0, 1.0);
+        assert_eq!(p.kernels[0].schedule.loop_order, LoopOrder::Coalesced);
+        assert!(check_reorder(&p, 0).is_err());
+    }
+
+    #[test]
+    fn tiled_kernel_reorders_to_blocked_only() {
+        let mut p = prog();
+        p.kernels[0].schedule.block_tile = Some((64, 64, 1));
+        p.kernels[0].schedule.loop_order = LoopOrder::Naive;
+        reorder(&mut p, 0, 1.0);
+        assert_eq!(p.kernels[0].schedule.loop_order, LoopOrder::Blocked);
+    }
+
+    #[test]
+    fn low_quality_lands_on_blocked() {
+        let mut p = prog();
+        reorder(&mut p, 0, 0.1);
+        assert_eq!(p.kernels[0].schedule.loop_order, LoopOrder::Blocked);
+    }
+}

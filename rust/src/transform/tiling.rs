@@ -1,0 +1,170 @@
+//! TileShared / TileReg: block-tile a kernel's loop nest for shared-memory
+//! (VMEM on TPU) reuse, then register-block under it.
+
+use super::TransformError;
+use crate::gpusim::GpuSpec;
+use crate::graph::{Graph, OpClass};
+use crate::kir::Program;
+
+/// Candidate block tiles, best-first per smem budget class. (M, N, K).
+const TILE_MENU: &[(usize, usize, usize)] = &[
+    (128, 128, 32),
+    (128, 64, 32),
+    (64, 128, 32),
+    (64, 64, 32),
+    (64, 64, 16),
+    (32, 64, 16),
+    (32, 32, 16),
+    (16, 32, 8),
+];
+
+pub fn check_tile_shared(p: &Program, g: &Graph, _shapes: &[Vec<usize>],
+                         kernel: usize, _spec: &GpuSpec) -> Result<(), TransformError> {
+    let k = &p.kernels[kernel];
+    if k.schedule.block_tile.is_some() {
+        return Err(TransformError::NotApplicable("already block-tiled".into()));
+    }
+    let cls = g.nodes[k.anchor(g)].op.class();
+    if !matches!(cls, OpClass::Contraction | OpClass::Reduction) {
+        return Err(TransformError::NotApplicable(format!(
+            "tiling targets contraction/reduction nests, anchor is {cls:?}"
+        )));
+    }
+    Ok(())
+}
+
+/// Pick a tile: ideal = largest menu entry whose smem footprint (at the
+/// current pipeline depth) keeps >= 2 blocks per SM; `quality` < 1 walks
+/// down the menu (the model chose a legal but under-sized tile).
+pub fn tile_shared(p: &mut Program, g: &Graph, shapes: &[Vec<usize>],
+                   kernel: usize, spec: &GpuSpec, quality: f32) {
+    let anchor = p.kernels[kernel].anchor(g);
+    let cls = g.nodes[anchor].op.class();
+    let out_shape = &shapes[anchor];
+    let ideal_pos = TILE_MENU
+        .iter()
+        .position(|&(m, n, k)| {
+            let smem = (m * k + k * n) * 4;
+            smem * 2 <= spec.smem_bytes()
+        })
+        .unwrap_or(TILE_MENU.len() - 1);
+    // quality walks further down the menu: q=1 -> ideal, q=0 -> +3 entries
+    let degrade = ((1.0 - quality.clamp(0.0, 1.0)) * 3.0).round() as usize;
+    let pos = (ideal_pos + degrade).min(TILE_MENU.len() - 1);
+    let (m, n, k) = TILE_MENU[pos];
+    let tile = if cls == OpClass::Reduction {
+        // reductions tile (rows, cols) — K slot unused; clamp cols to the
+        // reduced extent so the "online" single-pass form is real
+        let cols = out_shape.last().copied().unwrap_or(n).min(1024).max(16);
+        (m, cols.min(n * 4), 1)
+    } else {
+        (m, n, k)
+    };
+    let sched = &mut p.kernels[kernel].schedule;
+    sched.block_tile = Some(tile);
+    // tiling restructures the loops tile-major as a side effect
+    if sched.loop_order == crate::kir::LoopOrder::Naive {
+        sched.loop_order = crate::kir::LoopOrder::Blocked;
+    }
+}
+
+pub fn check_tile_reg(p: &Program, g: &Graph, kernel: usize) -> Result<(), TransformError> {
+    let k = &p.kernels[kernel];
+    if k.schedule.block_tile.is_none() {
+        return Err(TransformError::NotApplicable(
+            "register tiling requires an existing block tile".into(),
+        ));
+    }
+    if k.schedule.reg_tile.is_some() {
+        return Err(TransformError::NotApplicable("already register-tiled".into()));
+    }
+    if g.nodes[k.anchor(g)].op.class() != OpClass::Contraction {
+        return Err(TransformError::NotApplicable(
+            "register tiling pays off on contraction nests only".into(),
+        ));
+    }
+    Ok(())
+}
+
+pub fn tile_reg(p: &mut Program, kernel: usize, quality: f32) {
+    let reg = if quality > 0.66 {
+        (8, 8)
+    } else if quality > 0.33 {
+        (4, 8)
+    } else {
+        (4, 4)
+    };
+    p.kernels[kernel].schedule.reg_tile = Some(reg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, Graph, Op};
+    use crate::kir::lower_naive;
+
+    fn mm() -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[2048, 2048]);
+        let w = g.weight("w", &[2048, 2048]);
+        let m = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(m);
+        let s = infer_shapes(&g);
+        (g, s)
+    }
+
+    #[test]
+    fn tile_fits_smem_budget() {
+        for spec in GpuSpec::all() {
+            let (g, shapes) = mm();
+            let mut p = lower_naive(&g);
+            tile_shared(&mut p, &g, &shapes, 0, &spec, 1.0);
+            let smem = p.kernels[0].schedule.smem_bytes();
+            assert!(
+                smem * 2 <= spec.smem_bytes(),
+                "{}: {smem} bytes won't double-buffer",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn reduction_tiling_clamps_cols() {
+        let mut g = Graph::new("sm");
+        let x = g.input("x", &[4096, 512]);
+        let s = g.op(Op::Softmax, &[x]);
+        g.mark_output(s);
+        let shapes = infer_shapes(&g);
+        let mut p = lower_naive(&g);
+        tile_shared(&mut p, &g, &shapes, 0, &GpuSpec::a100(), 1.0);
+        let t = p.kernels[0].schedule.block_tile.unwrap();
+        assert!(t.1 <= 512);
+        assert_eq!(t.2, 1);
+    }
+
+    #[test]
+    fn reg_tile_requires_block_tile() {
+        let (g, _shapes) = mm();
+        let p = lower_naive(&g);
+        assert!(check_tile_reg(&p, &g, 0).is_err());
+    }
+
+    #[test]
+    fn elementwise_not_tileable() {
+        let mut g = Graph::new("e");
+        let x = g.input("x", &[128, 128]);
+        let r = g.op(Op::Relu, &[x]);
+        g.mark_output(r);
+        let shapes = infer_shapes(&g);
+        let p = lower_naive(&g);
+        assert!(check_tile_shared(&p, &g, &shapes, 0, &GpuSpec::a100()).is_err());
+    }
+
+    #[test]
+    fn tiling_switches_loop_order_to_blocked() {
+        let (g, shapes) = mm();
+        let mut p = lower_naive(&g);
+        tile_shared(&mut p, &g, &shapes, 0, &GpuSpec::h100(), 1.0);
+        assert_eq!(p.kernels[0].schedule.loop_order, crate::kir::LoopOrder::Blocked);
+    }
+}

@@ -1,0 +1,58 @@
+//! Vectorize: widen global loads/stores (float4-style / 128-bit lanes).
+
+use super::TransformError;
+use crate::kir::{LoopOrder, Program};
+
+pub fn check_vectorize(p: &Program, kernel: usize) -> Result<(), TransformError> {
+    let s = &p.kernels[kernel].schedule;
+    if s.vector_width > 1 {
+        return Err(TransformError::NotApplicable("already vectorized".into()));
+    }
+    if s.loop_order == LoopOrder::Naive {
+        return Err(TransformError::NotApplicable(
+            "vector loads need unit-stride innermost accesses: reorder or \
+             tile first"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+pub fn vectorize(p: &mut Program, kernel: usize, quality: f32) {
+    p.kernels[kernel].schedule.vector_width =
+        if quality > 0.5 { 4 } else { 2 };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Op};
+    use crate::kir::lower_naive;
+
+    fn prog() -> Program {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[256, 256]);
+        let r = g.op(Op::Relu, &[x]);
+        g.mark_output(r);
+        lower_naive(&g)
+    }
+
+    #[test]
+    fn needs_non_naive_order() {
+        let mut p = prog();
+        assert!(check_vectorize(&p, 0).is_err());
+        p.kernels[0].schedule.loop_order = LoopOrder::Coalesced;
+        check_vectorize(&p, 0).unwrap();
+        vectorize(&mut p, 0, 1.0);
+        assert_eq!(p.kernels[0].schedule.vector_width, 4);
+        assert!(check_vectorize(&p, 0).is_err());
+    }
+
+    #[test]
+    fn low_quality_narrower_width() {
+        let mut p = prog();
+        p.kernels[0].schedule.loop_order = LoopOrder::Blocked;
+        vectorize(&mut p, 0, 0.2);
+        assert_eq!(p.kernels[0].schedule.vector_width, 2);
+    }
+}

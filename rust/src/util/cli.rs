@@ -1,0 +1,103 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--flag value`
+//! pairs + `--switch` booleans.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: `repro <cmd> [--key value|--switch]...`.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub cmd: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.cmd = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_flags_switches() {
+        // note: a bare token after `--name` is consumed as its value, so
+        // positionals go before switches (documented parser behaviour)
+        let a = parse("eval --suite kernelbench --gpu A100 x.bin --verbose");
+        assert_eq!(a.cmd, "eval");
+        assert_eq!(a.get("suite"), Some("kernelbench"));
+        assert_eq!(a.get("gpu"), Some("A100"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["x.bin"]);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse("train --steps 500 --lr 0.0003");
+        assert_eq!(a.usize_or("steps", 1), 500);
+        assert_eq!(a.f64_or("lr", 1.0), 0.0003);
+        assert_eq!(a.usize_or("missing", 9), 9);
+    }
+
+    #[test]
+    fn empty_is_ok() {
+        let a = parse("");
+        assert_eq!(a.cmd, "");
+    }
+}

@@ -1,0 +1,11 @@
+//! Offline-environment substrates: RNG, JSON, CLI parsing, stats, and a
+//! scoped thread-pool. The vendored crate set has no `rand`/`serde`/`clap`,
+//! so these are implemented in-repo (DESIGN.md system inventory).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod parallel;
+
+pub use rng::Rng;

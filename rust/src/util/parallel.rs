@@ -1,0 +1,68 @@
+//! Scoped parallel map over std threads (tokio unavailable offline; the
+//! coordinator's concurrency needs are data-parallel sweeps, which scoped
+//! threads express directly).
+
+/// Apply `f` to every element of `items` across up to `threads` workers,
+/// preserving order. `f` must be `Sync` (called from many threads).
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = Vec::new();
+    slots.resize_with(items.len(), || None);
+    let slots_ptr = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                let mut guard = slots_ptr.lock().unwrap();
+                guard[i] = Some(r);
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.unwrap()).collect()
+}
+
+/// Default worker count: physical parallelism minus one (leave a core for
+/// the coordinator), at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let items = vec![3u32];
+        assert_eq!(par_map(&items, 4, |i, &x| (i, x)), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = par_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,131 @@
+//! Small statistics helpers used by the eval harness and bench runners:
+//! mean / geomean / percentiles / stddev plus a wall-clock timing helper.
+
+use std::time::Instant;
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Geometric mean of positive values (zeros clamped to `eps`).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let eps = 1e-12;
+    (xs.iter().map(|x| x.max(eps).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear-interpolated percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Timing summary over repeated runs of `f` (used by the in-repo bench
+/// harness — criterion is unavailable offline).
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "iters={} mean={:.3}ms p50={:.3}ms p95={:.3}ms min={:.3}ms",
+            self.iters,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.min_ns / 1e6
+        )
+    }
+}
+
+/// Run `f` repeatedly for at least `min_iters` and ~`budget_ms` total.
+pub fn bench<F: FnMut()>(min_iters: usize, budget_ms: u64, mut f: F) -> BenchStats {
+    // warmup
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || (start.elapsed().as_millis() as u64) < budget_ms
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    BenchStats {
+        iters: samples.len(),
+        mean_ns: mean(&samples),
+        p50_ns: percentile(&samples, 50.0),
+        p95_ns: percentile(&samples, 95.0),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_geomean_percentile() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut n = 0u64;
+        let s = bench(5, 1, || n = n.wrapping_add(1));
+        assert!(s.iters >= 5);
+        assert!(s.mean_ns >= 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Full-pipeline integration: dataset generation → tree replay, and the
+//! headline comparisons the paper's ablations rest on (hierarchical vs
+//! single-pass, action space vs freeform), at test-sized scales.
+
+use qimeng_mtmc::dataset::{generate, load_trajectories, save_trajectories,
+                           DatasetCfg};
+use qimeng_mtmc::env::{EnvConfig, TreeEnv};
+use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
+use qimeng_mtmc::tasks::{kernelbench_level, training_corpus};
+
+#[test]
+fn dataset_roundtrips_and_replays_through_tree_env() {
+    let corpus = training_corpus(3);
+    let cfg = DatasetCfg { per_task: 4, threads: 2, ..Default::default() };
+    let spec = GpuSpec::a100();
+    let (trajs, stats) = generate(&corpus, &spec, ProfileId::GeminiFlash25,
+                                  &cfg);
+    assert_eq!(stats.trajectories, 12);
+
+    let dir = std::env::temp_dir().join("qimeng_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trajs.bin");
+    save_trajectories(&trajs, &path).unwrap();
+    let loaded = load_trajectories(&path).unwrap();
+    assert_eq!(loaded, trajs);
+
+    // replay each trajectory through a fresh TreeEnv with the recorded
+    // seed: rewards and speedups must reproduce exactly
+    for t in &loaded {
+        let task = &corpus[t.task_idx as usize];
+        let mut env = TreeEnv::new(task, spec.clone(),
+                                   LlmProfile::get(ProfileId::GeminiFlash25),
+                                   cfg.env.clone(), t.seed);
+        for (si, step) in t.steps.iter().enumerate() {
+            assert!(!env.env.state.done, "premature done at step {si}");
+            let r = env.step(step.action as usize);
+            assert!(
+                (r.reward - step.reward as f64).abs() < 1e-5,
+                "task {} step {si}: reward {} != recorded {}",
+                task.id, r.reward, step.reward
+            );
+            assert!(
+                (env.env.state.speedup - step.speedup as f64).abs()
+                    < 1e-3 * step.speedup.abs() as f64 + 1e-5,
+                "speedup replay diverged"
+            );
+        }
+        assert!(env.env.state.done, "trajectory under-ran the episode");
+    }
+}
+
+#[test]
+fn hierarchical_beats_single_pass_on_fused_tasks() {
+    // Table 6's core claim at test scale
+    let tasks = kernelbench_level(2)[..12].to_vec();
+    let spec = GpuSpec::a100();
+    let cfg = EvalCfg { threads: 4, ..Default::default() };
+    let ours = evaluate(
+        &Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiFlash25,
+        },
+        &tasks, &spec, &cfg,
+    );
+    let no_hier = evaluate(&Method::MtmcNoHier {
+        micro: ProfileId::GeminiFlash25,
+    }, &tasks, &spec, &cfg);
+    assert!(
+        ours.metrics.exec_acc > no_hier.metrics.exec_acc + 0.15,
+        "ours {:?} vs no-hier {:?}",
+        ours.metrics, no_hier.metrics
+    );
+}
+
+#[test]
+fn action_space_beats_freeform_proposals() {
+    // Table 7's core claim at test scale
+    let tasks = kernelbench_level(2)[..12].to_vec();
+    let spec = GpuSpec::a100();
+    let cfg = EvalCfg { threads: 4, ..Default::default() };
+    let with_as = evaluate(
+        &Method::Mtmc {
+            macro_kind: MacroKind::Heuristic {
+                label: "GF-2.5".into(),
+                mistake_rate: 0.32,
+            },
+            micro: ProfileId::GeminiFlash25,
+        },
+        &tasks, &spec, &cfg,
+    );
+    let without_as = evaluate(
+        &Method::Mtmc {
+            macro_kind: MacroKind::Freeform {
+                label: "GF-2.5".into(),
+                wildness: 0.45,
+                mistake_rate: 0.32,
+            },
+            micro: ProfileId::GeminiFlash25,
+        },
+        &tasks, &spec, &cfg,
+    );
+    assert!(
+        with_as.metrics.mean_speedup > without_as.metrics.mean_speedup,
+        "AS {:?} vs freeform {:?}",
+        with_as.metrics, without_as.metrics
+    );
+}
+
+#[test]
+fn cuda_target_degrades_micro_coding() {
+    // Table 5's mechanism: CUDA error multipliers reduce accuracy
+    let tasks = kernelbench_level(2)[..16].to_vec();
+    let spec = GpuSpec::a100();
+    let triton_cfg = EvalCfg { threads: 4, ..Default::default() };
+    let cuda_cfg = EvalCfg { cuda: true, threads: 4, ..Default::default() };
+    let m = Method::Baseline { profile: ProfileId::DeepSeekV3 };
+    let triton = evaluate(&m, &tasks, &spec, &triton_cfg);
+    let cuda = evaluate(&m, &tasks, &spec, &cuda_cfg);
+    assert!(
+        cuda.metrics.exec_acc <= triton.metrics.exec_acc,
+        "cuda {:?} vs triton {:?}",
+        cuda.metrics, triton.metrics
+    );
+}
+
+#[test]
+fn cross_gpu_consistency_of_mtmc() {
+    // the paper's generalization claim: MTMC stays accurate and >1x on
+    // every platform
+    let tasks = kernelbench_level(2)[..10].to_vec();
+    let cfg = EvalCfg { threads: 4, ..Default::default() };
+    for spec in GpuSpec::all() {
+        let r = evaluate(
+            &Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro: ProfileId::GeminiPro25,
+            },
+            &tasks, &spec, &cfg,
+        );
+        assert!(
+            r.metrics.exec_acc >= 0.8,
+            "{}: acc {:?}", spec.name, r.metrics
+        );
+        assert!(
+            r.metrics.mean_speedup > 0.9,
+            "{}: speedup {:?}", spec.name, r.metrics
+        );
+    }
+}

@@ -1,0 +1,242 @@
+//! Property-based tests (testkit, proptest-style) over coordinator
+//! invariants: schedule legality after arbitrary action sequences, cost
+//! model sanity, reward shaping, serialization round-trips, region
+//! analysis stability.
+
+use qimeng_mtmc::dataset::{load_trajectories, save_trajectories, TrajStep,
+                           Trajectory};
+use qimeng_mtmc::env::{EnvConfig, OptimEnv};
+use qimeng_mtmc::gpusim::{program_time_us, GpuSpec};
+use qimeng_mtmc::graph::infer_shapes;
+use qimeng_mtmc::kir::{analyze_regions, lower_naive, MAX_REGIONS};
+use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
+use qimeng_mtmc::tasks::{kernelbench_suite, Task};
+use qimeng_mtmc::testkit::{check, default_cases, Shrink};
+use qimeng_mtmc::transform::{
+    action_mask, apply_action, decode_action, ACTION_DIM, STOP_ACTION,
+};
+use qimeng_mtmc::util::Rng;
+use qimeng_mtmc::prop_assert;
+
+/// A random (task index, action sequence) pair.
+#[derive(Clone, Debug)]
+struct ActionSeq {
+    task_idx: usize,
+    actions: Vec<usize>,
+    quality_milli: usize, // quality * 1000
+}
+
+impl Shrink for ActionSeq {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.actions.is_empty() {
+            let mut half = self.clone();
+            half.actions.truncate(self.actions.len() / 2);
+            out.push(half);
+            let mut minus = self.clone();
+            minus.actions.pop();
+            out.push(minus);
+        }
+        out
+    }
+}
+
+fn tasks() -> &'static [Task] {
+    use std::sync::OnceLock;
+    static TASKS: OnceLock<Vec<Task>> = OnceLock::new();
+    TASKS.get_or_init(|| {
+        kernelbench_suite().into_iter().step_by(9).collect()
+    })
+}
+
+fn gen_seq(rng: &mut Rng) -> ActionSeq {
+    ActionSeq {
+        task_idx: rng.below(tasks().len()),
+        actions: (0..rng.below(10) + 1)
+            .map(|_| rng.below(ACTION_DIM))
+            .collect(),
+        quality_milli: rng.below(1001),
+    }
+}
+
+#[test]
+fn prop_programs_stay_valid_under_any_action_sequence() {
+    check(101, default_cases(), gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let shapes = infer_shapes(&task.graph);
+        let spec = GpuSpec::a100();
+        let mut p = lower_naive(&task.graph);
+        for &a in &seq.actions {
+            if a >= STOP_ACTION {
+                continue;
+            }
+            if let Ok(next) = apply_action(
+                &p, &task.graph, &shapes, &decode_action(a), &spec,
+                seq.quality_milli as f32 / 1000.0,
+            ) {
+                p = next;
+            }
+        }
+        p.validate(&task.graph).map_err(|e| format!("{}: {e}", task.id))
+    });
+}
+
+#[test]
+fn prop_masked_actions_always_apply_and_unmasked_always_reject() {
+    check(202, 64, gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let shapes = infer_shapes(&task.graph);
+        let spec = GpuSpec::h100();
+        let mut p = lower_naive(&task.graph);
+        // advance a few random valid steps, verifying mask soundness
+        for &a in &seq.actions {
+            let mask = action_mask(&p, &task.graph, &shapes, &spec);
+            let pick = a % STOP_ACTION;
+            let result = apply_action(&p, &task.graph, &shapes,
+                                      &decode_action(pick), &spec, 1.0);
+            prop_assert!(
+                mask[pick] == result.is_ok(),
+                "{}: mask[{pick}]={} but apply {:?}",
+                task.id, mask[pick], result.as_ref().err()
+            );
+            if let Ok(next) = result {
+                p = next;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transforms_never_slow_the_cost_model_catastrophically() {
+    // any legal transform changes time by at most 50x in either direction
+    // (sanity: no overflow/NaN/degenerate pricing)
+    check(303, default_cases(), gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let shapes = infer_shapes(&task.graph);
+        let spec = GpuSpec::v100();
+        let mut p = lower_naive(&task.graph);
+        let mut t_prev = program_time_us(&p, &task.graph, &shapes, &spec);
+        for &a in &seq.actions {
+            if a >= STOP_ACTION {
+                continue;
+            }
+            if let Ok(next) = apply_action(&p, &task.graph, &shapes,
+                                           &decode_action(a), &spec, 0.9) {
+                let t = program_time_us(&next, &task.graph, &shapes, &spec);
+                prop_assert!(t.is_finite() && t > 0.0, "bad time {t}");
+                prop_assert!(
+                    t < t_prev * 50.0 && t > t_prev / 50.0,
+                    "{}: pathological jump {t_prev} -> {t}", task.id
+                );
+                p = next;
+                t_prev = t;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_region_analysis_bounded_and_stable() {
+    check(404, default_cases(), gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let shapes = infer_shapes(&task.graph);
+        let spec = GpuSpec::a100();
+        let mut p = lower_naive(&task.graph);
+        for &a in &seq.actions {
+            let regions = analyze_regions(&p, &task.graph);
+            prop_assert!(regions.len() <= MAX_REGIONS, "too many regions");
+            let again = analyze_regions(&p, &task.graph);
+            prop_assert!(
+                regions.len() == again.len(),
+                "region analysis not deterministic"
+            );
+            if a < STOP_ACTION {
+                if let Ok(next) = apply_action(&p, &task.graph, &shapes,
+                                               &decode_action(a), &spec, 1.0) {
+                    p = next;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_env_episodes_bounded_and_consistent() {
+    check(505, 48, gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let mut env = OptimEnv::new(
+            task,
+            GpuSpec::a100(),
+            LlmProfile::get(ProfileId::GeminiFlash25),
+            EnvConfig::default(),
+            seq.quality_milli as u64,
+        );
+        let mut steps = 0;
+        for &a in seq.actions.iter().cycle().take(env.cfg.max_steps + 2) {
+            if env.state.done {
+                break;
+            }
+            let mask = env.mask();
+            let pick = if mask[a % ACTION_DIM] { a % ACTION_DIM } else { STOP_ACTION };
+            let r = env.step(pick);
+            prop_assert!(r.reward.is_finite(), "reward not finite");
+            steps += 1;
+        }
+        prop_assert!(
+            env.state.done || steps <= env.cfg.max_steps + 2,
+            "episode exceeded bounds"
+        );
+        prop_assert!(
+            env.state.best_speedup >= env.state.speedup * 0.999
+                || env.state.best_speedup > 0.0,
+            "best speedup below current"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trajectory_store_roundtrips() {
+    #[derive(Clone, Debug)]
+    struct TrajVec(Vec<Trajectory>);
+    impl Shrink for TrajVec {
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if !self.0.is_empty() {
+                out.push(TrajVec(self.0[..self.0.len() / 2].to_vec()));
+            }
+            out
+        }
+    }
+    let gen = |rng: &mut Rng| {
+        TrajVec(
+            (0..rng.below(6))
+                .map(|i| Trajectory {
+                    task_idx: rng.below(1000) as u32,
+                    seed: rng.next_u64(),
+                    steps: (0..rng.below(15))
+                        .map(|_| TrajStep {
+                            action: rng.below(ACTION_DIM) as u16,
+                            signal_code: rng.below(5) as u8,
+                            reward: rng.normal_f32(0.0, 1.0),
+                            speedup: rng.f32() * 3.0,
+                        })
+                        .collect(),
+                })
+                .map(|t| t)
+                .collect::<Vec<_>>(),
+        )
+    };
+    let dir = std::env::temp_dir().join("qimeng_prop_store");
+    std::fs::create_dir_all(&dir).unwrap();
+    check(606, 32, gen, |tv: &TrajVec| {
+        let path = dir.join("prop.bin");
+        save_trajectories(&tv.0, &path).map_err(|e| e.to_string())?;
+        let back = load_trajectories(&path).map_err(|e| e.to_string())?;
+        prop_assert!(back == tv.0, "roundtrip mismatch");
+        Ok(())
+    });
+}

@@ -1,0 +1,144 @@
+//! PJRT integration tests: artifacts -> rust runtime -> numbers.
+//! Require `make artifacts` (skipped with a clear message otherwise).
+
+use qimeng_mtmc::env::OBS_DIM;
+use qimeng_mtmc::runtime::{ParamSet, PjrtRuntime, TrainBatch, TrainState};
+use qimeng_mtmc::transform::ACTION_DIM;
+use qimeng_mtmc::util::Rng;
+use std::path::Path;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::load(&dir).expect("artifact load"))
+}
+
+fn params(rt: &PjrtRuntime, seed: u64) -> ParamSet {
+    ParamSet::init(&rt.meta.raw, seed).unwrap()
+}
+
+#[test]
+fn meta_matches_rust_constants() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.meta.obs_dim, OBS_DIM);
+    assert_eq!(rt.meta.act_dim, ACTION_DIM);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn fwd_b1_distribution_is_masked_and_normalised() {
+    let Some(rt) = runtime() else { return };
+    let p = params(&rt, 1);
+    let mut rng = Rng::new(2);
+    let obs: Vec<f32> = (0..OBS_DIM).map(|_| rng.normal() as f32).collect();
+    let mut mask = vec![0.0f32; ACTION_DIM];
+    for i in [0usize, 7, 13, ACTION_DIM - 1] {
+        mask[i] = 1.0;
+    }
+    let (logp, value) = rt.fwd_b1(&p, &obs, &mask).unwrap();
+    assert_eq!(logp.len(), ACTION_DIM);
+    assert!(value.is_finite());
+    // probabilities over the valid set sum to 1
+    let psum: f32 = logp
+        .iter()
+        .zip(&mask)
+        .filter(|(_, &m)| m > 0.0)
+        .map(|(&lp, _)| lp.exp())
+        .sum();
+    assert!((psum - 1.0).abs() < 1e-4, "masked prob mass = {psum}");
+    // masked lanes are un-sampleable
+    for (i, &lp) in logp.iter().enumerate() {
+        if mask[i] == 0.0 {
+            assert!(lp < -1e8, "masked lane {i} has logp {lp}");
+        }
+    }
+}
+
+#[test]
+fn fwd_batch_agrees_with_b1() {
+    let Some(rt) = runtime() else { return };
+    let p = params(&rt, 3);
+    let b = rt.meta.eval_batch;
+    let mut rng = Rng::new(4);
+    let obs: Vec<f32> = (0..b * OBS_DIM).map(|_| rng.normal() as f32).collect();
+    let mask = vec![1.0f32; b * ACTION_DIM];
+    let (logp_b, value_b) = rt.fwd_batch(&p, &obs, &mask).unwrap();
+    for row in [0usize, b / 2, b - 1] {
+        let (logp_1, value_1) = rt
+            .fwd_b1(&p, &obs[row * OBS_DIM..(row + 1) * OBS_DIM],
+                    &mask[row * ACTION_DIM..(row + 1) * ACTION_DIM])
+            .unwrap();
+        for a in 0..ACTION_DIM {
+            let d = (logp_b[row * ACTION_DIM + a] - logp_1[a]).abs();
+            assert!(d < 1e-4, "row {row} action {a} differs by {d}");
+        }
+        assert!((value_b[row] - value_1).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let mut state = TrainState::new(params(&rt, 5));
+    let b = rt.meta.train_batch;
+    let mut rng = Rng::new(6);
+    let obs: Vec<f32> = (0..b * OBS_DIM).map(|_| rng.normal() as f32).collect();
+    let mut mask = vec![1.0f32; b * ACTION_DIM];
+    for i in 0..b {
+        // random sparsity, Stop always valid
+        for a in 0..ACTION_DIM - 1 {
+            if rng.bool(0.4) {
+                mask[i * ACTION_DIM + a] = 0.0;
+            }
+        }
+    }
+    let act: Vec<i32> = (0..b)
+        .map(|i| {
+            (0..ACTION_DIM)
+                .find(|&a| mask[i * ACTION_DIM + a] > 0.0)
+                .unwrap() as i32
+        })
+        .collect();
+    let old_logp: Vec<f32> =
+        (0..b).map(|_| -2.0 + 0.1 * rng.normal() as f32).collect();
+    let adv: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+    let ret: Vec<f32> = (0..b).map(|_| rng.normal() as f32).collect();
+    let batch = TrainBatch {
+        obs: &obs, mask: &mask, act: &act, old_logp: &old_logp,
+        adv: &adv, ret: &ret,
+    };
+    let m0 = rt.train_step(&mut state, &batch).unwrap();
+    let mut last = m0.clone();
+    for _ in 0..8 {
+        last = rt.train_step(&mut state, &batch).unwrap();
+    }
+    assert_eq!(m0.len(), 6);
+    assert!(last[0] < m0[0], "loss did not decrease: {} -> {}", m0[0], last[0]);
+    assert!(state.t > 8.0);
+    for m in &last {
+        assert!(m.is_finite());
+    }
+}
+
+#[test]
+fn macro_thinking_hot_path_under_budget() {
+    // DESIGN.md §Perf: featurize + fwd + decode — fwd_b1 p50 < 5ms hard
+    // bound (target < 1ms; tracked in EXPERIMENTS.md §Perf)
+    let Some(rt) = runtime() else { return };
+    let p = params(&rt, 7);
+    let mut rng = Rng::new(8);
+    let obs: Vec<f32> = (0..OBS_DIM).map(|_| rng.normal() as f32).collect();
+    let mask = vec![1.0f32; ACTION_DIM];
+    let stats = qimeng_mtmc::util::stats::bench(50, 300, || {
+        let (logp, _v) = rt.fwd_b1(&p, &obs, &mask).unwrap();
+        std::hint::black_box(logp);
+    });
+    eprintln!("fwd_b1: {stats}");
+    assert!(
+        stats.p50_ns < 5_000_000.0,
+        "inference step way over budget: {stats}"
+    );
+}
