@@ -1,9 +1,10 @@
 //! Regenerates **Figure 1** (paradigm comparison) as a table: one
-//! representative task per KernelBench level through the four paradigms —
-//! (a) expert libraries (PyTorch Eager), (b) general-purpose LLM,
-//! (c) domain-finetuned LLM, (d) MTMC.
+//! representative task slice per KernelBench level through the four
+//! paradigms — (a) expert libraries (PyTorch Eager), (b) general-purpose
+//! LLM, (c) domain-finetuned LLM, (d) MTMC. The LLM paradigms run as one
+//! [`BatchRunner`] sweep.
 
-use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::eval::{BatchCfg, BatchJob, BatchRunner, MacroKind, Method};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::microcode::ProfileId;
 use qimeng_mtmc::report::{append_report, Table};
@@ -12,11 +13,7 @@ use qimeng_mtmc::tasks::kernelbench_level;
 fn main() {
     let t0 = std::time::Instant::now();
     let spec = GpuSpec::a100();
-    let cfg = EvalCfg::default();
-    let mut table = Table::new(
-        "Figure 1 — kernel generation paradigms (12 tasks/level, A100)",
-        &["Paradigm", "L1 Acc/Speedup", "L2 Acc/Speedup", "L3 Acc/Speedup"],
-    );
+    let runner = BatchRunner::new(BatchCfg::default()).expect("batch runner");
     let paradigms: Vec<(&str, Option<Method>)> = vec![
         ("(a) expert libraries (Eager)", None),
         ("(b) general-purpose LLM (Claude-4)",
@@ -29,15 +26,36 @@ fn main() {
              micro: ProfileId::GeminiPro25,
          })),
     ];
-    for (name, method) in &paradigms {
-        let mut cells = vec![name.to_string()];
-        for level in 1..=3 {
+
+    // one job per (LLM paradigm, level), in paradigm-major order
+    let mut jobs = Vec::new();
+    for (_, method) in &paradigms {
+        let Some(m) = method else { continue };
+        for level in 1..=3usize {
             let tasks: Vec<_> =
                 kernelbench_level(level).into_iter().step_by(8).collect();
-            match method {
-                None => cells.push("100% / 1.00 (def)".into()),
-                Some(m) => {
-                    let r = evaluate(m, &tasks, &spec, &cfg);
+            jobs.push(BatchJob::new(m.clone(), spec.clone(), tasks));
+        }
+    }
+    let results = runner.run(&jobs);
+
+    let mut table = Table::new(
+        "Figure 1 — kernel generation paradigms (12 tasks/level, A100)",
+        &["Paradigm", "L1 Acc/Speedup", "L2 Acc/Speedup", "L3 Acc/Speedup"],
+    );
+    let mut ri = 0usize;
+    for (name, method) in &paradigms {
+        let mut cells = vec![name.to_string()];
+        match method {
+            None => {
+                for _ in 1..=3 {
+                    cells.push("100% / 1.00 (def)".into());
+                }
+            }
+            Some(_) => {
+                for _ in 1..=3 {
+                    let r = &results[ri];
+                    ri += 1;
                     cells.push(format!(
                         "{:.0}% / {:.2}",
                         r.metrics.exec_acc * 100.0,

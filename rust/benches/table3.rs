@@ -2,14 +2,19 @@
 //! execute accuracy, fast_1/fast_2 and mean speedup vs PyTorch Eager,
 //! across V100/A100/H100 and the full method roster.
 //!
+//! The whole gpu × level × method × task sweep runs as one
+//! [`BatchRunner`] unit queue, so workers stay busy across cell
+//! boundaries.
+//!
 //! Env knobs: QIMENG_GPUS="A100" (comma list), QIMENG_LIMIT=20 (tasks per
-//! level), QIMENG_THREADS=N.
+//! level), QIMENG_THREADS=N, QIMENG_JSONL=path (stream per-task records,
+//! enriched with cached eager baselines).
 
-use qimeng_mtmc::eval::{evaluate, table3_methods, EvalCfg};
+use qimeng_mtmc::eval::{roster_sweep, table3_methods, BatchCfg, BatchRunner};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::paths;
 use qimeng_mtmc::report::{append_report, metric_cells, Table};
-use qimeng_mtmc::tasks::kernelbench_level;
+use qimeng_mtmc::tasks::{kernelbench_level, Task};
 
 fn main() {
     let t0 = std::time::Instant::now();
@@ -24,42 +29,65 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(usize::MAX);
-    let mut cfg = EvalCfg::default();
+    let mut batch_cfg = BatchCfg::default();
     if let Ok(t) = std::env::var("QIMENG_THREADS") {
-        cfg.threads = t.parse().unwrap_or(cfg.threads);
+        batch_cfg.threads = t.parse().unwrap_or(batch_cfg.threads);
     }
+    if let Ok(path) = std::env::var("QIMENG_JSONL") {
+        batch_cfg.sink = Some(std::path::PathBuf::from(path));
+    }
+    let runner = BatchRunner::new(batch_cfg).expect("batch runner");
     let params = Some(paths::default_policy_path());
     let methods = table3_methods(params);
 
-    let mut report = String::new();
+    let mut blocks: Vec<(GpuSpec, Vec<Task>)> = Vec::new();
+    let mut cells = Vec::new(); // (spec name, level, #tasks) per job block
     for spec in &gpus {
         for level in 1..=3usize {
             let mut tasks = kernelbench_level(level);
             tasks.truncate(limit);
-            let mut table = Table::new(
-                &format!(
-                    "Table 3 — KernelBench Level {level} on {} ({} tasks)",
-                    spec.name,
-                    tasks.len()
-                ),
-                &["Method", "Accuracy(%)", "fast1/fast2(%)", "Mean Speedup"],
-            );
-            for method in &methods {
-                let r = evaluate(method, &tasks, spec, &cfg);
-                table.row(metric_cells(&r, false));
-            }
-            let text = table.render();
-            println!("{text}");
-            report.push_str(&text);
-            report.push('\n');
+            cells.push((spec.name, level, tasks.len()));
+            blocks.push((spec.clone(), tasks));
         }
+    }
+    let jobs = roster_sweep(&methods, &blocks);
+    let results = runner.run(&jobs);
+
+    let mut report = String::new();
+    for (ci, (gpu_name, level, n_tasks)) in cells.iter().enumerate() {
+        let mut table = Table::new(
+            &format!(
+                "Table 3 — KernelBench Level {level} on {gpu_name} \
+                 ({n_tasks} tasks)"
+            ),
+            &["Method", "Accuracy(%)", "fast1/fast2(%)", "Mean Speedup"],
+        );
+        for r in &results[ci * methods.len()..(ci + 1) * methods.len()] {
+            table.row(metric_cells(r, false));
+        }
+        let text = table.render();
+        println!("{text}");
+        report.push_str(&text);
+        report.push('\n');
     }
     println!(
         "paper reference (H100, Gemini-2.5-Pro + Ours): L1 100% acc, 67/13 \
          fast1/fast2; L2 99%, 86/12; L3 70%, 34/2; all >1x mean speedup at \
          L1-2 — compare shapes, not absolutes (simulated substrate)."
     );
-    println!("table3 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "table3 regenerated in {:.1}s ({} units)",
+        t0.elapsed().as_secs_f64(),
+        jobs.iter().map(|j| j.tasks.len()).sum::<usize>()
+    );
+    let (hits, misses) = runner.cache().stats();
+    if hits + misses > 0 {
+        println!("cost-cache: {hits} hits / {misses} misses");
+    }
     let _ = append_report(std::path::Path::new("data/reports/table3.txt"),
                           &report);
+    if runner.sink_failed() {
+        eprintln!("JSONL sink reported I/O failures; output is truncated");
+        std::process::exit(1);
+    }
 }

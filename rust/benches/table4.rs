@@ -1,13 +1,14 @@
 //! Regenerates **Table 4**: TritonBench (G and T) on A100 — call
-//! accuracy, execute accuracy, fast_1/fast_2, mean speedup.
+//! accuracy, execute accuracy, fast_1/fast_2, mean speedup. Runs the
+//! suite × method sweep through one [`BatchRunner`] unit queue.
 //!
 //! Env knobs: QIMENG_LIMIT, QIMENG_THREADS.
 
-use qimeng_mtmc::eval::{evaluate, table4_methods, EvalCfg};
+use qimeng_mtmc::eval::{roster_sweep, table4_methods, BatchCfg, BatchRunner};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::paths;
 use qimeng_mtmc::report::{append_report, metric_cells, Table};
-use qimeng_mtmc::tasks::{tritonbench_g, tritonbench_t};
+use qimeng_mtmc::tasks::{tritonbench_g, tritonbench_t, Task};
 
 fn main() {
     let t0 = std::time::Instant::now();
@@ -15,27 +16,40 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(usize::MAX);
-    let mut cfg = EvalCfg::default();
+    let mut batch_cfg = BatchCfg::default();
     if let Ok(t) = std::env::var("QIMENG_THREADS") {
-        cfg.threads = t.parse().unwrap_or(cfg.threads);
+        batch_cfg.threads = t.parse().unwrap_or(batch_cfg.threads);
     }
+    if let Ok(path) = std::env::var("QIMENG_JSONL") {
+        batch_cfg.sink = Some(std::path::PathBuf::from(path));
+    }
+    let runner = BatchRunner::new(batch_cfg).expect("batch runner");
     let spec = GpuSpec::a100();
     let methods = table4_methods(Some(paths::default_policy_path()));
 
-    let mut report = String::new();
-    for (name, mut tasks) in [
+    let suites = [
         ("TRITONBENCH-G", tritonbench_g()),
         ("TRITONBENCH-T", tritonbench_t()),
-    ] {
+    ];
+    let mut blocks: Vec<(GpuSpec, Vec<Task>)> = Vec::new();
+    let mut labels = Vec::new(); // (suite name, #tasks)
+    for (name, tasks) in &suites {
+        let mut tasks = tasks.clone();
         tasks.truncate(limit);
+        labels.push((*name, tasks.len()));
+        blocks.push((spec.clone(), tasks));
+    }
+    let results = runner.run(&roster_sweep(&methods, &blocks));
+
+    let mut report = String::new();
+    for (bi, (name, n_tasks)) in labels.iter().enumerate() {
         let mut table = Table::new(
-            &format!("Table 4 — {name} on A100 ({} tasks)", tasks.len()),
+            &format!("Table 4 — {name} on A100 ({n_tasks} tasks)"),
             &["Method", "CallAcc(%)", "ExecAcc(%)", "fast1/fast2(%)",
               "Mean Speedup"],
         );
-        for method in &methods {
-            let r = evaluate(method, &tasks, &spec, &cfg);
-            table.row(metric_cells(&r, true));
+        for r in &results[bi * methods.len()..(bi + 1) * methods.len()] {
+            table.row(metric_cells(r, true));
         }
         let text = table.render();
         println!("{text}");
@@ -48,6 +62,14 @@ fn main() {
          KernelLLM collapses to 1-4% exec acc on both."
     );
     println!("table4 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    let (hits, misses) = runner.cache().stats();
+    if hits + misses > 0 {
+        println!("cost-cache: {hits} hits / {misses} misses");
+    }
     let _ = append_report(std::path::Path::new("data/reports/table4.txt"),
                           &report);
+    if runner.sink_failed() {
+        eprintln!("JSONL sink reported I/O failures; output is truncated");
+        std::process::exit(1);
+    }
 }

@@ -1,10 +1,10 @@
 //! Regenerates **Table 6** (Micro-Coding ablation): multi-step MTMC vs
 //! handing the full optimization plan to the LLM in one prompt
 //! ("w/o Hier") for Gemini-2.5-Flash and DeepSeek-V3 micro-coders.
+//! The variant × level sweep runs through one [`BatchRunner`] queue.
 
-use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
+use qimeng_mtmc::eval::{table6_variants, BatchCfg, BatchJob, BatchRunner};
 use qimeng_mtmc::gpusim::GpuSpec;
-use qimeng_mtmc::microcode::ProfileId;
 use qimeng_mtmc::report::{append_report, Table};
 use qimeng_mtmc::tasks::kernelbench_level;
 
@@ -15,36 +15,41 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(usize::MAX);
-    let cfg = EvalCfg::default();
+    let mut batch_cfg = BatchCfg::default();
+    if let Ok(t) = std::env::var("QIMENG_THREADS") {
+        batch_cfg.threads = t.parse().unwrap_or(batch_cfg.threads);
+    }
+    if let Ok(path) = std::env::var("QIMENG_JSONL") {
+        batch_cfg.sink = Some(std::path::PathBuf::from(path));
+    }
+    let runner = BatchRunner::new(batch_cfg).expect("batch runner");
+
+    let variants = table6_variants();
+
+    let mut jobs = Vec::new();
+    for (_, method) in &variants {
+        for level in 1..=3usize {
+            let mut tasks = kernelbench_level(level);
+            tasks.truncate(limit);
+            jobs.push(BatchJob::new(method.clone(), spec.clone(), tasks));
+        }
+    }
+    let results = runner.run(&jobs);
+
     let mut table = Table::new(
         "Table 6 — multi-step (ours) vs single-pass (w/o Hier), A100",
         &["Method", "L1 Acc/Speedup", "L2 Acc/Speedup", "L3 Acc/Speedup"],
     );
-    let micros =
-        [("GF-2.5", ProfileId::GeminiFlash25), ("DS-V3", ProfileId::DeepSeekV3)];
-    let mut report_rows = Vec::new();
-    for (name, micro) in micros {
-        for (suffix, method) in [
-            ("w/o Hier", Method::MtmcNoHier { micro }),
-            ("+ Ours", Method::Mtmc {
-                macro_kind: MacroKind::GreedyLookahead,
-                micro,
-            }),
-        ] {
-            let mut cells = vec![format!("{name} {suffix}")];
-            for level in 1..=3 {
-                let mut tasks = kernelbench_level(level);
-                tasks.truncate(limit);
-                let r = evaluate(&method, &tasks, &spec, &cfg);
-                cells.push(format!(
-                    "{:.0}% / {:.2}",
-                    r.metrics.exec_acc * 100.0,
-                    r.metrics.mean_speedup
-                ));
-            }
-            report_rows.push(cells.clone());
-            table.row(cells);
+    for (vi, (name, _)) in variants.iter().enumerate() {
+        let mut cells = vec![name.clone()];
+        for r in &results[vi * 3..(vi + 1) * 3] {
+            cells.push(format!(
+                "{:.0}% / {:.2}",
+                r.metrics.exec_acc * 100.0,
+                r.metrics.mean_speedup
+            ));
         }
+        table.row(cells);
     }
     let text = table.render();
     println!("{text}");
@@ -56,4 +61,8 @@ fn main() {
     println!("table6 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
     let _ = append_report(std::path::Path::new("data/reports/table6.txt"),
                           &text);
+    if runner.sink_failed() {
+        eprintln!("JSONL sink reported I/O failures; output is truncated");
+        std::process::exit(1);
+    }
 }

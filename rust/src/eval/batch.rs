@@ -1,0 +1,366 @@
+//! Batched parallel evaluation engine.
+//!
+//! The paper tables sweep method × suite × GPU; the old flow parallelised
+//! only *within* one `evaluate` call, so a sweep ran its (method, suite)
+//! cells back-to-back and the pool drained at every cell boundary. The
+//! [`BatchRunner`] flattens a whole sweep into (method, suite, gpu, task)
+//! **units** and runs them through one sharded work queue
+//! ([`crate::util::parallel::par_map`]), so heavy batch traffic keeps
+//! every worker busy end-to-end.
+//!
+//! Cross-cutting services:
+//! - per-task outcomes stream to a JSON-lines sink ([`JsonlSink`], built
+//!   on [`crate::util::json`]) as units complete, so a long sweep is
+//!   observable and resumable downstream;
+//! - when a sink is configured, each record is enriched with the task's
+//!   eager baseline through a thread-safe [`CostCache`] keyed by
+//!   (program fingerprint, spec) — (task, gpu) pairs repeat across every
+//!   method of a sweep, so those lookups hit nearly always. Without a
+//!   sink no enrichment (and no cache traffic) happens.
+//!
+//! Determinism: unit seeds derive from (job seed, task index) exactly as
+//! in [`super::evaluate`], never from thread identity — results are
+//! byte-identical across `threads = 1` and `threads = N` (guarded by
+//! `rust/tests/batch.rs`).
+
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::harness::{evaluate_task, EvalCfg, SuiteResult};
+use super::metrics::{aggregate, TaskOutcome};
+use super::methods::{MacroKind, Method};
+use crate::gpusim::{graph_fingerprint, library_affinity, CostCache, GpuSpec};
+use crate::graph::infer_shapes;
+use crate::tasks::Task;
+use crate::util::json::Json;
+use crate::util::parallel::{default_threads, par_map};
+
+/// One (method, suite, gpu) sweep cell: the tasks fan out into units.
+/// Tasks are `Arc`-shared — a roster sweep points many jobs at the same
+/// suite slice without cloning every task graph per method.
+#[derive(Clone, Debug)]
+pub struct BatchJob {
+    pub method: Method,
+    pub gpu: GpuSpec,
+    pub tasks: Arc<Vec<Task>>,
+    /// Per-job harness config (seed, env, target language). The `threads`
+    /// field is ignored here — [`BatchCfg::threads`] owns parallelism.
+    pub cfg: EvalCfg,
+}
+
+impl BatchJob {
+    pub fn new(method: Method, gpu: GpuSpec, tasks: Vec<Task>) -> BatchJob {
+        Self::shared(method, gpu, Arc::new(tasks))
+    }
+
+    /// Construct against an already-shared task slice (no clone).
+    pub fn shared(method: Method, gpu: GpuSpec, tasks: Arc<Vec<Task>>)
+                  -> BatchJob {
+        BatchJob { method, gpu, tasks, cfg: EvalCfg::default() }
+    }
+}
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct BatchCfg {
+    /// Worker count for the sharded unit queue.
+    pub threads: usize,
+    /// Optional JSON-lines output path for per-task outcome records.
+    pub sink: Option<PathBuf>,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        BatchCfg { threads: default_threads(), sink: None }
+    }
+}
+
+/// Append-only JSON-lines writer shared across workers. The lock is held
+/// per line; records are written in completion order (each carries its
+/// job/task identity, so order never carries meaning). I/O errors are
+/// reported to stderr once (first failure) and surfaced via
+/// [`JsonlSink::failed`] — a sweep never aborts mid-flight on a full
+/// disk, but the truncation is loud, not silent.
+pub struct JsonlSink {
+    w: Mutex<BufWriter<std::fs::File>>,
+    write_failed: std::sync::atomic::AtomicBool,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> anyhow::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        Ok(JsonlSink {
+            w: Mutex::new(BufWriter::new(std::fs::File::create(path)?)),
+            write_failed: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
+    fn note_failure(&self, what: &str, e: &std::io::Error) {
+        use std::sync::atomic::Ordering;
+        if !self.write_failed.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[batch] JSONL sink {what} failed ({e}); later records may \
+                 be missing — treat the output as truncated"
+            );
+        }
+    }
+
+    pub fn write(&self, v: &Json) {
+        let mut g = self.w.lock().unwrap();
+        if let Err(e) = writeln!(g, "{v}") {
+            drop(g);
+            self.note_failure("write", &e);
+        }
+    }
+
+    pub fn flush(&self) {
+        let r = self.w.lock().unwrap().flush();
+        if let Err(e) = r {
+            self.note_failure("flush", &e);
+        }
+    }
+
+    /// True if any write or flush failed since creation.
+    pub fn failed(&self) -> bool {
+        self.write_failed.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+/// The batched evaluation engine. Construct once per sweep; the cost
+/// cache persists across [`BatchRunner::run`] calls.
+pub struct BatchRunner {
+    threads: usize,
+    cache: CostCache,
+    sink: Option<JsonlSink>,
+}
+
+impl BatchRunner {
+    pub fn new(cfg: BatchCfg) -> anyhow::Result<BatchRunner> {
+        let sink = match &cfg.sink {
+            Some(path) => Some(JsonlSink::create(path)?),
+            None => None,
+        };
+        Ok(BatchRunner { threads: cfg.threads.max(1), cache: CostCache::new(), sink })
+    }
+
+    /// The shared cost-model memo cache (hit/miss stats for reporting).
+    pub fn cache(&self) -> &CostCache {
+        &self.cache
+    }
+
+    /// True if a configured JSONL sink dropped any record (I/O error).
+    /// Callers that script on exit codes should fail the run when set.
+    pub fn sink_failed(&self) -> bool {
+        self.sink.as_ref().map_or(false, |s| s.failed())
+    }
+
+    /// Run a sweep: every job's tasks become units on one work queue.
+    /// Returns one [`SuiteResult`] per job, in job order.
+    pub fn run(&self, jobs: &[BatchJob]) -> Vec<SuiteResult> {
+        // Batched mode drives every macro decision through the greedy
+        // cost-model surrogate (see `evaluate_task`); say so once rather
+        // than silently re-attributing learned-policy rows.
+        if jobs.iter().any(|j| matches!(
+            &j.method,
+            Method::Mtmc {
+                macro_kind: MacroKind::LearnedOrGreedy { params_path: Some(_) },
+                ..
+            }
+        )) {
+            eprintln!(
+                "[batch] note: LearnedOrGreedy methods use the greedy \
+                 cost-model surrogate in batched mode (the PJRT runtime is \
+                 not Sync); run eval::evaluate for the learned policy"
+            );
+        }
+        let units: Vec<(usize, usize)> = jobs
+            .iter()
+            .enumerate()
+            .flat_map(|(ji, j)| (0..j.tasks.len()).map(move |ti| (ji, ti)))
+            .collect();
+        let evaluated: Vec<(usize, TaskOutcome)> =
+            par_map(&units, self.threads, |_, &(ji, ti)| {
+                let job = &jobs[ji];
+                let task = &job.tasks[ti];
+                let outcome =
+                    evaluate_task(&job.method, task, ti as u64, &job.gpu, &job.cfg);
+                if let Some(sink) = &self.sink {
+                    // enrich the streamed record with the memoized eager
+                    // baseline — (task, gpu) pairs repeat across every
+                    // method of a sweep, so this is almost always a cache
+                    // hit; skipped entirely when nothing consumes it
+                    let shapes = infer_shapes(&task.graph);
+                    let ctx = graph_fingerprint(&task.graph, &shapes);
+                    let eager_us = self.cache.eager_time_us(
+                        ctx, &task.graph, &shapes, &job.gpu,
+                        library_affinity(&task.id),
+                    );
+                    sink.write(&unit_record(ji, job, task, &outcome, eager_us));
+                }
+                (ji, outcome)
+            });
+        if let Some(sink) = &self.sink {
+            sink.flush();
+        }
+        let mut per_job: Vec<Vec<TaskOutcome>> =
+            jobs.iter().map(|_| Vec::new()).collect();
+        for (ji, outcome) in evaluated {
+            per_job[ji].push(outcome);
+        }
+        jobs.iter()
+            .zip(per_job)
+            .map(|(job, outcomes)| SuiteResult {
+                method: job.method.label(),
+                suite: job.tasks.first().map_or("empty", |t| t.suite.label()),
+                gpu: job.gpu.name,
+                metrics: aggregate(&outcomes),
+                outcomes,
+            })
+            .collect()
+    }
+}
+
+/// Build the jobs for a rectangular roster sweep: one job per
+/// ((gpu, tasks) block, method), block-major. Slice [`BatchRunner::run`]'s
+/// results as `results[bi * methods.len()..(bi + 1) * methods.len()]` to
+/// recover block `bi`'s rows in roster order. Shared by the table benches
+/// and the `repro table` subcommand so the two cannot drift. Each block's
+/// tasks are cloned once and `Arc`-shared across the whole roster.
+pub fn roster_sweep(methods: &[Method], blocks: &[(GpuSpec, Vec<Task>)])
+                    -> Vec<BatchJob> {
+    let mut jobs = Vec::with_capacity(methods.len() * blocks.len());
+    for (gpu, tasks) in blocks {
+        let shared = Arc::new(tasks.clone());
+        for m in methods {
+            jobs.push(BatchJob::shared(m.clone(), gpu.clone(),
+                                       Arc::clone(&shared)));
+        }
+    }
+    jobs
+}
+
+fn unit_record(ji: usize, job: &BatchJob, task: &Task, o: &TaskOutcome,
+               eager_us: f64) -> Json {
+    Json::obj(vec![
+        ("job", Json::from(ji)),
+        ("method", Json::from(job.method.label())),
+        ("suite", Json::from(task.suite.label())),
+        ("gpu", Json::from(job.gpu.name)),
+        ("task", Json::from(task.id.clone())),
+        ("compiled", Json::from(o.compiled)),
+        ("correct", Json::from(o.correct)),
+        ("speedup", Json::from(o.speedup)),
+        ("eager_us", Json::from(eager_us)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{evaluate, MacroKind};
+    use crate::microcode::ProfileId;
+    use crate::tasks::kernelbench_level;
+
+    fn jobs_small() -> Vec<BatchJob> {
+        let tasks = kernelbench_level(1)[..6].to_vec();
+        vec![
+            BatchJob::new(
+                Method::Baseline { profile: ProfileId::GeminiPro25 },
+                GpuSpec::a100(),
+                tasks.clone(),
+            ),
+            BatchJob::new(
+                Method::Mtmc {
+                    macro_kind: MacroKind::GreedyLookahead,
+                    micro: ProfileId::GeminiFlash25,
+                },
+                GpuSpec::v100(),
+                tasks,
+            ),
+        ]
+    }
+
+    #[test]
+    fn matches_unbatched_evaluate() {
+        let jobs = jobs_small();
+        let runner = BatchRunner::new(BatchCfg { threads: 4, sink: None }).unwrap();
+        let batched = runner.run(&jobs);
+        for (job, got) in jobs.iter().zip(&batched) {
+            let direct = evaluate(&job.method, &job.tasks, &job.gpu, &job.cfg);
+            assert_eq!(got.metrics, direct.metrics,
+                       "job {} diverged from evaluate()", got.method);
+            assert_eq!(got.suite, direct.suite);
+            assert_eq!(got.gpu, direct.gpu);
+        }
+    }
+
+    #[test]
+    fn sink_streams_one_record_per_unit() {
+        let dir = std::env::temp_dir().join("qimeng_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("records.jsonl");
+        let jobs = jobs_small();
+        let n_units: usize = jobs.iter().map(|j| j.tasks.len()).sum();
+        let runner = BatchRunner::new(BatchCfg {
+            threads: 3,
+            sink: Some(path.clone()),
+        })
+        .unwrap();
+        runner.run(&jobs);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), n_units);
+        for line in lines {
+            let v = Json::parse(line).unwrap();
+            assert!(v.get("task").and_then(|j| j.as_str()).is_some());
+            assert!(v.get("speedup").and_then(|j| j.as_f64()).is_some());
+            assert!(v.get("eager_us").and_then(|j| j.as_f64())
+                .map_or(false, |e| e > 0.0));
+        }
+    }
+
+    #[test]
+    fn cache_hits_accumulate_across_methods() {
+        let dir = std::env::temp_dir().join("qimeng_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // enrichment (and thus cache traffic) only happens with a sink
+        let jobs = jobs_small();
+        let runner = BatchRunner::new(BatchCfg {
+            threads: 2,
+            sink: Some(dir.join("cache_hits.jsonl")),
+        })
+        .unwrap();
+        runner.run(&jobs);
+        let (_h1, m1) = runner.cache().stats();
+        // both jobs share the same 6 tasks but differ in GPU, so the
+        // second sweep re-prices only cached (task, gpu) pairs
+        runner.run(&jobs);
+        let (h2, m2) = runner.cache().stats();
+        assert_eq!(m2, m1, "second sweep must be all hits");
+        assert!(h2 >= jobs.iter().map(|j| j.tasks.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn roster_sweep_block_major_order() {
+        let tasks = kernelbench_level(1)[..3].to_vec();
+        let methods = vec![
+            Method::Baseline { profile: ProfileId::GeminiPro25 },
+            Method::Baseline { profile: ProfileId::Gpt4o },
+        ];
+        let blocks = vec![
+            (GpuSpec::a100(), tasks.clone()),
+            (GpuSpec::v100(), tasks),
+        ];
+        let jobs = roster_sweep(&methods, &blocks);
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs[0].gpu.name, "A100");
+        assert_eq!(jobs[1].gpu.name, "A100");
+        assert_eq!(jobs[2].gpu.name, "V100");
+        assert_eq!(jobs[0].method.label(), jobs[2].method.label());
+    }
+}

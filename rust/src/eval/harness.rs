@@ -133,19 +133,38 @@ fn assembly_error_prob(profile: &LlmProfile, op_count: usize,
 pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                 cfg: &EvalCfg) -> SuiteResult {
     let outcomes: Vec<TaskOutcome> = match method {
-        Method::Baseline { profile } => {
-            par_map(tasks, cfg.threads, |ti, task| {
-                baseline_task(*profile, task, spec, cfg, ti as u64)
-            })
+        // The learned-policy path needs the (non-Sync) PJRT runtime: run
+        // it sequentially; every other method parallelises over tasks
+        // through the per-unit entry point below.
+        Method::Mtmc {
+            macro_kind: MacroKind::LearnedOrGreedy { params_path },
+            micro,
+        } => {
+            let loaded = params_path.as_ref().and_then(|pp| {
+                let arts = crate::paths::artifacts_dir();
+                match (load_params(pp), PjrtRuntime::load(&arts)) {
+                    (Ok(params), Ok(rt)) => Some((params, rt)),
+                    _ => None,
+                }
+            });
+            match loaded {
+                Some((params, rt)) => tasks
+                    .iter()
+                    .enumerate()
+                    .map(|(ti, task)| {
+                        let mut policy = PjrtPolicy::new(&rt, params.clone(), false);
+                        mtmc_task(&mut MacroRunner::ObsPolicy(&mut policy),
+                                  *micro, task, spec, cfg, ti as u64)
+                    })
+                    .collect(),
+                None => par_map(tasks, cfg.threads, |ti, task| {
+                    evaluate_task(method, task, ti as u64, spec, cfg)
+                }),
+            }
         }
-        Method::MtmcNoHier { micro } => {
-            par_map(tasks, cfg.threads, |ti, task| {
-                no_hier_task(*micro, task, spec, cfg, ti as u64)
-            })
-        }
-        Method::Mtmc { macro_kind, micro } => {
-            mtmc_all(macro_kind, *micro, tasks, spec, cfg)
-        }
+        _ => par_map(tasks, cfg.threads, |ti, task| {
+            evaluate_task(method, task, ti as u64, spec, cfg)
+        }),
     };
     SuiteResult {
         method: method.label(),
@@ -153,6 +172,50 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
         gpu: spec.name,
         metrics: aggregate(&outcomes),
         outcomes,
+    }
+}
+
+/// Evaluate a single (method, task) unit — the [`crate::eval::BatchRunner`]
+/// work item. `ti` is the task's index within its suite: it seeds the
+/// per-task RNG streams, so calling this with suite-order indices
+/// reproduces [`evaluate`] outcome-for-outcome regardless of thread count.
+///
+/// The one divergence: `MacroKind::LearnedOrGreedy` always uses the greedy
+/// cost-model surrogate here (the PJRT runtime is not `Sync`, so the
+/// learned policy cannot be driven from a sharded work queue; the greedy
+/// lookahead is the objective the policy converges to — see
+/// EXPERIMENTS.md).
+pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
+                     cfg: &EvalCfg) -> TaskOutcome {
+    match method {
+        Method::Baseline { profile } => {
+            baseline_task(*profile, task, spec, cfg, ti)
+        }
+        Method::MtmcNoHier { micro } => no_hier_task(*micro, task, spec, cfg, ti),
+        Method::Mtmc { macro_kind, micro } => match macro_kind {
+            MacroKind::LearnedOrGreedy { .. } | MacroKind::GreedyLookahead => {
+                mtmc_task(&mut MacroRunner::Greedy, *micro, task, spec, cfg, ti)
+            }
+            MacroKind::Heuristic { label, mistake_rate } => {
+                let mut p = HeuristicPolicy::new(label, *mistake_rate, 4);
+                mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
+                          spec, cfg, ti)
+            }
+            MacroKind::Freeform { label, wildness, mistake_rate } => {
+                let mut p = FreeformPolicy::new(label, *wildness, *mistake_rate);
+                mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut p), *micro,
+                                 task, spec, cfg, ti, 2.2)
+            }
+            MacroKind::Random => {
+                let mut p = RandomPolicy;
+                mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
+                          spec, cfg, ti)
+            }
+            MacroKind::Scripted(plan) => {
+                mtmc_task(&mut MacroRunner::Scripted(plan.clone()), *micro,
+                          task, spec, cfg, ti)
+            }
+        },
     }
 }
 
@@ -282,65 +345,6 @@ pub fn greedy_best_action_excluding(
 }
 
 // ---------------------------------------------------------------- MTMC
-
-fn mtmc_all(macro_kind: &MacroKind, micro: ProfileId, tasks: &[Task],
-            spec: &GpuSpec, cfg: &EvalCfg) -> Vec<TaskOutcome> {
-    // The learned-policy path needs the (non-Sync) PJRT runtime: run it
-    // sequentially; all other macro kinds parallelise over tasks.
-    match macro_kind {
-        MacroKind::LearnedOrGreedy { params_path } => {
-            let loaded = params_path.as_ref().and_then(|pp| {
-                let arts = crate::paths::artifacts_dir();
-                match (load_params(pp), PjrtRuntime::load(&arts)) {
-                    (Ok(params), Ok(rt)) => Some((params, rt)),
-                    _ => None,
-                }
-            });
-            match loaded {
-                Some((params, rt)) => tasks
-                    .iter()
-                    .enumerate()
-                    .map(|(ti, task)| {
-                        let mut policy = PjrtPolicy::new(&rt, params.clone(), false);
-                        mtmc_task(&mut MacroRunner::ObsPolicy(&mut policy),
-                                  micro, task, spec, cfg, ti as u64)
-                    })
-                    .collect(),
-                None => par_map(tasks, cfg.threads, |ti, task| {
-                    mtmc_task(&mut MacroRunner::Greedy, micro, task, spec,
-                              cfg, ti as u64)
-                }),
-            }
-        }
-        MacroKind::GreedyLookahead => par_map(tasks, cfg.threads, |ti, task| {
-            mtmc_task(&mut MacroRunner::Greedy, micro, task, spec, cfg,
-                      ti as u64)
-        }),
-        MacroKind::Heuristic { label, mistake_rate } => {
-            par_map(tasks, cfg.threads, |ti, task| {
-                let mut p = HeuristicPolicy::new(label, *mistake_rate, 4);
-                mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), micro, task,
-                          spec, cfg, ti as u64)
-            })
-        }
-        MacroKind::Freeform { label, wildness, mistake_rate } => {
-            par_map(tasks, cfg.threads, |ti, task| {
-                let mut p = FreeformPolicy::new(label, *wildness, *mistake_rate);
-                mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut p), micro,
-                                 task, spec, cfg, ti as u64, 2.2)
-            })
-        }
-        MacroKind::Random => par_map(tasks, cfg.threads, |ti, task| {
-            let mut p = RandomPolicy;
-            mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), micro, task, spec,
-                      cfg, ti as u64)
-        }),
-        MacroKind::Scripted(plan) => par_map(tasks, cfg.threads, |ti, task| {
-            mtmc_task(&mut MacroRunner::Scripted(plan.clone()), micro, task,
-                      spec, cfg, ti as u64)
-        }),
-    }
-}
 
 enum MacroRunner<'a> {
     Greedy,

@@ -77,6 +77,26 @@ pub fn table3_methods(params_path: Option<std::path::PathBuf>) -> Vec<Method> {
     v
 }
 
+/// The Table 6 roster: (label, method) pairs comparing single-pass
+/// ("w/o Hier") against stepwise MTMC for the two micro-coders the paper
+/// ablates. Single source of truth for `cargo bench --bench table6` and
+/// `repro table 6`.
+pub fn table6_variants() -> Vec<(String, Method)> {
+    use ProfileId::*;
+    let mut v = Vec::new();
+    for (name, micro) in [("GF-2.5", GeminiFlash25), ("DS-V3", DeepSeekV3)] {
+        v.push((format!("{name} w/o Hier"), Method::MtmcNoHier { micro }));
+        v.push((
+            format!("{name} + Ours"),
+            Method::Mtmc {
+                macro_kind: MacroKind::GreedyLookahead,
+                micro,
+            },
+        ));
+    }
+    v
+}
+
 /// The Table 4 roster (TritonBench on A100).
 pub fn table4_methods(params_path: Option<std::path::PathBuf>) -> Vec<Method> {
     use ProfileId::*;

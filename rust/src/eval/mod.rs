@@ -6,7 +6,11 @@
 mod metrics;
 mod methods;
 mod harness;
+mod batch;
 
-pub use harness::{evaluate, EvalCfg, SuiteResult, TaskResult};
-pub use methods::{table3_methods, table4_methods, MacroKind, Method};
+pub use batch::{roster_sweep, BatchCfg, BatchJob, BatchRunner, JsonlSink};
+pub use harness::{evaluate, evaluate_task, EvalCfg, SuiteResult, TaskResult};
+pub use methods::{
+    table3_methods, table4_methods, table6_variants, MacroKind, Method,
+};
 pub use metrics::{aggregate, Metrics};

@@ -1,0 +1,354 @@
+//! Thread-safe memoization of cost-model results.
+//!
+//! The batched evaluation engine ([`crate::eval::BatchRunner`]) sweeps
+//! method × suite × GPU, and the same pricing inputs recur constantly —
+//! most of all the per-(task, gpu) eager baselines, which every method of
+//! a sweep shares. The cache keys on `(graph fingerprint, kernel/program
+//! fingerprint, spec)` and is sharded (16 ways) so concurrent workers
+//! rarely contend on a lock; values are whole [`CostBreakdown`]s, and
+//! since the cost model is a pure function, a hit returns exactly what a
+//! cold miss would compute.
+//!
+//! Current production traffic is the BatchRunner's eager-baseline memo
+//! (JSONL record enrichment); the kernel/program memo is the supported
+//! entry point for pushing caching into the greedy-lookahead pricing loop
+//! (tracked in ROADMAP "Open items") and is exercised by the property
+//! tests in `rust/tests/properties.rs`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::cost::{kernel_time_us, CostBreakdown};
+use super::eager::eager_time_us;
+use super::spec::GpuSpec;
+use crate::graph::{Graph, Op};
+use crate::kir::{Kernel, LoopOrder, Program};
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Minimal FNV-1a accumulator (no std Hasher: we want a stable, portable
+/// 64-bit fingerprint, not a per-process randomized hash).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+}
+
+/// Fingerprint of the cost-relevant content of a graph + its shapes.
+/// Computed once per task by callers and threaded through as `ctx`.
+pub fn graph_fingerprint(g: &Graph, shapes: &[Vec<usize>]) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(g.name.as_bytes());
+    h.usize(g.nodes.len());
+    for (node, shape) in g.nodes.iter().zip(shapes) {
+        h.bytes(node.op.mnemonic().as_bytes());
+        match node.op {
+            Op::Conv2d { stride, pad } => {
+                h.usize(stride);
+                h.usize(pad);
+            }
+            Op::MaxPool2d { k, stride } => {
+                h.usize(k);
+                h.usize(stride);
+            }
+            Op::Scale(s) => h.u64(s.to_bits() as u64),
+            _ => {}
+        }
+        h.usize(node.inputs.len());
+        for &i in &node.inputs {
+            h.usize(i);
+        }
+        h.usize(shape.len());
+        for &d in shape {
+            h.usize(d);
+        }
+        h.byte(node.is_weight as u8);
+    }
+    h.usize(g.outputs.len());
+    for &o in &g.outputs {
+        h.usize(o);
+    }
+    h.0
+}
+
+/// Fingerprint of one kernel's cost-relevant state (node group +
+/// schedule). Mutations are deliberately excluded: they change semantics,
+/// never pricing.
+pub fn kernel_fingerprint(k: &Kernel) -> u64 {
+    let mut h = Fnv::new();
+    h.usize(k.nodes.len());
+    for &n in &k.nodes {
+        h.usize(n);
+    }
+    let s = &k.schedule;
+    match s.block_tile {
+        None => h.byte(0),
+        Some((m, n, kk)) => {
+            h.byte(1);
+            h.usize(m);
+            h.usize(n);
+            h.usize(kk);
+        }
+    }
+    match s.reg_tile {
+        None => h.byte(0),
+        Some((m, n)) => {
+            h.byte(1);
+            h.usize(m);
+            h.usize(n);
+        }
+    }
+    h.usize(s.pipeline_depth);
+    h.byte(match s.loop_order {
+        LoopOrder::Naive => 0,
+        LoopOrder::Coalesced => 1,
+        LoopOrder::Blocked => 2,
+    });
+    h.usize(s.vector_width);
+    h.0
+}
+
+fn spec_tag(spec: &GpuSpec) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(spec.name.as_bytes());
+    h.0
+}
+
+/// splitmix-style avalanche over the combined key parts.
+fn combine(a: u64, b: u64, c: u64) -> u64 {
+    let mut x = a ^ b.rotate_left(21) ^ c.rotate_left(42);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+const SHARDS: usize = 16;
+/// Per-shard entry cap: a runaway sweep degrades to recomputation, never
+/// to unbounded memory.
+const MAX_PER_SHARD: usize = 1 << 16;
+
+/// Sharded, thread-safe cost-model memo cache.
+pub struct CostCache {
+    kernels: Vec<Mutex<HashMap<u64, CostBreakdown>>>,
+    eager: Vec<Mutex<HashMap<u64, f64>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache {
+            kernels: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            eager: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(key: u64) -> usize {
+        // high bits: the low bits feed the HashMap's own bucketing
+        (key >> 48) as usize % SHARDS
+    }
+
+    /// Price one kernel through the cache. `ctx` is the
+    /// [`graph_fingerprint`] of the task the kernel belongs to.
+    pub fn kernel_time_us(&self, ctx: u64, kernel: &Kernel, g: &Graph,
+                          shapes: &[Vec<usize>], spec: &GpuSpec)
+                          -> CostBreakdown {
+        let key = combine(ctx, kernel_fingerprint(kernel), spec_tag(spec));
+        let shard = &self.kernels[Self::shard(key)];
+        if let Some(hit) = shard.lock().unwrap().get(&key).cloned() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        // compute outside the lock: pricing an L3 kernel is ~µs-scale and
+        // must not serialize other shard users
+        let cost = kernel_time_us(kernel, g, shapes, spec);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = shard.lock().unwrap();
+        if guard.len() < MAX_PER_SHARD {
+            guard.insert(key, cost.clone());
+        }
+        cost
+    }
+
+    /// Price a whole program through the cache (kernels back-to-back).
+    pub fn program_time_us(&self, ctx: u64, p: &Program, g: &Graph,
+                           shapes: &[Vec<usize>], spec: &GpuSpec) -> f64 {
+        p.kernels
+            .iter()
+            .map(|k| self.kernel_time_us(ctx, k, g, shapes, spec).time_us)
+            .sum()
+    }
+
+    /// Memoized eager (expert-library) baseline for a task graph.
+    pub fn eager_time_us(&self, ctx: u64, g: &Graph, shapes: &[Vec<usize>],
+                         spec: &GpuSpec, affinity: f64) -> f64 {
+        let key = combine(ctx, affinity.to_bits(), spec_tag(spec));
+        let shard = &self.eager[Self::shard(key)];
+        if let Some(&hit) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        let t = eager_time_us(g, shapes, spec, affinity);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut guard = shard.lock().unwrap();
+        if guard.len() < MAX_PER_SHARD {
+            guard.insert(key, t);
+        }
+        t
+    }
+
+    /// (hits, misses) since construction.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.iter().map(|s| s.lock().unwrap().len()).sum::<usize>()
+            + self.eager.iter().map(|s| s.lock().unwrap().len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Debug for CostCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (h, m) = self.stats();
+        write!(f, "CostCache {{ entries: {}, hits: {h}, misses: {m} }}",
+               self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::infer_shapes;
+    use crate::kir::lower_naive;
+
+    fn demo() -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("cache_demo");
+        let x = g.input("x", &[512, 256]);
+        let w = g.weight("w", &[256, 128]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        let shapes = infer_shapes(&g);
+        (g, shapes)
+    }
+
+    #[test]
+    fn hit_returns_identical_breakdown() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::a100();
+        let p = lower_naive(&g);
+        let cache = CostCache::new();
+        let ctx = graph_fingerprint(&g, &shapes);
+        let cold = cache.kernel_time_us(ctx, &p.kernels[0], &g, &shapes, &spec);
+        let warm = cache.kernel_time_us(ctx, &p.kernels[0], &g, &shapes, &spec);
+        let direct = kernel_time_us(&p.kernels[0], &g, &shapes, &spec);
+        assert_eq!(cold, direct);
+        assert_eq!(warm, direct);
+        let (hits, misses) = cache.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn schedule_changes_miss() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::h100();
+        let mut p = lower_naive(&g);
+        let cache = CostCache::new();
+        let ctx = graph_fingerprint(&g, &shapes);
+        let a = cache.kernel_time_us(ctx, &p.kernels[0], &g, &shapes, &spec);
+        p.kernels[0].schedule.block_tile = Some((64, 64, 32));
+        let b = cache.kernel_time_us(ctx, &p.kernels[0], &g, &shapes, &spec);
+        assert_ne!(a.time_us, b.time_us);
+        assert_eq!(cache.stats().0, 0, "different schedules must not hit");
+    }
+
+    #[test]
+    fn specs_are_distinguished() {
+        let (g, shapes) = demo();
+        let p = lower_naive(&g);
+        let cache = CostCache::new();
+        let ctx = graph_fingerprint(&g, &shapes);
+        let v = cache
+            .program_time_us(ctx, &p, &g, &shapes, &GpuSpec::v100());
+        let h = cache
+            .program_time_us(ctx, &p, &g, &shapes, &GpuSpec::h100());
+        assert!(h < v);
+        assert_eq!(cache.stats().0, 0);
+    }
+
+    #[test]
+    fn eager_memo_matches_direct() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::a100();
+        let cache = CostCache::new();
+        let ctx = graph_fingerprint(&g, &shapes);
+        let a = cache.eager_time_us(ctx, &g, &shapes, &spec, 0.7);
+        let b = cache.eager_time_us(ctx, &g, &shapes, &spec, 0.7);
+        assert_eq!(a, eager_time_us(&g, &shapes, &spec, 0.7));
+        assert_eq!(a, b);
+        assert!(cache.stats().0 >= 1);
+    }
+
+    #[test]
+    fn cache_is_share_safe_across_threads() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::a100();
+        let p = lower_naive(&g);
+        let cache = CostCache::new();
+        let ctx = graph_fingerprint(&g, &shapes);
+        let direct = kernel_time_us(&p.kernels[0], &g, &shapes, &spec);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        let c = cache.kernel_time_us(
+                            ctx, &p.kernels[0], &g, &shapes, &spec,
+                        );
+                        assert_eq!(c, direct);
+                    }
+                });
+            }
+        });
+        let (hits, misses) = cache.stats();
+        assert_eq!(hits + misses, 400);
+        assert!(hits >= 399 - 7, "at most one miss per racing thread");
+    }
+}

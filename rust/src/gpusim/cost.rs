@@ -22,7 +22,9 @@ use crate::graph::{Graph, NodeId, Op, OpClass};
 use crate::kir::{Kernel, LoopOrder, Program};
 
 /// Detailed costing of one kernel (used by perf reports and tests).
-#[derive(Clone, Debug, Default)]
+/// `PartialEq` so cache tests can assert a memo hit returns exactly what
+/// a cold miss computes (the cost model is a pure function).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CostBreakdown {
     pub flops: f64,
     pub hbm_bytes: f64,

@@ -6,5 +6,5 @@
 mod core;
 mod ops;
 
-pub use core::Tensor;
-pub use ops::*;
+pub use self::core::Tensor;
+pub use self::ops::*;

@@ -1,0 +1,118 @@
+//! BatchRunner integration: thread-count determinism (the guard for the
+//! sharded-queue refactor of `par_map` + `BatchRunner`), equivalence with
+//! the one-shot `evaluate`, and the JSONL sink contract.
+
+use qimeng_mtmc::eval::{
+    evaluate, BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind, Method,
+};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::tasks::kernelbench_level;
+use qimeng_mtmc::util::json::Json;
+
+fn mtmc() -> Method {
+    Method::Mtmc {
+        macro_kind: MacroKind::GreedyLookahead,
+        micro: ProfileId::GeminiFlash25,
+    }
+}
+
+/// The headline guard: `evaluate` with `threads = 1` and `threads = 8`
+/// must produce byte-identical `Metrics` for a fixed seed on a
+/// KernelBench level-1 slice. Seeds derive from (cfg.seed, task index),
+/// never from thread identity, so the sharded queue cannot perturb them.
+#[test]
+fn evaluate_threads_1_vs_8_byte_identical_metrics() {
+    let tasks = kernelbench_level(1)[..12].to_vec();
+    let spec = GpuSpec::a100();
+    for method in [
+        mtmc(),
+        Method::Baseline { profile: ProfileId::DeepSeekR1 },
+        Method::MtmcNoHier { micro: ProfileId::GeminiFlash25 },
+    ] {
+        let cfg1 = EvalCfg { threads: 1, seed: 0xD00D, ..Default::default() };
+        let cfg8 = EvalCfg { threads: 8, seed: 0xD00D, ..Default::default() };
+        let a = evaluate(&method, &tasks, &spec, &cfg1);
+        let b = evaluate(&method, &tasks, &spec, &cfg8);
+        assert_eq!(a.metrics, b.metrics, "{}", a.method);
+        assert_eq!(
+            format!("{:?}", a.metrics),
+            format!("{:?}", b.metrics),
+            "{}: Metrics must be byte-identical across thread counts",
+            a.method
+        );
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.compiled, y.compiled);
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(x.speedup.to_bits(), y.speedup.to_bits(),
+                       "{}: speedup bits differ", x.task_id);
+        }
+    }
+}
+
+#[test]
+fn batch_runner_threads_1_vs_8_byte_identical_metrics() {
+    let tasks = kernelbench_level(1)[..12].to_vec();
+    let jobs = |seed: u64| -> Vec<BatchJob> {
+        let mut job = BatchJob::new(mtmc(), GpuSpec::h100(), tasks.clone());
+        job.cfg = EvalCfg { seed, ..Default::default() };
+        vec![job]
+    };
+    let r1 = BatchRunner::new(BatchCfg { threads: 1, sink: None })
+        .unwrap()
+        .run(&jobs(0xFEED));
+    let r8 = BatchRunner::new(BatchCfg { threads: 8, sink: None })
+        .unwrap()
+        .run(&jobs(0xFEED));
+    assert_eq!(r1[0].metrics, r8[0].metrics);
+    assert_eq!(format!("{:?}", r1[0].metrics), format!("{:?}", r8[0].metrics));
+}
+
+#[test]
+fn batch_sweep_matches_per_suite_evaluate() {
+    let kb1 = kernelbench_level(1)[..8].to_vec();
+    let kb2 = kernelbench_level(2)[..8].to_vec();
+    let jobs = vec![
+        BatchJob::new(mtmc(), GpuSpec::a100(), kb1),
+        BatchJob::new(
+            Method::Baseline { profile: ProfileId::GeminiPro25 },
+            GpuSpec::v100(),
+            kb2,
+        ),
+    ];
+    let runner = BatchRunner::new(BatchCfg { threads: 6, sink: None }).unwrap();
+    let batched = runner.run(&jobs);
+    for (job, got) in jobs.iter().zip(&batched) {
+        let direct = evaluate(&job.method, &job.tasks, &job.gpu, &job.cfg);
+        assert_eq!(got.metrics, direct.metrics, "{}", got.method);
+    }
+}
+
+#[test]
+fn jsonl_sink_records_are_parseable_and_complete() {
+    let dir = std::env::temp_dir().join("qimeng_batch_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("kb1.jsonl");
+    let tasks = kernelbench_level(1)[..6].to_vec();
+    let runner = BatchRunner::new(BatchCfg {
+        threads: 4,
+        sink: Some(path.clone()),
+    })
+    .unwrap();
+    let results = runner.run(&[BatchJob::new(mtmc(), GpuSpec::a100(), tasks)]);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut seen: Vec<String> = Vec::new();
+    for line in text.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad line: {e}"));
+        seen.push(v.get("task").and_then(|j| j.as_str()).unwrap().to_string());
+        assert_eq!(v.get("gpu").and_then(|j| j.as_str()), Some("A100"));
+        assert!(v.get("method").and_then(|j| j.as_str()).is_some());
+    }
+    seen.sort();
+    let mut expect: Vec<String> =
+        results[0].outcomes.iter().map(|o| o.task_id.clone()).collect();
+    expect.sort();
+    assert_eq!(seen, expect, "one record per unit, no dupes/losses");
+}

@@ -1,0 +1,122 @@
+//! Golden-snapshot tests for `kir::render`: the pseudo-Triton and
+//! pseudo-CUDA source for two representative tasks (a fused
+//! GEMM+bias+activation elementwise chain and a row-softmax reduction) is
+//! checked in under `tests/goldens/` and compared byte-for-byte, so any
+//! codegen regression is caught by `cargo test`.
+//!
+//! To regenerate after an *intentional* printer change:
+//! `QIMENG_BLESS=1 cargo test --test golden_render` rewrites the golden
+//! files in place; re-run without the env var to confirm, then commit.
+
+use qimeng_mtmc::graph::{infer_shapes, Graph, Op};
+use qimeng_mtmc::kir::{
+    lower_naive, render, Kernel, LoopOrder, Program, Schedule, TargetLang,
+};
+
+/// Fused elementwise representative: GEMM + bias + ReLU collapsed into a
+/// single scheduled kernel (the shape every KernelBench-L2 winner takes).
+fn fused_gemm_bias_relu() -> (Graph, Program) {
+    let mut g = Graph::new("golden_fused");
+    let x = g.input("x", &[64, 64]);
+    let w = g.weight("w", &[64, 64]);
+    let b = g.weight("b", &[64]);
+    let mm = g.op(Op::MatMul, &[x, w]);
+    let ba = g.op(Op::BiasAdd, &[mm, b]);
+    let r = g.op(Op::Relu, &[ba]);
+    g.mark_output(r);
+    let p = Program {
+        kernels: vec![Kernel {
+            nodes: vec![mm, ba, r],
+            schedule: Schedule {
+                block_tile: Some((64, 64, 32)),
+                reg_tile: Some((8, 8)),
+                pipeline_depth: 2,
+                loop_order: LoopOrder::Blocked,
+                vector_width: 4,
+            },
+            name: "k0_matmul+k1_bias+k2_relu".to_string(),
+        }],
+        mutations: Vec::new(),
+        compile_broken: false,
+    };
+    p.validate(&g).expect("golden program must be valid");
+    (g, p)
+}
+
+/// Reduction representative: naive row softmax, unscheduled.
+fn softmax_reduction() -> (Graph, Program) {
+    let mut g = Graph::new("golden_softmax");
+    let x = g.input("x", &[8, 128]);
+    let sm = g.op(Op::Softmax, &[x]);
+    g.mark_output(sm);
+    let p = lower_naive(&g);
+    (g, p)
+}
+
+fn check(name: &str, g: &Graph, p: &Program, lang: TargetLang, golden: &str) {
+    let shapes = infer_shapes(g);
+    let got = render(p, g, &shapes, lang);
+    if std::env::var("QIMENG_BLESS").is_ok() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("tests/goldens")
+            .join(format!("{name}.{}.txt", lang.label()));
+        std::fs::write(&path, &got).expect("bless write");
+        eprintln!("blessed {}", path.display());
+        return;
+    }
+    assert_eq!(
+        got, golden,
+        "rendered {} source for `{name}` diverged from \
+         tests/goldens/{name}.{}.txt — if the printer change is \
+         intentional, regenerate with QIMENG_BLESS=1 cargo test --test \
+         golden_render",
+        lang.label(),
+        lang.label()
+    );
+}
+
+#[test]
+fn fused_elementwise_triton_matches_golden() {
+    let (g, p) = fused_gemm_bias_relu();
+    check(
+        "fused_gemm_bias_relu", &g, &p, TargetLang::Triton,
+        include_str!("goldens/fused_gemm_bias_relu.triton.txt"),
+    );
+}
+
+#[test]
+fn fused_elementwise_cuda_matches_golden() {
+    let (g, p) = fused_gemm_bias_relu();
+    check(
+        "fused_gemm_bias_relu", &g, &p, TargetLang::Cuda,
+        include_str!("goldens/fused_gemm_bias_relu.cuda.txt"),
+    );
+}
+
+#[test]
+fn reduction_triton_matches_golden() {
+    let (g, p) = softmax_reduction();
+    check(
+        "softmax_reduction", &g, &p, TargetLang::Triton,
+        include_str!("goldens/softmax_reduction.triton.txt"),
+    );
+}
+
+#[test]
+fn reduction_cuda_matches_golden() {
+    let (g, p) = softmax_reduction();
+    check(
+        "softmax_reduction", &g, &p, TargetLang::Cuda,
+        include_str!("goldens/softmax_reduction.cuda.txt"),
+    );
+}
+
+#[test]
+fn renders_are_deterministic() {
+    let (g, p) = fused_gemm_bias_relu();
+    let shapes = infer_shapes(&g);
+    assert_eq!(
+        render(&p, &g, &shapes, TargetLang::Triton),
+        render(&p, &g, &shapes, TargetLang::Triton)
+    );
+}

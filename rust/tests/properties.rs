@@ -6,7 +6,8 @@
 use qimeng_mtmc::dataset::{load_trajectories, save_trajectories, TrajStep,
                            Trajectory};
 use qimeng_mtmc::env::{EnvConfig, OptimEnv};
-use qimeng_mtmc::gpusim::{program_time_us, GpuSpec};
+use qimeng_mtmc::gpusim::{graph_fingerprint, kernel_time_us,
+                          program_time_us, CostCache, GpuSpec};
 use qimeng_mtmc::graph::infer_shapes;
 use qimeng_mtmc::kir::{analyze_regions, lower_naive, MAX_REGIONS};
 use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
@@ -15,6 +16,7 @@ use qimeng_mtmc::testkit::{check, default_cases, Shrink};
 use qimeng_mtmc::transform::{
     action_mask, apply_action, decode_action, ACTION_DIM, STOP_ACTION,
 };
+use qimeng_mtmc::util::parallel::par_map;
 use qimeng_mtmc::util::Rng;
 use qimeng_mtmc::prop_assert;
 
@@ -193,6 +195,97 @@ fn prop_env_episodes_bounded_and_consistent() {
             env.state.best_speedup >= env.state.speedup * 0.999
                 || env.state.best_speedup > 0.0,
             "best speedup below current"
+        );
+        Ok(())
+    });
+}
+
+/// `par_map` must behave exactly like a sequential `map` for any
+/// (length, thread count) — including empty input, single item, and
+/// `threads > len` — with order preserved and every index delivered to
+/// the correct slot. Guards the sharded-chunk-queue rewrite.
+#[test]
+fn prop_par_map_matches_sequential_map() {
+    #[derive(Clone, Debug)]
+    struct Case {
+        len: usize,
+        threads: usize,
+    }
+    impl Shrink for Case {
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.len > 0 {
+                out.push(Case { len: self.len / 2, threads: self.threads });
+                out.push(Case { len: 0, threads: self.threads });
+            }
+            if self.threads > 1 {
+                out.push(Case { len: self.len, threads: 1 });
+            }
+            out
+        }
+    }
+    check(
+        707,
+        default_cases(),
+        |rng: &mut Rng| Case {
+            // lengths span empty / single / chunk-boundary regimes;
+            // threads routinely exceed len
+            len: rng.below(200),
+            threads: rng.below(24) + 1,
+        },
+        |case: &Case| {
+            let items: Vec<u64> = (0..case.len as u64).map(|x| x * 3 + 1).collect();
+            let expect: Vec<(usize, u64)> =
+                items.iter().enumerate().map(|(i, &x)| (i, x * 2)).collect();
+            let got = par_map(&items, case.threads, |i, &x| (i, x * 2));
+            prop_assert!(
+                got == expect,
+                "par_map(len={}, threads={}) diverged from sequential map",
+                case.len, case.threads
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Cost-cache soundness over arbitrary action-derived programs: a warm
+/// hit returns a `CostBreakdown` identical to both the cold miss and the
+/// direct (uncached) computation, for every kernel of the program.
+#[test]
+fn prop_cost_cache_hit_identical_to_cold_miss() {
+    check(808, 48, gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let shapes = infer_shapes(&task.graph);
+        let spec = GpuSpec::a100();
+        let mut p = lower_naive(&task.graph);
+        for &a in &seq.actions {
+            if a >= STOP_ACTION {
+                continue;
+            }
+            if let Ok(next) = apply_action(
+                &p, &task.graph, &shapes, &decode_action(a), &spec,
+                seq.quality_milli as f32 / 1000.0,
+            ) {
+                p = next;
+            }
+        }
+        let cache = CostCache::new();
+        let ctx = graph_fingerprint(&task.graph, &shapes);
+        for k in &p.kernels {
+            let cold = cache.kernel_time_us(ctx, k, &task.graph, &shapes, &spec);
+            let warm = cache.kernel_time_us(ctx, k, &task.graph, &shapes, &spec);
+            let direct = kernel_time_us(k, &task.graph, &shapes, &spec);
+            prop_assert!(
+                cold == direct && warm == direct,
+                "{}: cached cost diverged from direct computation", task.id
+            );
+        }
+        let (hits, misses) = cache.stats();
+        prop_assert!(
+            hits + misses == 2 * p.kernels.len(),
+            "{}: unexpected cache traffic ({hits} hits, {misses} misses \
+             for {} kernels)",
+            task.id, p.kernels.len()
         );
         Ok(())
     });
