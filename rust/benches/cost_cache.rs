@@ -1,0 +1,130 @@
+//! Cost-cache pricing benchmark (the ISSUE-2 perf deliverable).
+//!
+//! Runs a table3-shaped slice — the pricing-heavy methods (greedy
+//! lookahead MTMC and the greedy-plan ablation) plus one baseline over
+//! KernelBench levels 1-3 — twice through the [`BatchRunner`]: once with
+//! pricing routed through the per-sweep `CostCache` and once priced cold
+//! (`use_cost_cache = false`). Per-task outcomes must be byte-identical;
+//! only wall-clock may differ. Prints both timings, the speedup, and the
+//! cache hit rate.
+//!
+//! Env knobs: QIMENG_LIMIT (tasks per level, default 8), QIMENG_THREADS,
+//! QIMENG_REPS (timed repetitions per mode, default 3; best time wins).
+
+use qimeng_mtmc::eval::{
+    roster_sweep, BatchCfg, BatchRunner, MacroKind, Method, SuiteResult,
+};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::tasks::{kernelbench_level, Task};
+
+fn sweep_results(use_cache: bool, threads: usize,
+                 blocks: &[(GpuSpec, Vec<Task>)], methods: &[Method])
+                 -> (Vec<SuiteResult>, f64, (usize, usize)) {
+    let runner = BatchRunner::new(BatchCfg { threads, sink: None })
+        .expect("batch runner");
+    let mut jobs = roster_sweep(methods, blocks);
+    for j in &mut jobs {
+        j.cfg.use_cost_cache = use_cache;
+    }
+    let t0 = std::time::Instant::now();
+    let results = runner.run(&jobs);
+    (results, t0.elapsed().as_secs_f64(), runner.cache().stats())
+}
+
+fn main() {
+    let limit: usize = std::env::var("QIMENG_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let threads: usize = std::env::var("QIMENG_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(qimeng_mtmc::util::parallel::default_threads);
+    let reps: usize = std::env::var("QIMENG_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+        .max(1);
+
+    // the pricing-heavy slice of the Table 3 roster: every episode step
+    // prices all valid lookahead candidates
+    let methods = vec![
+        Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiPro25,
+        },
+        Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiFlash25,
+        },
+        Method::MtmcNoHier { micro: ProfileId::GeminiFlash25 },
+        Method::Baseline { profile: ProfileId::Gpt4o },
+    ];
+    let blocks: Vec<(GpuSpec, Vec<Task>)> = (1..=3usize)
+        .map(|level| {
+            let mut tasks = kernelbench_level(level);
+            tasks.truncate(limit);
+            (GpuSpec::a100(), tasks)
+        })
+        .collect();
+    let units: usize =
+        blocks.iter().map(|(_, t)| t.len()).sum::<usize>() * methods.len();
+    println!(
+        "== cost-cache bench: table3-shaped slice, {units} units, \
+         {threads} threads, best of {reps} =="
+    );
+
+    let mut cold_best = f64::INFINITY;
+    let mut warm_best = f64::INFINITY;
+    let mut warm_stats = (0usize, 0usize);
+    let mut reference: Option<Vec<SuiteResult>> = None;
+    for rep in 0..reps {
+        for use_cache in [false, true] {
+            let (results, dt, stats) =
+                sweep_results(use_cache, threads, &blocks, &methods);
+            if use_cache {
+                warm_best = warm_best.min(dt);
+                warm_stats = stats;
+            } else {
+                cold_best = cold_best.min(dt);
+            }
+            match &reference {
+                None => reference = Some(results),
+                Some(base) => assert_outcomes_identical(base, &results),
+            }
+            println!(
+                "rep {rep} {}: {dt:.3}s",
+                if use_cache { "cached" } else { "cold  " }
+            );
+        }
+    }
+    let (hits, misses) = warm_stats;
+    println!(
+        "cold {cold_best:.3}s, cached {warm_best:.3}s -> {:.2}x faster; \
+         cache {hits} hits / {misses} misses ({:.1}% hit rate)",
+        cold_best / warm_best,
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
+    println!("per-task outcomes byte-identical across all runs");
+}
+
+/// Cached and cold sweeps must agree bit-for-bit, outcome-for-outcome.
+fn assert_outcomes_identical(a: &[SuiteResult], b: &[SuiteResult]) {
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.metrics, rb.metrics, "{} metrics diverged", ra.method);
+        assert_eq!(ra.outcomes.len(), rb.outcomes.len());
+        for (x, y) in ra.outcomes.iter().zip(&rb.outcomes) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.compiled, y.compiled);
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(
+                x.speedup.to_bits(),
+                y.speedup.to_bits(),
+                "{}: cached vs cold speedup bits diverged",
+                x.task_id
+            );
+        }
+    }
+}

@@ -25,9 +25,11 @@ fn main() {
         &["Budget", "MTMC Acc/Speedup", "Resample Acc/Speedup"],
     );
     for budget in [1usize, 2, 4, 6, 8, 12] {
-        // MTMC with max_steps = budget
+        // MTMC with a budget of exactly `budget` attempted actions (the
+        // env used to need a +1 here to compensate for truncating the
+        // final attempt away; it no longer does)
         let cfg = EvalCfg {
-            env: EnvConfig { max_steps: budget + 1, ..Default::default() },
+            env: EnvConfig { max_steps: budget, ..Default::default() },
             ..Default::default()
         };
         let r = evaluate(

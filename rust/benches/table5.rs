@@ -48,9 +48,9 @@ fn main() {
             qimeng_mtmc::gpusim::eager_time_us(&task.graph, &shapes, &spec, aff);
         format!("{:.2}", eager_us / o.speedup / 1000.0)
     };
-    for i in 0..tasks.len() {
+    for (i, task) in tasks.iter().enumerate() {
         table.row(vec![
-            tasks[i].id.clone(),
+            task.id.clone(),
             shapes_ms(&r_triton, i),
             shapes_ms(&r_cuda, i),
         ]);

@@ -9,7 +9,7 @@
 
 use super::obs::featurize;
 use super::reward::{shape_reward, RewardCfg, StepSignal};
-use crate::gpusim::{eager_time_us, program_time_us, GpuSpec};
+use crate::gpusim::{CostCache, GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::kir::{lower_naive, Program};
 use crate::microcode::{
@@ -72,6 +72,10 @@ pub struct OptimEnv<'a> {
     pub shapes: Vec<Vec<usize>>,
     pub eager_us: f64,
     pub state: EnvState,
+    /// Pricing handle: routes `speedup_of`/`eager_us` (and the greedy
+    /// lookahead in the harness) through a per-sweep [`CostCache`] when
+    /// one is attached; bit-identical to direct pricing either way.
+    pub pricer: Pricer<'a>,
     pub(crate) base_seed: u64,
 }
 
@@ -85,11 +89,23 @@ fn mix(a: u64, b: u64) -> u64 {
 impl<'a> OptimEnv<'a> {
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> OptimEnv<'a> {
+        Self::with_cache(task, spec, profile, cfg, seed, None)
+    }
+
+    /// Like [`OptimEnv::new`], pricing through a shared [`CostCache`].
+    /// Outcomes are bit-identical with and without the cache (the cost
+    /// model is pure); only wall-clock differs.
+    pub fn with_cache(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+                      cfg: EnvConfig, seed: u64,
+                      cache: Option<&'a CostCache>) -> OptimEnv<'a> {
         let shapes = infer_shapes(&task.graph);
+        let pricer = Pricer::new(cache, &task.graph, &shapes);
         let affinity = crate::gpusim::library_affinity(&task.id);
-        let eager_us = eager_time_us(&task.graph, &shapes, &spec, affinity);
+        let eager_us = pricer.eager_time_us(&task.graph, &shapes, &spec,
+                                            affinity);
         let program = lower_naive(&task.graph);
-        let speedup = eager_us / program_time_us(&program, &task.graph, &shapes, &spec);
+        let speedup = eager_us
+            / pricer.program_time_us(&program, &task.graph, &shapes, &spec);
         let state = EnvState {
             best_program: program.clone(),
             program,
@@ -101,7 +117,7 @@ impl<'a> OptimEnv<'a> {
             done: false,
         };
         OptimEnv { task, spec, profile, cfg, shapes, eager_us, state,
-                   base_seed: seed }
+                   pricer, base_seed: seed }
     }
 
     /// Validity mask for the current state.
@@ -130,10 +146,17 @@ impl<'a> OptimEnv<'a> {
     }
 
     fn speedup_of(&self, p: &Program) -> f64 {
-        self.eager_us / program_time_us(p, &self.task.graph, &self.shapes, &self.spec)
+        self.eager_us
+            / self.pricer.program_time_us(p, &self.task.graph, &self.shapes,
+                                          &self.spec)
     }
 
     /// Step the environment. Returns the shaped reward and the raw signal.
+    ///
+    /// Episodes run exactly `max_steps` attempted actions: the final
+    /// budgeted call still attempts its action and then terminates
+    /// (truncation is checked *after* the attempt, so no step of the
+    /// budget is silently swallowed).
     pub fn step(&mut self, action: usize) -> StepResult {
         assert!(!self.state.done, "episode finished");
         let step_idx = self.state.step;
@@ -141,7 +164,7 @@ impl<'a> OptimEnv<'a> {
         self.state.history.insert(0, action);
         self.state.history.truncate(8);
 
-        if action == STOP_ACTION || self.state.step >= self.cfg.max_steps {
+        if action == STOP_ACTION {
             self.state.done = true;
             let signal = StepSignal::Stop { best: self.state.best_speedup };
             return StepResult {
@@ -178,7 +201,11 @@ impl<'a> OptimEnv<'a> {
             StepOutcome::Ok(p) => self.accept(p),
         };
         let reward = shape_reward(&signal, step_idx, &self.cfg.reward);
-        StepResult { reward, signal, done: false }
+        let done = self.state.step >= self.cfg.max_steps;
+        if done {
+            self.state.done = true;
+        }
+        StepResult { reward, signal, done }
     }
 
     fn accept(&mut self, p: Program) -> StepSignal {
@@ -238,6 +265,55 @@ mod tests {
             e.step(*rng.choose(&valid));
         }
         assert!(e.state.done);
+    }
+
+    #[test]
+    fn episode_attempts_exactly_max_steps_actions() {
+        // regression: truncation used to fire *before* the final action
+        // was attempted, so episodes got max_steps-1 real attempts
+        let (tasks, _) = env(7);
+        let mut e = mk(&tasks, 7);
+        let mut attempts = 0;
+        while !e.state.done {
+            // always submit a real (non-Stop) action; even an invalid one
+            // is an attempt (the env rejects it)
+            let r = e.step(0);
+            attempts += 1;
+            assert!(
+                !matches!(r.signal, StepSignal::Stop { .. }),
+                "a non-Stop action must be attempted, not truncated away"
+            );
+        }
+        assert_eq!(attempts, e.cfg.max_steps,
+                   "episode budget is max_steps attempted actions");
+    }
+
+    #[test]
+    fn cached_env_matches_uncached_bitwise() {
+        let (tasks, _) = env(8);
+        let cache = crate::gpusim::CostCache::new();
+        let mut plain = mk(&tasks, 11);
+        let mut cached = OptimEnv::with_cache(
+            &tasks[0],
+            GpuSpec::a100(),
+            LlmProfile::get(ProfileId::GeminiPro25),
+            EnvConfig::default(),
+            11,
+            Some(&cache),
+        );
+        assert_eq!(plain.eager_us.to_bits(), cached.eager_us.to_bits());
+        while !plain.state.done {
+            let mask = plain.mask();
+            let a = (0..mask.len()).find(|&a| mask[a]).unwrap();
+            let r1 = plain.step(a);
+            let r2 = cached.step(a);
+            assert_eq!(r1.reward.to_bits(), r2.reward.to_bits());
+            assert_eq!(plain.state.speedup.to_bits(),
+                       cached.state.speedup.to_bits());
+        }
+        assert!(cached.state.done);
+        assert_eq!(plain.state.best_speedup.to_bits(),
+                   cached.state.best_speedup.to_bits());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use super::reward::{shape_reward, StepSignal};
 use super::stepper::{EnvConfig, OptimEnv, StepResult};
-use crate::gpusim::GpuSpec;
+use crate::gpusim::{CostCache, GpuSpec};
 use crate::kir::Program;
 use crate::microcode::LlmProfile;
 use crate::tasks::Task;
@@ -37,8 +37,18 @@ pub struct TreeEnv<'a> {
 impl<'a> TreeEnv<'a> {
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> TreeEnv<'a> {
+        Self::with_cache(task, spec, profile, cfg, seed, None)
+    }
+
+    /// Like [`TreeEnv::new`], pricing the wrapped env through a shared
+    /// [`CostCache`] (complementary caches: the edge memo here replays
+    /// whole transitions, the cost cache de-duplicates kernel pricing).
+    pub fn with_cache(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+                      cfg: EnvConfig, seed: u64,
+                      cost_cache: Option<&'a CostCache>) -> TreeEnv<'a> {
         TreeEnv {
-            env: OptimEnv::new(task, spec, profile, cfg, seed),
+            env: OptimEnv::with_cache(task, spec, profile, cfg, seed,
+                                      cost_cache),
             cache: HashMap::new(),
             stats: (0, 0),
             max_entries: 200_000,
@@ -53,12 +63,18 @@ impl<'a> TreeEnv<'a> {
         let profile = self.env.profile.clone();
         let cfg = self.env.cfg.clone();
         let base = self.env.base_seed;
-        self.env = OptimEnv::new(task, spec, profile, cfg, base);
+        let cost_cache = self.env.pricer.cache();
+        self.env = OptimEnv::with_cache(task, spec, profile, cfg, base,
+                                        cost_cache);
     }
 
     /// Step with memoization.
     pub fn step(&mut self, action: usize) -> StepResult {
         let step_idx = self.env.state.step;
+        // Bypass the edge cache for Stop and for the final budgeted step:
+        // both terminate the episode (`done = true`), and cached replays
+        // never set `done` — consistent with `OptimEnv::step` attempting
+        // (not truncating) the final action.
         if action == STOP_ACTION
             || self.env.state.step + 1 >= self.env.cfg.max_steps
         {

@@ -12,11 +12,12 @@
 //! - per-task outcomes stream to a JSON-lines sink ([`JsonlSink`], built
 //!   on [`crate::util::json`]) as units complete, so a long sweep is
 //!   observable and resumable downstream;
-//! - when a sink is configured, each record is enriched with the task's
-//!   eager baseline through a thread-safe [`CostCache`] keyed by
-//!   (program fingerprint, spec) — (task, gpu) pairs repeat across every
-//!   method of a sweep, so those lookups hit nearly always. Without a
-//!   sink no enrichment (and no cache traffic) happens.
+//! - one thread-safe [`CostCache`] per runner is the sweep's pricing
+//!   engine: every unit's env steps, greedy-lookahead candidate pricing
+//!   and eager baselines route through it (unless the job's
+//!   `cfg.use_cost_cache` is off), and sink records are enriched with
+//!   the memoized eager baseline. Hits dominate because (task, gpu)
+//!   pairs repeat across methods and lookahead siblings share kernels.
 //!
 //! Determinism: unit seeds derive from (job seed, task index) exactly as
 //! in [`super::evaluate`], never from thread identity — results are
@@ -30,7 +31,7 @@ use std::sync::{Arc, Mutex};
 use super::harness::{evaluate_task, EvalCfg, SuiteResult};
 use super::metrics::{aggregate, TaskOutcome};
 use super::methods::{MacroKind, Method};
-use crate::gpusim::{graph_fingerprint, library_affinity, CostCache, GpuSpec};
+use crate::gpusim::{library_affinity, CostCache, GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::tasks::Task;
 use crate::util::json::Json;
@@ -156,7 +157,7 @@ impl BatchRunner {
     /// True if a configured JSONL sink dropped any record (I/O error).
     /// Callers that script on exit codes should fail the run when set.
     pub fn sink_failed(&self) -> bool {
-        self.sink.as_ref().map_or(false, |s| s.failed())
+        self.sink.as_ref().is_some_and(|s| s.failed())
     }
 
     /// Run a sweep: every job's tasks become units on one work queue.
@@ -187,19 +188,22 @@ impl BatchRunner {
             par_map(&units, self.threads, |_, &(ji, ti)| {
                 let job = &jobs[ji];
                 let task = &job.tasks[ti];
-                let outcome =
-                    evaluate_task(&job.method, task, ti as u64, &job.gpu, &job.cfg);
+                // the runner's cache prices the whole unit (env steps,
+                // greedy lookahead, eager baselines) unless the job opts
+                // out — outcomes are bit-identical either way
+                let cache =
+                    if job.cfg.use_cost_cache { Some(&self.cache) } else { None };
+                let outcome = evaluate_task(&job.method, task, ti as u64,
+                                            &job.gpu, &job.cfg, cache);
                 if let Some(sink) = &self.sink {
-                    // enrich the streamed record with the memoized eager
+                    // enrich the streamed record with the task's eager
                     // baseline — (task, gpu) pairs repeat across every
                     // method of a sweep, so this is almost always a cache
                     // hit; skipped entirely when nothing consumes it
                     let shapes = infer_shapes(&task.graph);
-                    let ctx = graph_fingerprint(&task.graph, &shapes);
-                    let eager_us = self.cache.eager_time_us(
-                        ctx, &task.graph, &shapes, &job.gpu,
-                        library_affinity(&task.id),
-                    );
+                    let eager_us = Pricer::new(cache, &task.graph, &shapes)
+                        .eager_time_us(&task.graph, &shapes, &job.gpu,
+                                       library_affinity(&task.id));
                     sink.write(&unit_record(ji, job, task, &outcome, eager_us));
                 }
                 (ji, outcome)
@@ -320,7 +324,7 @@ mod tests {
             assert!(v.get("task").and_then(|j| j.as_str()).is_some());
             assert!(v.get("speedup").and_then(|j| j.as_f64()).is_some());
             assert!(v.get("eager_us").and_then(|j| j.as_f64())
-                .map_or(false, |e| e > 0.0));
+                .is_some_and(|e| e > 0.0));
         }
     }
 
@@ -328,7 +332,6 @@ mod tests {
     fn cache_hits_accumulate_across_methods() {
         let dir = std::env::temp_dir().join("qimeng_batch_test");
         std::fs::create_dir_all(&dir).unwrap();
-        // enrichment (and thus cache traffic) only happens with a sink
         let jobs = jobs_small();
         let runner = BatchRunner::new(BatchCfg {
             threads: 2,
@@ -336,7 +339,10 @@ mod tests {
         })
         .unwrap();
         runner.run(&jobs);
-        let (_h1, m1) = runner.cache().stats();
+        let (h1, m1) = runner.cache().stats();
+        // greedy-lookahead pricing alone guarantees warm traffic within
+        // the first sweep (the current program is re-priced every step)
+        assert!(h1 > 0, "no cache hits in a greedy-lookahead sweep");
         // both jobs share the same 6 tasks but differ in GPU, so the
         // second sweep re-prices only cached (task, gpu) pairs
         runner.run(&jobs);

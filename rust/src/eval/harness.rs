@@ -3,7 +3,7 @@
 use super::metrics::{aggregate, Metrics, TaskOutcome};
 use super::methods::{MacroKind, Method};
 use crate::env::{EnvConfig, OptimEnv};
-use crate::gpusim::{program_time_us, GpuSpec};
+use crate::gpusim::{CostCache, GpuSpec, Pricer};
 use crate::microcode::{
     check_correct, single_pass_generate, CheckOutcome, LlmProfile, ProfileId,
     SinglePassMode, SinglePassOutcome,
@@ -25,6 +25,12 @@ pub struct EvalCfg {
     pub env: EnvConfig,
     /// Target language is CUDA (Table 5).
     pub cuda: bool,
+    /// Route all cost-model pricing (env steps, greedy lookahead, eager
+    /// baselines) through a per-sweep [`CostCache`]. Outcomes are
+    /// bit-identical either way; `false` (`--no-cost-cache`) is the
+    /// escape hatch for benchmarking the cold path or ruling the cache
+    /// out while debugging.
+    pub use_cost_cache: bool,
 }
 
 impl Default for EvalCfg {
@@ -34,6 +40,7 @@ impl Default for EvalCfg {
             threads: crate::util::parallel::default_threads(),
             env: EnvConfig::default(),
             cuda: false,
+            use_cost_cache: true,
         }
     }
 }
@@ -129,9 +136,14 @@ fn assembly_error_prob(profile: &LlmProfile, op_count: usize,
     (suite_assembly_base(suite) + size_risk).min(0.80)
 }
 
-/// Evaluate one method over a task set.
+/// Evaluate one method over a task set. Pricing goes through one
+/// [`CostCache`] for the whole call (unless `cfg.use_cost_cache` is off);
+/// for a cache shared across many calls, drive
+/// [`crate::eval::BatchRunner`] instead.
 pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                 cfg: &EvalCfg) -> SuiteResult {
+    let cache = if cfg.use_cost_cache { Some(CostCache::new()) } else { None };
+    let cache = cache.as_ref();
     let outcomes: Vec<TaskOutcome> = match method {
         // The learned-policy path needs the (non-Sync) PJRT runtime: run
         // it sequentially; every other method parallelises over tasks
@@ -154,16 +166,16 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                     .map(|(ti, task)| {
                         let mut policy = PjrtPolicy::new(&rt, params.clone(), false);
                         mtmc_task(&mut MacroRunner::ObsPolicy(&mut policy),
-                                  *micro, task, spec, cfg, ti as u64)
+                                  *micro, task, spec, cfg, ti as u64, cache)
                     })
                     .collect(),
                 None => par_map(tasks, cfg.threads, |ti, task| {
-                    evaluate_task(method, task, ti as u64, spec, cfg)
+                    evaluate_task(method, task, ti as u64, spec, cfg, cache)
                 }),
             }
         }
         _ => par_map(tasks, cfg.threads, |ti, task| {
-            evaluate_task(method, task, ti as u64, spec, cfg)
+            evaluate_task(method, task, ti as u64, spec, cfg, cache)
         }),
     };
     SuiteResult {
@@ -179,6 +191,8 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
 /// work item. `ti` is the task's index within its suite: it seeds the
 /// per-task RNG streams, so calling this with suite-order indices
 /// reproduces [`evaluate`] outcome-for-outcome regardless of thread count.
+/// `cache` is the sweep's shared pricing memo (`None` = price cold; the
+/// outcome is bit-identical either way).
 ///
 /// The one divergence: `MacroKind::LearnedOrGreedy` always uses the greedy
 /// cost-model surrogate here (the PJRT runtime is not `Sync`, so the
@@ -186,34 +200,37 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
 /// lookahead is the objective the policy converges to — see
 /// EXPERIMENTS.md).
 pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
-                     cfg: &EvalCfg) -> TaskOutcome {
+                     cfg: &EvalCfg, cache: Option<&CostCache>) -> TaskOutcome {
     match method {
         Method::Baseline { profile } => {
-            baseline_task(*profile, task, spec, cfg, ti)
+            baseline_task(*profile, task, spec, cfg, ti, cache)
         }
-        Method::MtmcNoHier { micro } => no_hier_task(*micro, task, spec, cfg, ti),
+        Method::MtmcNoHier { micro } => {
+            no_hier_task(*micro, task, spec, cfg, ti, cache)
+        }
         Method::Mtmc { macro_kind, micro } => match macro_kind {
             MacroKind::LearnedOrGreedy { .. } | MacroKind::GreedyLookahead => {
-                mtmc_task(&mut MacroRunner::Greedy, *micro, task, spec, cfg, ti)
+                mtmc_task(&mut MacroRunner::Greedy, *micro, task, spec, cfg,
+                          ti, cache)
             }
             MacroKind::Heuristic { label, mistake_rate } => {
                 let mut p = HeuristicPolicy::new(label, *mistake_rate, 4);
                 mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
-                          spec, cfg, ti)
+                          spec, cfg, ti, cache)
             }
             MacroKind::Freeform { label, wildness, mistake_rate } => {
                 let mut p = FreeformPolicy::new(label, *wildness, *mistake_rate);
                 mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut p), *micro,
-                                 task, spec, cfg, ti, 2.2)
+                                 task, spec, cfg, ti, 2.2, cache)
             }
             MacroKind::Random => {
                 let mut p = RandomPolicy;
                 mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
-                          spec, cfg, ti)
+                          spec, cfg, ti, cache)
             }
             MacroKind::Scripted(plan) => {
                 mtmc_task(&mut MacroRunner::Scripted(plan.clone()), *micro,
-                          task, spec, cfg, ti)
+                          task, spec, cfg, ti, cache)
             }
         },
     }
@@ -222,9 +239,11 @@ pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
 // ------------------------------------------------------------ baselines
 
 fn baseline_task(profile: ProfileId, task: &Task, spec: &GpuSpec,
-                 cfg: &EvalCfg, ti: u64) -> TaskOutcome {
+                 cfg: &EvalCfg, ti: u64,
+                 cache: Option<&CostCache>) -> TaskOutcome {
     let prof = effective_profile(profile, task.suite);
     let shapes = crate::graph::infer_shapes(&task.graph);
+    let pricer = Pricer::new(cache, &task.graph, &shapes);
     let mut rng = Rng::new(cfg.seed ^ (ti << 17) ^ 0xBA5E);
     // interface gate (TritonBench only): a mismatch is a call failure
     // with high probability regardless of the kernel body
@@ -245,19 +264,19 @@ fn baseline_task(profile: ProfileId, task: &Task, spec: &GpuSpec,
             speedup: 0.0,
         },
         SinglePassOutcome::Generated(p) => {
-            score_program(&p, task, &shapes, spec, cfg, ti)
+            score_program(&p, task, &shapes, spec, cfg, ti, &pricer)
         }
     }
 }
 
 fn score_program(p: &crate::kir::Program, task: &Task,
                  shapes: &[Vec<usize>], spec: &GpuSpec, cfg: &EvalCfg,
-                 ti: u64) -> TaskOutcome {
+                 ti: u64, pricer: &Pricer) -> TaskOutcome {
     let correct = check_correct(p, &task.verif_graph, cfg.env.verif_trials,
                                 cfg.seed ^ ti ^ 0xC4EC) == CheckOutcome::Correct;
     let affinity = crate::gpusim::library_affinity(&task.id);
-    let eager = crate::gpusim::eager_time_us(&task.graph, shapes, spec, affinity);
-    let speedup = eager / program_time_us(p, &task.graph, shapes, spec);
+    let eager = pricer.eager_time_us(&task.graph, shapes, spec, affinity);
+    let speedup = eager / pricer.program_time_us(p, &task.graph, shapes, spec);
     TaskOutcome {
         task_id: task.id.clone(),
         compiled: true,
@@ -271,10 +290,11 @@ fn score_program(p: &crate::kir::Program, task: &Task,
 /// Table 6: derive the greedy plan (what Macro Thinking would do), then
 /// hand ALL of it to the LLM in a single prompt.
 fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
-                ti: u64) -> TaskOutcome {
+                ti: u64, cache: Option<&CostCache>) -> TaskOutcome {
     let prof = effective_profile(micro, task.suite);
     let shapes = crate::graph::infer_shapes(&task.graph);
-    let plan = greedy_plan(task, &shapes, spec, cfg.env.max_steps);
+    let pricer = Pricer::new(cache, &task.graph, &shapes);
+    let plan = greedy_plan(task, &shapes, spec, cfg.env.max_steps, &pricer);
     let mut rng = Rng::new(cfg.seed ^ (ti << 13) ^ 0x0441E4);
     match single_pass_generate(&task.graph, &shapes, &prof, spec,
                                &SinglePassMode::AllActionsAtOnce(plan),
@@ -286,7 +306,7 @@ fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
             speedup: 0.0,
         },
         SinglePassOutcome::Generated(p) => {
-            score_program(&p, task, &shapes, spec, cfg, ti)
+            score_program(&p, task, &shapes, spec, cfg, ti, &pricer)
         }
     }
 }
@@ -294,11 +314,12 @@ fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
 /// Greedy cost-model plan: repeatedly apply the valid action with the
 /// best one-step time improvement (>1%).
 fn greedy_plan(task: &Task, shapes: &[Vec<usize>], spec: &GpuSpec,
-               max_steps: usize) -> Vec<crate::transform::Action> {
+               max_steps: usize, pricer: &Pricer)
+               -> Vec<crate::transform::Action> {
     let mut p = crate::kir::lower_naive(&task.graph);
     let mut plan = Vec::new();
     for _ in 0..max_steps {
-        match greedy_best_action(&p, task, shapes, spec) {
+        match greedy_best_action(&p, task, shapes, spec, pricer) {
             Some((a, next)) => {
                 plan.push(decode_action(a));
                 p = next;
@@ -311,21 +332,30 @@ fn greedy_plan(task: &Task, shapes: &[Vec<usize>], spec: &GpuSpec,
 
 /// Best one-step improvement, or None if nothing improves > 1%.
 fn greedy_best_action(p: &crate::kir::Program, task: &Task,
-                      shapes: &[Vec<usize>], spec: &GpuSpec)
+                      shapes: &[Vec<usize>], spec: &GpuSpec, pricer: &Pricer)
                       -> Option<(usize, crate::kir::Program)> {
-    greedy_best_action_excluding(p, task, shapes, spec, &Default::default())
+    greedy_best_action_excluding(p, task, shapes, spec, &Default::default(),
+                                 pricer)
 }
 
 /// Greedy selection skipping edges that already failed in this episode
 /// (the tree env is edge-deterministic: a failed micro-coding never
 /// succeeds on retry, and the paper's policy likewise learns to move on).
+///
+/// This is the pricing hot path: every step prices every valid candidate
+/// one lookahead deep. Candidates differ from the current program in
+/// exactly one kernel, so pricing through the [`Pricer`]'s per-kernel
+/// memo re-computes only the mutated kernel — the untouched siblings hit
+/// the cache (and so does `now`, re-priced every step of the episode).
 pub fn greedy_best_action_excluding(
     p: &crate::kir::Program, task: &Task, shapes: &[Vec<usize>],
     spec: &GpuSpec, exclude: &std::collections::HashSet<usize>,
+    pricer: &Pricer,
 ) -> Option<(usize, crate::kir::Program)> {
-    let now = program_time_us(p, &task.graph, shapes, spec);
+    let now = pricer.program_time_us(p, &task.graph, shapes, spec);
     let mask = action_mask(p, &task.graph, shapes, spec);
-    let mut best: Option<(usize, crate::kir::Program, f64)> = None;
+    let mut best: Option<(usize, crate::kir::Program)> = None;
+    let mut best_t = f64::INFINITY;
     for a in 0..STOP_ACTION {
         if !mask[a] || exclude.contains(&a) {
             continue;
@@ -333,15 +363,14 @@ pub fn greedy_best_action_excluding(
         if let Ok(next) =
             apply_action(p, &task.graph, shapes, &decode_action(a), spec, 1.0)
         {
-            let t = program_time_us(&next, &task.graph, shapes, spec);
-            if t < now * 0.99
-                && best.as_ref().map_or(true, |(_, _, bt)| t < *bt)
-            {
-                best = Some((a, next, t));
+            let t = pricer.program_time_us(&next, &task.graph, shapes, spec);
+            if t < now * 0.99 && t < best_t {
+                best = Some((a, next));
+                best_t = t;
             }
         }
     }
-    best.map(|(a, next, _)| (a, next))
+    best
 }
 
 // ---------------------------------------------------------------- MTMC
@@ -354,32 +383,45 @@ enum MacroRunner<'a> {
 
 /// Run one MTMC episode on a task, then the final-assembly check.
 fn mtmc_task(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
-             spec: &GpuSpec, cfg: &EvalCfg, ti: u64) -> TaskOutcome {
-    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0)
+             spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
+             cache: Option<&CostCache>) -> TaskOutcome {
+    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0, cache)
 }
 
 /// `micro_err_mult` > 1 models macro proposals arriving *without* the
 /// action-space prompt template (paper Fig. 2: the action prompt carries
 /// curated examples per optimization type — freeform suggestions don't).
+#[allow(clippy::too_many_arguments)]
 fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
                     spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
-                    micro_err_mult: f64) -> TaskOutcome {
+                    micro_err_mult: f64,
+                    cache: Option<&CostCache>) -> TaskOutcome {
     let prof = effective_profile(micro, task.suite).scaled(micro_err_mult);
-    let mut env = OptimEnv::new(task, spec.clone(), prof.clone(),
-                                EnvConfig { cuda: cfg.cuda, ..cfg.env.clone() },
-                                cfg.seed ^ (ti << 21) ^ 0x47C0);
+    let mut env = OptimEnv::with_cache(
+        task, spec.clone(), prof.clone(),
+        EnvConfig { cuda: cfg.cuda, ..cfg.env.clone() },
+        cfg.seed ^ (ti << 21) ^ 0x47C0, cache);
     let mut rng = Rng::new(cfg.seed ^ (ti << 9) ^ 0x9097);
     let mut scripted_idx = 0usize;
     // failed edges at the *current* tree node (cleared when state moves)
     let mut failed_here: std::collections::HashSet<usize> =
         Default::default();
     while !env.state.done {
-        let mask = env.mask();
+        // the env is edge-deterministic: a failed edge never succeeds on
+        // retry, so mask failed edges out for EVERY runner (Stop stays
+        // valid) — not just the greedy one
+        let mut mask = env.mask();
+        for &a in &failed_here {
+            if a < STOP_ACTION {
+                mask[a] = false;
+            }
+        }
         let action = match runner {
             MacroRunner::Greedy => {
                 match greedy_best_action_excluding(&env.state.program, task,
                                                    &env.shapes, spec,
-                                                   &failed_here) {
+                                                   &failed_here,
+                                                   &env.pricer) {
                     Some((a, _)) => a,
                     None => STOP_ACTION,
                 }
@@ -388,14 +430,18 @@ fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
                 let obs = env.observe(&mask);
                 policy.act(&obs, &mask, &mut rng).action
             }
-            MacroRunner::Scripted(plan) => {
+            MacroRunner::Scripted(plan) => loop {
                 let a = plan
                     .get(scripted_idx)
                     .map(crate::transform::encode_action)
                     .unwrap_or(STOP_ACTION);
                 scripted_idx += 1;
-                a
-            }
+                // skip plan entries over known-failed edges instead of
+                // burning a deterministic failure on them
+                if a == STOP_ACTION || !failed_here.contains(&a) {
+                    break a;
+                }
+            },
         };
         // freeform proposals may be invalid: the env rejects them
         let action = if action < mask.len() { action } else { STOP_ACTION };
@@ -422,16 +468,81 @@ fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
         };
     }
     let best = env.state.best_program.clone();
-    score_program(&best, task, &env.shapes, spec, cfg, ti)
+    score_program(&best, task, &env.shapes, spec, cfg, ti, &env.pricer)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::policy::PolicyDecision;
     use crate::tasks::kernelbench_level;
 
     fn small_suite() -> Vec<Task> {
         kernelbench_level(2)[..10].to_vec()
+    }
+
+    /// Plays a fixed action plan (then Stop), recording every mask it was
+    /// offered — lets tests observe what the episode loop exposes.
+    struct ProbePolicy {
+        plan: Vec<usize>,
+        masks: Vec<Vec<bool>>,
+    }
+
+    impl Policy for ProbePolicy {
+        fn act(&mut self, _obs: &[f32], mask: &[bool], _rng: &mut Rng)
+               -> PolicyDecision {
+            self.masks.push(mask.to_vec());
+            let action = self
+                .plan
+                .get(self.masks.len() - 1)
+                .copied()
+                .unwrap_or(STOP_ACTION);
+            PolicyDecision { action, logp: 0.0, value: 0.0 }
+        }
+
+        fn name(&self) -> String {
+            "probe".into()
+        }
+    }
+
+    /// Regression: `failed_here` used to be honored only by the greedy
+    /// runner — observation-driven policies (heuristic/random/freeform)
+    /// could retry a deterministically-failed edge all episode. Now the
+    /// episode loop masks failed edges out of every runner's view.
+    #[test]
+    fn failed_edges_are_masked_out_for_policy_runners() {
+        let tasks = small_suite();
+        let task = &tasks[0];
+        let spec = GpuSpec::a100();
+        let mult = 40.0; // drive micro-coding error to its cap
+        for seed in 0..64u64 {
+            let cfg = EvalCfg { seed, threads: 1, ..Default::default() };
+            // replicate the episode env (ti = 0) to find a seed whose
+            // first valid edge deterministically fails
+            let prof =
+                effective_profile(ProfileId::Gpt4o, task.suite).scaled(mult);
+            let mut env = OptimEnv::new(
+                task, spec.clone(), prof,
+                EnvConfig { cuda: cfg.cuda, ..cfg.env.clone() },
+                cfg.seed ^ 0x47C0);
+            let mask0 = env.mask();
+            let a = (0..STOP_ACTION).find(|&i| mask0[i]).unwrap();
+            let before = env.state.path_hash;
+            env.step(a);
+            if env.state.path_hash != before {
+                continue; // edge succeeded at this seed; try another
+            }
+            let mut probe = ProbePolicy { plan: vec![a], masks: Vec::new() };
+            mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut probe),
+                             ProfileId::Gpt4o, task, &spec, &cfg, 0, mult,
+                             None);
+            assert!(probe.masks.len() >= 2, "episode ended after one step");
+            assert!(probe.masks[0][a], "first offer must include the edge");
+            assert!(!probe.masks[1][a],
+                    "a deterministically-failed edge was offered again");
+            return;
+        }
+        panic!("no failing first edge in 64 seeds at capped error rate");
     }
 
     #[test]

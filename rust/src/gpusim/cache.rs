@@ -9,11 +9,15 @@
 //! since the cost model is a pure function, a hit returns exactly what a
 //! cold miss would compute.
 //!
-//! Current production traffic is the BatchRunner's eager-baseline memo
-//! (JSONL record enrichment); the kernel/program memo is the supported
-//! entry point for pushing caching into the greedy-lookahead pricing loop
-//! (tracked in ROADMAP "Open items") and is exercised by the property
-//! tests in `rust/tests/properties.rs`.
+//! The cache is the pricing engine for the whole evaluation stack: one
+//! cache per sweep is threaded through [`crate::eval::evaluate`] /
+//! [`crate::eval::BatchRunner`] into [`crate::env::OptimEnv`] and the
+//! greedy-lookahead action pricing (via [`Pricer`]), so a one-action
+//! mutation re-prices one kernel instead of the whole program — sibling
+//! lookahead candidates share every untouched kernel and hit the memo.
+//! The BatchRunner's eager-baseline JSONL enrichment rides the same
+//! cache. Warm-vs-cold equivalence is guarded end-to-end by the property
+//! tests in `rust/tests/properties.rs` and `rust/tests/batch.rs`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -245,6 +249,49 @@ impl CostCache {
     }
 }
 
+/// A pricing handle for one task: couples an optional shared
+/// [`CostCache`] with the task's precomputed [`graph_fingerprint`], so
+/// hot loops (env steps, greedy lookahead) price kernels without
+/// re-fingerprinting the graph per call. With `cache: None` every method
+/// falls through to the direct cost-model functions — the cached and
+/// uncached paths are bit-identical because the cost model is pure.
+#[derive(Clone, Copy, Debug)]
+pub struct Pricer<'c> {
+    cache: Option<&'c CostCache>,
+    ctx: u64,
+}
+
+impl<'c> Pricer<'c> {
+    pub fn new(cache: Option<&'c CostCache>, g: &Graph,
+               shapes: &[Vec<usize>]) -> Pricer<'c> {
+        Pricer { cache, ctx: graph_fingerprint(g, shapes) }
+    }
+
+    /// The cache this pricer routes through, if any (used to rebuild an
+    /// env over the same task without re-fingerprinting).
+    pub fn cache(&self) -> Option<&'c CostCache> {
+        self.cache
+    }
+
+    /// Price a whole program (per-kernel through the memo when caching).
+    pub fn program_time_us(&self, p: &Program, g: &Graph,
+                           shapes: &[Vec<usize>], spec: &GpuSpec) -> f64 {
+        match self.cache {
+            Some(c) => c.program_time_us(self.ctx, p, g, shapes, spec),
+            None => super::cost::program_time_us(p, g, shapes, spec),
+        }
+    }
+
+    /// Price the eager (expert-library) baseline.
+    pub fn eager_time_us(&self, g: &Graph, shapes: &[Vec<usize>],
+                         spec: &GpuSpec, affinity: f64) -> f64 {
+        match self.cache {
+            Some(c) => c.eager_time_us(self.ctx, g, shapes, spec, affinity),
+            None => eager_time_us(g, shapes, spec, affinity),
+        }
+    }
+}
+
 impl std::fmt::Debug for CostCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let (h, m) = self.stats();
@@ -325,6 +372,28 @@ mod tests {
         assert_eq!(a, eager_time_us(&g, &shapes, &spec, 0.7));
         assert_eq!(a, b);
         assert!(cache.stats().0 >= 1);
+    }
+
+    #[test]
+    fn pricer_cached_and_uncached_identical() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::a100();
+        let p = lower_naive(&g);
+        let cache = CostCache::new();
+        let cached = Pricer::new(Some(&cache), &g, &shapes);
+        let plain = Pricer::new(None, &g, &shapes);
+        for _ in 0..2 {
+            assert_eq!(
+                cached.program_time_us(&p, &g, &shapes, &spec).to_bits(),
+                plain.program_time_us(&p, &g, &shapes, &spec).to_bits()
+            );
+            assert_eq!(
+                cached.eager_time_us(&g, &shapes, &spec, 0.5).to_bits(),
+                plain.eager_time_us(&g, &shapes, &spec, 0.5).to_bits()
+            );
+        }
+        assert!(cache.stats().0 > 0, "second round must hit");
+        assert!(plain.cache().is_none() && cached.cache().is_some());
     }
 
     #[test]

@@ -12,7 +12,7 @@ mod cost;
 mod cache;
 mod eager;
 
-pub use cache::{graph_fingerprint, kernel_fingerprint, CostCache};
+pub use cache::{graph_fingerprint, kernel_fingerprint, CostCache, Pricer};
 pub use cost::{kernel_time_us, op_flops, program_time_us, CostBreakdown};
 pub use eager::{eager_time_us, library_affinity};
 pub use spec::{GpuArch, GpuSpec};

@@ -169,7 +169,7 @@ mod tests {
         let regions = analyze_regions(&p, &g);
         match regions[0].kind {
             RegionKind::Kernel { kernel } => {
-                assert_eq!(p.kernels[kernel].name.contains("matmul"), true)
+                assert!(p.kernels[kernel].name.contains("matmul"))
             }
             _ => panic!("first region should be the matmul kernel"),
         }

@@ -60,8 +60,12 @@ COMMANDS:
   train [--iters 60] [--tasks 40] [--out data/policy.bin] [--gpu A100]
   optimize --task kb2_000_gemm_bias_act [--gpu A100] [--show-code]
   eval --suite kb2 [--gpu A100] [--method mtmc|greedy|<profile>] [--limit N]
-       [--threads N] [--jsonl out.jsonl]     (runs through the BatchRunner)
-  table 3|4|6 [--limit N] [--threads N] [--jsonl F]   batched table sweep
+       [--threads N] [--jsonl out.jsonl] [--no-cost-cache]
+                             (runs through the BatchRunner; pricing goes
+                              through the sweep's CostCache unless
+                              --no-cost-cache, hit/miss stats on stderr)
+  table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--no-cost-cache]
+                             batched table sweep
   table 5|7                  pointer to the bench binaries
 ";
 
@@ -220,43 +224,29 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let spec = gpu(args)?;
     let cfg = EvalCfg { seed: args.u64_or("seed", 1), ..Default::default() };
     let shapes = qimeng_mtmc::graph::infer_shapes(&task.graph);
-    let affinity = qimeng_mtmc::gpusim::library_affinity(&task.id);
-    let eager =
-        qimeng_mtmc::gpusim::eager_time_us(&task.graph, &shapes, &spec, affinity);
-    println!("task {} on {} | eager {:.1}us", task.id, spec.name, eager);
 
-    let mut env = qimeng_mtmc::env::OptimEnv::new(
+    // one-task session: the lookahead below re-prices sibling candidates
+    // every step, so even here the cost cache pays for itself
+    let cost_cache = qimeng_mtmc::gpusim::CostCache::new();
+    let cache = if args.has("no-cost-cache") { None } else { Some(&cost_cache) };
+    let mut env = qimeng_mtmc::env::OptimEnv::with_cache(
         task,
         spec.clone(),
         qimeng_mtmc::microcode::LlmProfile::get(ProfileId::GeminiPro25),
         cfg.env.clone(),
         cfg.seed,
+        cache,
     );
+    println!("task {} on {} | eager {:.1}us", task.id, spec.name, env.eager_us);
     println!("step  0: naive lowering, speedup {:.2}x", env.state.speedup);
     let mut step = 1;
     let mut failed: std::collections::HashSet<usize> = Default::default();
     while !env.state.done {
-        let mask = env.mask();
-        let choice = (0..mask.len() - 1)
-            .filter(|&a| mask[a] && !failed.contains(&a))
-            .filter_map(|a| {
-                let act = qimeng_mtmc::transform::decode_action(a);
-                qimeng_mtmc::transform::apply_action(
-                    &env.state.program, &task.graph, &shapes, &act, &spec, 1.0,
-                )
-                .ok()
-                .map(|p| {
-                    (a, qimeng_mtmc::gpusim::program_time_us(
-                        &p, &task.graph, &shapes, &spec,
-                    ))
-                })
-            })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        let Some((a, t_next)) = choice else { break };
-        let t_now = eager / env.state.speedup;
-        if t_next >= t_now * 0.99 {
-            break;
-        }
+        // the same cached greedy lookahead the eval harness runs
+        let choice = qimeng_mtmc::eval::greedy_best_action_excluding(
+            &env.state.program, task, &shapes, &spec, &failed, &env.pricer,
+        );
+        let Some((a, _)) = choice else { break };
         let act = qimeng_mtmc::transform::decode_action(a);
         let before = env.state.path_hash;
         let r = env.step(a);
@@ -275,6 +265,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         step += 1;
     }
     println!("best speedup {:.2}x over eager", env.state.best_speedup);
+    print_cache_stats(&cost_cache);
     if args.has("show-code") {
         let lang = if args.get_or("lang", "triton") == "cuda" {
             TargetLang::Cuda
@@ -304,13 +295,37 @@ fn batch_runner(args: &Args) -> Result<BatchRunner> {
     })
 }
 
+/// Honor `--no-cost-cache` on every job of a sweep.
+fn apply_cache_flag(args: &Args, jobs: &mut [BatchJob]) {
+    if args.has("no-cost-cache") {
+        for j in jobs.iter_mut() {
+            j.cfg.use_cost_cache = false;
+        }
+    }
+}
+
+/// Pricing-cache hit/miss summary for a finished sweep or session.
+fn print_cache_stats(cache: &qimeng_mtmc::gpusim::CostCache) {
+    let (hits, misses) = cache.stats();
+    if hits + misses > 0 {
+        eprintln!(
+            "cost-cache: {hits} hits / {misses} misses ({:.1}% hit rate)",
+            100.0 * hits as f64 / (hits + misses) as f64
+        );
+    }
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let mut tasks = suite_tasks(args.get_or("suite", "kb2"))?;
     if let Some(limit) = args.get("limit") {
         tasks.truncate(limit.parse()?);
     }
     let spec = gpu(args)?;
-    let cfg = EvalCfg { seed: args.u64_or("seed", 0xE7A1), ..Default::default() };
+    let cfg = EvalCfg {
+        seed: args.u64_or("seed", 0xE7A1),
+        use_cost_cache: !args.has("no-cost-cache"),
+        ..Default::default()
+    };
     let method = match args.get_or("method", "mtmc") {
         "mtmc" => Method::Mtmc {
             macro_kind: MacroKind::LearnedOrGreedy {
@@ -349,10 +364,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         let runner = batch_runner(args)?;
         let results =
             runner.run(&[BatchJob { method, gpu: spec, tasks: tasks.into(), cfg }]);
-        let (hits, misses) = runner.cache().stats();
-        if hits + misses > 0 {
-            eprintln!("cost-cache: {hits} hits / {misses} misses");
-        }
+        print_cache_stats(runner.cache());
         anyhow::ensure!(
             !runner.sink_failed(),
             "JSONL sink reported I/O failures; output is truncated"
@@ -409,7 +421,9 @@ fn cmd_table(args: &Args) -> Result<()> {
                     (spec.clone(), tasks)
                 })
                 .collect();
-            let results = runner.run(&roster_sweep(&methods, &blocks));
+            let mut jobs = roster_sweep(&methods, &blocks);
+            apply_cache_flag(args, &mut jobs);
+            let results = runner.run(&jobs);
             for (li, level) in (1..=3usize).enumerate() {
                 let mut t = Table::new(
                     &format!(
@@ -426,10 +440,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
                 print!("{}", t.render());
             }
-            let (hits, misses) = runner.cache().stats();
-            if hits + misses > 0 {
-                eprintln!("cost-cache: {hits} hits / {misses} misses");
-            }
+            print_cache_stats(runner.cache());
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
@@ -451,7 +462,9 @@ fn cmd_table(args: &Args) -> Result<()> {
                     (spec.clone(), tasks)
                 })
                 .collect();
-            let results = runner.run(&roster_sweep(&methods, &blocks));
+            let mut jobs = roster_sweep(&methods, &blocks);
+            apply_cache_flag(args, &mut jobs);
+            let results = runner.run(&jobs);
             for (si, (name, _)) in suites.iter().enumerate() {
                 let mut t = Table::new(
                     &format!(
@@ -467,6 +480,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
                 print!("{}", t.render());
             }
+            print_cache_stats(runner.cache());
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
@@ -484,6 +498,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                     jobs.push(BatchJob::new(method.clone(), spec.clone(), tasks));
                 }
             }
+            apply_cache_flag(args, &mut jobs);
             let results = runner.run(&jobs);
             let mut t = Table::new(
                 &format!(
@@ -505,6 +520,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 t.row(cells);
             }
             print!("{}", t.render());
+            print_cache_stats(runner.cache());
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"

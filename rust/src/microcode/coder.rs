@@ -66,6 +66,7 @@ pub(crate) fn draw_bug(action: &Action, rng: &mut Rng) -> MutationKind {
 /// Execute one micro-coding step.
 ///
 /// `cuda`: target language is CUDA (Table 5 ablation) — higher error rates.
+#[allow(clippy::too_many_arguments)]
 pub fn micro_step(
     p: &Program,
     g: &Graph,

@@ -93,7 +93,7 @@ mod tests {
         let lines: Vec<&str> = s.lines().collect();
         // header and rows align on the second column
         let col = lines[1].find("Acc").unwrap();
-        assert_eq!(lines[3].len() >= col, true);
+        assert!(lines[3].len() >= col);
         assert!(lines[4].contains("a-much-longer-method"));
     }
 

@@ -67,21 +67,26 @@ const MAGIC: &[u8; 8] = b"QMMCPAR1";
 /// Persist a parameter set (binary: magic, count, then per-array name
 /// length/name/rank/dims/f32 data, little-endian).
 pub fn save_params(p: &ParamSet, path: &Path) -> Result<()> {
+    assert!(
+        p.names.len() == p.values.len() && p.shapes.len() == p.values.len(),
+        "ParamSet arrays misaligned: {} names / {} shapes / {} values",
+        p.names.len(), p.shapes.len(), p.values.len()
+    );
     let mut f = std::fs::File::create(path)?;
     f.write_all(MAGIC)?;
     f.write_all(&(p.values.len() as u32).to_le_bytes())?;
-    for i in 0..p.values.len() {
-        let name = p.names[i].as_bytes();
+    for ((name, shape), values) in
+        p.names.iter().zip(&p.shapes).zip(&p.values)
+    {
+        let name = name.as_bytes();
         f.write_all(&(name.len() as u32).to_le_bytes())?;
         f.write_all(name)?;
-        f.write_all(&(p.shapes[i].len() as u32).to_le_bytes())?;
-        for &d in &p.shapes[i] {
+        f.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
             f.write_all(&(d as u64).to_le_bytes())?;
         }
-        let bytes: Vec<u8> = p.values[i]
-            .iter()
-            .flat_map(|v| v.to_le_bytes())
-            .collect();
+        let bytes: Vec<u8> =
+            values.iter().flat_map(|v| v.to_le_bytes()).collect();
         f.write_all(&bytes)?;
     }
     Ok(())

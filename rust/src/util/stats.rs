@@ -28,20 +28,31 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.max(eps).ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
-/// Linear-interpolated percentile, q in [0, 100].
+/// Linear-interpolated percentile, q in [0, 100]. NaN-tolerant: samples
+/// are ordered by IEEE `total_cmp` (NaNs sort above +inf) instead of a
+/// panicking `partial_cmp().unwrap()`.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    v.sort_by(|a, b| a.total_cmp(b));
+    percentile_of_sorted(&v, q)
+}
+
+/// [`percentile`] over an already-sorted (ascending) slice — lets callers
+/// computing several percentiles sort once.
+pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
     }
 }
 
@@ -79,7 +90,7 @@ impl std::fmt::Display for BenchStats {
 pub fn bench<F: FnMut()>(min_iters: usize, budget_ms: u64, mut f: F) -> BenchStats {
     // warmup
     f();
-    let mut samples = Vec::new();
+    let mut samples: Vec<f64> = Vec::new();
     let start = Instant::now();
     while samples.len() < min_iters
         || (start.elapsed().as_millis() as u64) < budget_ms
@@ -91,12 +102,14 @@ pub fn bench<F: FnMut()>(min_iters: usize, budget_ms: u64, mut f: F) -> BenchSta
             break;
         }
     }
+    // sort once; each percentile call used to clone + re-sort the samples
+    samples.sort_by(|a, b| a.total_cmp(b));
     BenchStats {
         iters: samples.len(),
         mean_ns: mean(&samples),
-        p50_ns: percentile(&samples, 50.0),
-        p95_ns: percentile(&samples, 95.0),
-        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        p50_ns: percentile_of_sorted(&samples, 50.0),
+        p95_ns: percentile_of_sorted(&samples, 95.0),
+        min_ns: samples.first().copied().unwrap_or(f64::INFINITY),
     }
 }
 
@@ -119,6 +132,28 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(geomean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile_of_sorted(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // regression: partial_cmp().unwrap() used to panic on NaN input
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        // NaN sorts above +inf under total_cmp, so low quantiles are the
+        // finite values and only the top of the range sees the NaN
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn sorted_variant_matches_unsorted() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&xs, q), percentile_of_sorted(&sorted, q));
+        }
     }
 
     #[test]

@@ -90,6 +90,52 @@ fn batch_sweep_matches_per_suite_evaluate() {
     }
 }
 
+/// The pricing cache must be invisible in results: a greedy-lookahead
+/// MTMC sweep (the cache's hottest consumer) produces byte-identical
+/// per-task outcomes with the cache on and off, at any thread count.
+#[test]
+fn cost_cache_on_off_byte_identical_across_thread_counts() {
+    let tasks = kernelbench_level(2)[..8].to_vec();
+    let mk_jobs = |use_cache: bool| -> Vec<BatchJob> {
+        let mut job = BatchJob::new(mtmc(), GpuSpec::a100(), tasks.clone());
+        job.cfg = EvalCfg {
+            seed: 0xCAFE,
+            use_cost_cache: use_cache,
+            ..Default::default()
+        };
+        vec![job]
+    };
+    let mut runs = Vec::new();
+    for threads in [1, 8] {
+        for use_cache in [true, false] {
+            let runner =
+                BatchRunner::new(BatchCfg { threads, sink: None }).unwrap();
+            let r = runner.run(&mk_jobs(use_cache));
+            let (hits, misses) = runner.cache().stats();
+            if use_cache {
+                assert!(hits > 0,
+                        "greedy lookahead must hit the pricing cache");
+            } else {
+                assert_eq!((hits, misses), (0, 0),
+                           "--no-cost-cache must keep the cache silent");
+            }
+            runs.push(r.into_iter().next().unwrap());
+        }
+    }
+    let base = &runs[0];
+    for r in &runs[1..] {
+        assert_eq!(base.metrics, r.metrics);
+        assert_eq!(base.outcomes.len(), r.outcomes.len());
+        for (x, y) in base.outcomes.iter().zip(&r.outcomes) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.compiled, y.compiled);
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(x.speedup.to_bits(), y.speedup.to_bits(),
+                       "{}: cached vs cold speedup bits differ", x.task_id);
+        }
+    }
+}
+
 #[test]
 fn jsonl_sink_records_are_parseable_and_complete() {
     let dir = std::env::temp_dir().join("qimeng_batch_integration");

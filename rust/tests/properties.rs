@@ -291,6 +291,70 @@ fn prop_cost_cache_hit_identical_to_cold_miss() {
     });
 }
 
+/// End-to-end pricing-cache parity: a full MTMC-style episode driven
+/// through an [`OptimEnv`] with a shared `CostCache` attached must be
+/// bit-identical (rewards, speedups, best program) to the same episode
+/// priced cold — including a second warm episode replayed over the
+/// already-populated cache.
+#[test]
+fn prop_cached_episode_bitwise_identical_to_cold() {
+    fn mk<'a>(task: &'a Task, seed: u64, cache: Option<&'a CostCache>)
+              -> OptimEnv<'a> {
+        OptimEnv::with_cache(
+            task,
+            GpuSpec::a100(),
+            LlmProfile::get(ProfileId::GeminiFlash25),
+            EnvConfig::default(),
+            seed,
+            cache,
+        )
+    }
+    check(909, 24, gen_seq, |seq: &ActionSeq| {
+        let task = &tasks()[seq.task_idx % tasks().len()];
+        let cache = CostCache::new();
+        // two warm passes: the second prices everything from the memo
+        for _pass in 0..2 {
+            let mut cold = mk(task, seq.quality_milli as u64, None);
+            let mut warm =
+                mk(task, seq.quality_milli as u64, Some(&cache));
+            prop_assert!(
+                cold.eager_us.to_bits() == warm.eager_us.to_bits(),
+                "{}: eager baseline diverged", task.id
+            );
+            for &a in seq.actions.iter().cycle().take(cold.cfg.max_steps) {
+                if cold.state.done {
+                    break;
+                }
+                let mask = cold.mask();
+                let pick = if mask[a % ACTION_DIM] {
+                    a % ACTION_DIM
+                } else {
+                    STOP_ACTION
+                };
+                let rc = cold.step(pick);
+                let rw = warm.step(pick);
+                prop_assert!(
+                    rc.reward.to_bits() == rw.reward.to_bits()
+                        && rc.done == rw.done,
+                    "{}: step result diverged", task.id
+                );
+                prop_assert!(
+                    cold.state.speedup.to_bits()
+                        == warm.state.speedup.to_bits(),
+                    "{}: speedup diverged", task.id
+                );
+            }
+            prop_assert!(
+                cold.state.best_speedup.to_bits()
+                    == warm.state.best_speedup.to_bits()
+                    && cold.state.best_program == warm.state.best_program,
+                "{}: episode outcome diverged", task.id
+            );
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_trajectory_store_roundtrips() {
     #[derive(Clone, Debug)]
@@ -319,7 +383,6 @@ fn prop_trajectory_store_roundtrips() {
                         })
                         .collect(),
                 })
-                .map(|t| t)
                 .collect::<Vec<_>>(),
         )
     };
