@@ -1,0 +1,153 @@
+//! Edge-memo transition-replay benchmark (the ISSUE-3 perf deliverable).
+//!
+//! Runs a table3-shaped slice — episode-heavy MTMC methods (the greedy
+//! surrogate under two macro labels, so cross-method transition reuse is
+//! real) plus a baseline over KernelBench levels 1-3 — through the
+//! [`BatchRunner`] in two regimes:
+//!
+//! - **cold**: edge memo disabled (`use_edge_memo = false`), re-timed on
+//!   an already-run runner so the cost/analysis caches are warm — the
+//!   delta isolates the transition memo itself;
+//! - **warm**: edge memo enabled, second sweep over the same runner — every
+//!   episode transition replays from the shared transposition table
+//!   instead of re-running micro-coding + verification + pricing.
+//!
+//! Per-task outcomes are asserted byte-identical across *all* runs (both
+//! regimes, both repetitions), and the warm shared-memo sweep must be
+//! strictly faster than the cold one. Prints timings, speedup and the
+//! memo's hit/miss/eviction stats.
+//!
+//! Env knobs: QIMENG_LIMIT (tasks per level, default 8), QIMENG_THREADS,
+//! QIMENG_REPS (timed repetitions per mode, default 3; best time wins).
+
+use qimeng_mtmc::eval::{
+    roster_sweep, BatchCfg, BatchRunner, MacroKind, Method, SuiteResult,
+};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::tasks::{kernelbench_level, Task};
+
+fn jobs(use_edge_memo: bool, blocks: &[(GpuSpec, Vec<Task>)],
+        methods: &[Method]) -> Vec<qimeng_mtmc::eval::BatchJob> {
+    let mut jobs = roster_sweep(methods, blocks);
+    for j in &mut jobs {
+        j.cfg.use_edge_memo = use_edge_memo;
+    }
+    jobs
+}
+
+fn main() {
+    let limit: usize = std::env::var("QIMENG_LIMIT")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let threads: usize = std::env::var("QIMENG_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(qimeng_mtmc::util::parallel::default_threads);
+    let reps: usize = std::env::var("QIMENG_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+        .max(1);
+
+    // the episode-heavy slice of the Table 3 roster; the two MTMC rows
+    // drive identical greedy-surrogate episodes, so a shared memo pays
+    // even within a single cold sweep
+    let methods = vec![
+        Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiPro25,
+        },
+        Method::Mtmc {
+            macro_kind: MacroKind::LearnedOrGreedy { params_path: None },
+            micro: ProfileId::GeminiPro25,
+        },
+        Method::Mtmc {
+            macro_kind: MacroKind::GreedyLookahead,
+            micro: ProfileId::GeminiFlash25,
+        },
+        Method::Baseline { profile: ProfileId::Gpt4o },
+    ];
+    let blocks: Vec<(GpuSpec, Vec<Task>)> = (1..=3usize)
+        .map(|level| {
+            let mut tasks = kernelbench_level(level);
+            tasks.truncate(limit);
+            (GpuSpec::a100(), tasks)
+        })
+        .collect();
+    let units: usize =
+        blocks.iter().map(|(_, t)| t.len()).sum::<usize>() * methods.len();
+    println!(
+        "== edge-memo bench: table3-shaped slice, {units} units, \
+         {threads} threads, best of {reps} =="
+    );
+
+    // one runner per regime; in both, sweep 0 warms the cost/analysis
+    // caches so the timed sweeps differ only in transition replay
+    let cold_runner = BatchRunner::new(BatchCfg { threads, sink: None })
+        .expect("batch runner");
+    let warm_runner = BatchRunner::new(BatchCfg { threads, sink: None })
+        .expect("batch runner");
+    let cold_jobs = jobs(false, &blocks, &methods);
+    let warm_jobs = jobs(true, &blocks, &methods);
+    let mut reference: Option<Vec<SuiteResult>> = None;
+    let mut check = |results: Vec<SuiteResult>| match &reference {
+        None => reference = Some(results),
+        Some(base) => assert_outcomes_identical(base, &results),
+    };
+    check(cold_runner.run(&cold_jobs)); // warm the cost/analysis caches
+    check(warm_runner.run(&warm_jobs)); // populate the edge memo
+
+    let mut cold_best = f64::INFINITY;
+    let mut warm_best = f64::INFINITY;
+    for rep in 0..reps {
+        let t0 = std::time::Instant::now();
+        check(cold_runner.run(&cold_jobs));
+        let cold = t0.elapsed().as_secs_f64();
+        cold_best = cold_best.min(cold);
+        let t0 = std::time::Instant::now();
+        check(warm_runner.run(&warm_jobs));
+        let warm = t0.elapsed().as_secs_f64();
+        warm_best = warm_best.min(warm);
+        println!("rep {rep}: cold {cold:.3}s, warm shared-memo {warm:.3}s");
+    }
+    let s = warm_runner.edge_memo().stats();
+    println!(
+        "cold {cold_best:.3}s, warm {warm_best:.3}s -> {:.2}x faster; \
+         edge-memo {} hits / {} misses ({:.1}% hit rate, {} evictions)",
+        cold_best / warm_best,
+        s.hits, s.misses, 100.0 * s.hit_rate(), s.evictions
+    );
+    assert_eq!(
+        cold_runner.edge_memo().stats().lookups, 0,
+        "cold regime must never touch the transition memo"
+    );
+    assert!(s.hits > 0, "warm regime must replay transitions");
+    assert!(
+        warm_best < cold_best,
+        "warm shared-memo sweep must be strictly faster than cold \
+         (warm {warm_best:.3}s vs cold {cold_best:.3}s)"
+    );
+    println!("per-task outcomes byte-identical across all runs");
+}
+
+/// Memoized and cold sweeps must agree bit-for-bit, outcome-for-outcome.
+fn assert_outcomes_identical(a: &[SuiteResult], b: &[SuiteResult]) {
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.metrics, rb.metrics, "{} metrics diverged", ra.method);
+        assert_eq!(ra.outcomes.len(), rb.outcomes.len());
+        for (x, y) in ra.outcomes.iter().zip(&rb.outcomes) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.compiled, y.compiled);
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(
+                x.speedup.to_bits(),
+                y.speedup.to_bits(),
+                "{}: warm vs cold speedup bits diverged",
+                x.task_id
+            );
+        }
+    }
+}

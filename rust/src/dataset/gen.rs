@@ -2,11 +2,12 @@
 //! parallel across tasks.
 
 use super::store::{TrajStep, Trajectory};
-use crate::env::{EnvConfig, StepSignal, TreeEnv};
-use crate::gpusim::GpuSpec;
+use crate::env::{EnvCaches, EnvConfig, StepSignal, TreeEnv};
+use crate::gpusim::{CostCache, GpuSpec};
 use crate::microcode::{LlmProfile, ProfileId};
 use crate::policy::{HeuristicPolicy, Policy, RandomPolicy};
 use crate::tasks::Task;
+use crate::transform::AnalysisCache;
 use crate::util::{parallel::par_map, Rng};
 
 /// Generation configuration.
@@ -79,17 +80,27 @@ pub fn signal_code(s: &StepSignal) -> u8 {
 /// `spec` with the given micro-coding profile.
 pub fn generate(tasks: &[Task], spec: &GpuSpec, profile_id: ProfileId,
                 cfg: &DatasetCfg) -> (Vec<Trajectory>, DatasetStats) {
+    // thread-safe memos shared across every worker: masks/pricing for the
+    // whole corpus run through one analysis + cost cache (bit-identical
+    // either way; determinism is guarded by rust/tests/pipeline.rs)
+    let analysis_cache = AnalysisCache::new();
+    let cost_cache = CostCache::new();
     let per_task_results = par_map(tasks, cfg.threads, |ti, task| {
         let mut out = Vec::with_capacity(cfg.per_task);
         let mut master = Rng::new(cfg.seed ^ (ti as u64) << 20);
         // one tree (one base seed) per task: episodes share the cache
         let tree_seed = master.next_u64();
-        let mut env = TreeEnv::new(
+        let mut env = TreeEnv::with_caches(
             task,
             spec.clone(),
             LlmProfile::get(profile_id),
             cfg.env.clone(),
             tree_seed,
+            EnvCaches {
+                cost: Some(&cost_cache),
+                analysis: Some(&analysis_cache),
+                edges: None, // each task's tree owns its replay table
+            },
         );
         for ep in 0..cfg.per_task {
             env.reset();

@@ -1,0 +1,208 @@
+//! Shared transition memo: a sharded, thread-safe, capacity-bounded
+//! transposition table over the env's edge-deterministic transitions.
+//!
+//! [`OptimEnv`](super::OptimEnv) transitions are fully determined by
+//! (task, spec, profile, env config, base seed, state path, action) — the
+//! paper's tree-structured environment semantics. [`TreeEnv`](super::TreeEnv)
+//! used to keep a private `(node, action) → edge` map per env; promoting
+//! it to this shared table lets the whole eval stack — every
+//! [`OptimEnv`], greedy runner, and the
+//! [`BatchRunner`](crate::eval::BatchRunner)'s method × suite × gpu sweep —
+//! replay transitions any worker has already paid for. Methods that run
+//! identical episodes (e.g. the greedy surrogate under two macro labels),
+//! repeated sweeps, and PPO's revisits all hit the same entries.
+//!
+//! Keys combine an **edge context** (task id + graph fingerprint + spec +
+//! profile + the transition-relevant env-config bits + base seed) with
+//! the state `path_hash` and the action, so entries can only alias within
+//! one (task, spec, profile, seed-class) — exactly the scope in which
+//! transitions are reproducible. A hit replays the stored (program,
+//! signal, speedup) onto the live state; because the transition being
+//! skipped is deterministic, episode outcomes are bit-identical with the
+//! memo on, off, shared, or under eviction pressure (guarded by
+//! `prop_edge_memo_episode_bitwise_identical` and `rust/tests/batch.rs`).
+
+use std::sync::Arc;
+
+use super::reward::StepSignal;
+use super::stepper::EnvConfig;
+use crate::gpusim::{combine, spec_tag, Fnv, GpuSpec, MemoStats, ShardedMemo};
+use crate::kir::Program;
+use crate::microcode::LlmProfile;
+use crate::tasks::Task;
+
+/// Default total capacity. Edges carry whole programs, so this is kept an
+/// order of magnitude below the cost cache's bound; overflow FIFO-evicts
+/// (recompute, never unbounded memory).
+const DEFAULT_MAX_ENTRIES: usize = 200_000;
+
+/// One memoized transition: what applying `action` at the keyed state
+/// produced. `program: None` records a failed/rejected step (state
+/// unchanged); `speedup` is the post-step speedup (meaningful only when
+/// the program moved). The program is `Arc`-wrapped so a table hit
+/// clones a refcount, not a multi-kernel program, inside the shard lock
+/// (the [`ShardedMemo`] contract: values must be cheap to clone).
+#[derive(Clone, Debug)]
+pub struct CachedEdge {
+    pub program: Option<Arc<Program>>,
+    pub signal: StepSignal,
+    pub speedup: f64,
+}
+
+/// The shared transition table.
+pub struct EdgeMemo {
+    edges: ShardedMemo<CachedEdge>,
+}
+
+impl Default for EdgeMemo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EdgeMemo {
+    pub fn new() -> EdgeMemo {
+        Self::with_capacity(DEFAULT_MAX_ENTRIES)
+    }
+
+    /// A memo bounded to `max_entries` edges (FIFO eviction per shard).
+    /// Tiny capacities are legitimate — the differential tests run under
+    /// eviction pressure to prove outcomes never depend on residency.
+    pub fn with_capacity(max_entries: usize) -> EdgeMemo {
+        EdgeMemo { edges: ShardedMemo::new(max_entries) }
+    }
+
+    pub fn get(&self, key: u64) -> Option<CachedEdge> {
+        self.edges.get(key)
+    }
+
+    pub fn insert(&self, key: u64, edge: CachedEdge) {
+        self.edges.insert(key, edge);
+    }
+
+    /// Traffic counters (`hits + misses == lookups`; evictions monotone).
+    pub fn stats(&self) -> MemoStats {
+        self.edges.stats()
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+}
+
+impl std::fmt::Debug for EdgeMemo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "EdgeMemo {{ entries: {}, hits: {}, misses: {}, evictions: {} }}",
+            self.len(), s.hits, s.misses, s.evictions
+        )
+    }
+}
+
+/// Fingerprint of everything that scopes a transition besides the state
+/// and action: the task (id + perf-graph fingerprint — the verif twin is
+/// derived from the same id), the GPU spec, the full competence profile
+/// (profiles are scaled/perturbed by the harness, so every knob is
+/// hashed), the transition-relevant env-config bits (`cuda` changes
+/// micro-coding error rates, `verif_trials` changes the correctness
+/// check), and the episode's base seed (the seed-class). `max_steps` and
+/// reward shaping are deliberately excluded: truncation and rewards are
+/// reconstructed at replay time, so envs with different budgets or reward
+/// configs still share edges.
+pub(crate) fn edge_context(task: &Task, graph_ctx: u64, spec: &GpuSpec,
+                           profile: &LlmProfile, cfg: &EnvConfig,
+                           base_seed: u64) -> u64 {
+    let mut h = Fnv::new();
+    h.bytes(task.id.as_bytes());
+    h.u64(graph_ctx);
+    h.u64(spec_tag(spec));
+    h.bytes(profile.name.as_bytes());
+    h.f64(profile.atomic_err);
+    h.f64(profile.holistic_err);
+    h.f64(profile.complexity_exp);
+    h.f64(profile.compile_frac);
+    h.f64(profile.param_skill);
+    h.f64(profile.ambition);
+    h.f64(profile.cuda_err_mult);
+    h.usize(profile.refine_rounds);
+    h.byte(cfg.cuda as u8);
+    h.usize(cfg.verif_trials);
+    h.u64(base_seed);
+    h.finish()
+}
+
+/// The full table key of one (state, action) edge under a context.
+pub(crate) fn edge_key(ctx: u64, path_hash: u64, action: usize) -> u64 {
+    combine(ctx, path_hash, action as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::microcode::ProfileId;
+
+    fn any_task() -> Task {
+        crate::tasks::kernelbench_level(1)[0].clone()
+    }
+
+    fn ctx_of(task: &Task, seed: u64, cuda: bool) -> u64 {
+        let shapes = crate::graph::infer_shapes(&task.graph);
+        edge_context(
+            task,
+            crate::gpusim::graph_fingerprint(&task.graph, &shapes),
+            &GpuSpec::a100(),
+            &LlmProfile::get(ProfileId::GeminiPro25),
+            &EnvConfig { cuda, ..Default::default() },
+            seed,
+        )
+    }
+
+    #[test]
+    fn context_scopes_seed_and_language() {
+        let t = any_task();
+        let base = ctx_of(&t, 7, false);
+        assert_eq!(base, ctx_of(&t, 7, false), "context must be stable");
+        assert_ne!(base, ctx_of(&t, 8, false), "seed-class must split");
+        assert_ne!(base, ctx_of(&t, 7, true), "target language must split");
+    }
+
+    #[test]
+    fn context_ignores_step_budget_and_rewards() {
+        let t = any_task();
+        let shapes = crate::graph::infer_shapes(&t.graph);
+        let gctx = crate::gpusim::graph_fingerprint(&t.graph, &shapes);
+        let profile = LlmProfile::get(ProfileId::GeminiFlash25);
+        let spec = GpuSpec::v100();
+        let short = EnvConfig { max_steps: 3, ..Default::default() };
+        let long = EnvConfig { max_steps: 30, ..Default::default() };
+        assert_eq!(
+            edge_context(&t, gctx, &spec, &profile, &short, 1),
+            edge_context(&t, gctx, &spec, &profile, &long, 1),
+            "step budgets share edges (truncation replays outside the memo)"
+        );
+    }
+
+    #[test]
+    fn stats_identity_holds() {
+        let memo = EdgeMemo::with_capacity(8);
+        let edge = CachedEdge {
+            program: None,
+            signal: StepSignal::Rejected,
+            speedup: 1.0,
+        };
+        assert!(memo.get(1).is_none());
+        memo.insert(1, edge.clone());
+        assert!(memo.get(1).is_some());
+        memo.insert(1, edge); // same-key reinsert: no eviction bookkeeping
+        let s = memo.stats();
+        assert_eq!(s.hits + s.misses, s.lookups);
+        assert_eq!((s.lookups, s.hits, s.misses, s.evictions), (2, 1, 1, 0));
+        assert_eq!(memo.len(), 1);
+    }
+}

@@ -10,12 +10,14 @@
 //! deterministic per-edge seeds, so training never waits on fresh
 //! micro-coding rollouts for states it has already visited.
 
+mod memo;
 mod obs;
 mod reward;
 mod stepper;
 mod tree;
 
+pub use memo::{CachedEdge, EdgeMemo};
 pub use obs::{featurize, OBS_DIM};
 pub use reward::{shape_reward, RewardCfg, StepSignal};
-pub use stepper::{EnvConfig, EnvState, OptimEnv, StepResult};
+pub use stepper::{EnvCaches, EnvConfig, EnvState, OptimEnv, StepResult};
 pub use tree::TreeEnv;

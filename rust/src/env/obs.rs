@@ -5,7 +5,7 @@
 //!
 //! Must stay in sync with `python/compile/model.py::CONFIG["obs_dim"]`.
 
-use crate::gpusim::{kernel_time_us, GpuSpec};
+use crate::gpusim::{GpuSpec, Pricer};
 use crate::graph::{Graph, Op, OpClass};
 use crate::kir::Program;
 use crate::transform::{ACTION_DIM, NUM_OPT_TYPES};
@@ -20,6 +20,10 @@ fn log_norm(x: f64, scale: f64) -> f32 {
 
 /// Featurize the current environment state.
 ///
+/// `pricer`: the env's pricing handle — the hottest-kernel feature prices
+/// every kernel, and routing it through the per-sweep cost memo makes the
+/// per-step observation encode a set of cache hits instead of fresh
+/// cost-model walks (bit-identical either way);
 /// `history`: most-recent-first action indices (up to 4 used);
 /// `speedup`/`best_speedup`: current and best-so-far vs eager;
 /// `step_frac`: step / max_steps; `mask`: current action validity.
@@ -29,6 +33,7 @@ pub fn featurize(
     shapes: &[Vec<usize>],
     p: &Program,
     spec: &GpuSpec,
+    pricer: &Pricer,
     mask: &[bool],
     history: &[usize],
     speedup: f64,
@@ -86,16 +91,21 @@ pub fn featurize(
     f.push(frac(&|k| k.schedule.loop_order != crate::kir::LoopOrder::Naive));
     f.push(frac(&|k| k.schedule.vector_width > 1));
     f.push(p.mean_sophistication() / 5.0);
-    // smem utilisation of the hottest kernel
-    let hot_kernel = p
-        .kernels
-        .iter()
-        .max_by(|a, b| {
-            let ta = kernel_time_us(a, g, shapes, spec).time_us;
-            let tb = kernel_time_us(b, g, shapes, spec).time_us;
-            ta.partial_cmp(&tb).unwrap()
-        });
-    f.push(hot_kernel.map_or(0.0, |k| {
+    // smem utilisation of the hottest kernel: price each kernel exactly
+    // once and take the argmax (last max wins, matching Iterator::max_by)
+    let mut hot_kernel: Option<(usize, f64)> = None;
+    for (ki, k) in p.kernels.iter().enumerate() {
+        let t = pricer.kernel_time_us(k, g, shapes, spec).time_us;
+        let better = match hot_kernel {
+            None => true,
+            Some((_, best)) => t >= best,
+        };
+        if better {
+            hot_kernel = Some((ki, t));
+        }
+    }
+    f.push(hot_kernel.map_or(0.0, |(ki, _)| {
+        let k = &p.kernels[ki];
         (k.schedule.smem_bytes() as f32 / spec.smem_bytes() as f32).min(1.0)
     }));
 
@@ -160,8 +170,10 @@ mod tests {
     #[test]
     fn obs_dim_and_bounds() {
         let (g, shapes, p, spec) = setup();
+        let pricer = Pricer::new(None, &g, &shapes);
         let mask = action_mask(&p, &g, &shapes, &spec);
-        let obs = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        let obs = featurize(&g, &shapes, &p, &spec, &pricer, &mask, &[],
+                            1.0, 1.0, 0.0);
         assert_eq!(obs.len(), OBS_DIM);
         for (i, v) in obs.iter().enumerate() {
             assert!(v.is_finite(), "feature {i} not finite");
@@ -172,28 +184,54 @@ mod tests {
     #[test]
     fn schedule_changes_move_features() {
         let (g, shapes, mut p, spec) = setup();
+        let pricer = Pricer::new(None, &g, &shapes);
         let mask = action_mask(&p, &g, &shapes, &spec);
-        let before = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        let before = featurize(&g, &shapes, &p, &spec, &pricer, &mask, &[],
+                               1.0, 1.0, 0.0);
         p.kernels[0].schedule.block_tile = Some((64, 64, 32));
-        let after = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
+        let after = featurize(&g, &shapes, &p, &spec, &pricer, &mask, &[],
+                              1.0, 1.0, 0.0);
         assert_ne!(before, after);
     }
 
     #[test]
     fn hardware_distinguishable() {
         let (g, shapes, p, _) = setup();
+        let pricer = Pricer::new(None, &g, &shapes);
         let mask = action_mask(&p, &g, &shapes, &GpuSpec::v100());
-        let v = featurize(&g, &shapes, &p, &GpuSpec::v100(), &mask, &[], 1.0, 1.0, 0.0);
-        let h = featurize(&g, &shapes, &p, &GpuSpec::h100(), &mask, &[], 1.0, 1.0, 0.0);
+        let v = featurize(&g, &shapes, &p, &GpuSpec::v100(), &pricer, &mask,
+                          &[], 1.0, 1.0, 0.0);
+        let h = featurize(&g, &shapes, &p, &GpuSpec::h100(), &pricer, &mask,
+                          &[], 1.0, 1.0, 0.0);
         assert_ne!(v, h);
     }
 
     #[test]
     fn history_encoded() {
         let (g, shapes, p, spec) = setup();
+        let pricer = Pricer::new(None, &g, &shapes);
         let mask = action_mask(&p, &g, &shapes, &spec);
-        let none = featurize(&g, &shapes, &p, &spec, &mask, &[], 1.0, 1.0, 0.0);
-        let some = featurize(&g, &shapes, &p, &spec, &mask, &[3, 17], 1.0, 1.0, 0.0);
+        let none = featurize(&g, &shapes, &p, &spec, &pricer, &mask, &[],
+                             1.0, 1.0, 0.0);
+        let some = featurize(&g, &shapes, &p, &spec, &pricer, &mask,
+                             &[3, 17], 1.0, 1.0, 0.0);
         assert_ne!(none, some);
+    }
+
+    #[test]
+    fn cached_and_cold_pricer_produce_identical_features() {
+        let (g, shapes, p, spec) = setup();
+        let cache = crate::gpusim::CostCache::new();
+        let cold = Pricer::new(None, &g, &shapes);
+        let warm = Pricer::new(Some(&cache), &g, &shapes);
+        let mask = action_mask(&p, &g, &shapes, &spec);
+        let a = featurize(&g, &shapes, &p, &spec, &cold, &mask, &[],
+                          1.2, 1.4, 0.5);
+        for _ in 0..2 {
+            let b = featurize(&g, &shapes, &p, &spec, &warm, &mask, &[],
+                              1.2, 1.4, 0.5);
+            assert_eq!(a, b, "observation must not depend on the cache");
+        }
+        assert!(cache.stats().0 > 0, "second featurize must hit the memo");
     }
 }

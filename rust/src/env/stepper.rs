@@ -3,20 +3,27 @@
 //! Transitions are **edge-deterministic**: the randomness of a step is
 //! seeded by (episode seed, state path, action), so revisiting the same
 //! state-action always reproduces the same micro-coding outcome. This is
-//! precisely the paper's tree-structured environment semantics —
-//! [`super::TreeEnv`] adds memoization on top so PPO replays never pay
-//! for recomputation.
+//! precisely the paper's tree-structured environment semantics — and what
+//! makes the whole eval stack memoizable: an [`OptimEnv`] built with an
+//! [`EdgeMemo`](super::EdgeMemo) attached replays any transition *any*
+//! env sharing the memo has already taken, instead of re-running
+//! micro-coding, correctness checks and cost analysis. This is the role
+//! the paper's pre-collected 60k trajectories play (§4.2): never paying
+//! twice for a transition the tree has already seen.
 
+use std::sync::Arc;
+
+use super::memo::{self, CachedEdge, EdgeMemo};
 use super::obs::featurize;
 use super::reward::{shape_reward, RewardCfg, StepSignal};
-use crate::gpusim::{CostCache, GpuSpec, Pricer};
+use crate::gpusim::{graph_fingerprint, CostCache, GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::kir::{lower_naive, Program};
 use crate::microcode::{
-    check_correct, micro_step, CheckOutcome, LlmProfile, StepOutcome,
+    check_correct, micro_step_at, CheckOutcome, LlmProfile, StepOutcome,
 };
 use crate::tasks::Task;
-use crate::transform::{action_mask, decode_action, STOP_ACTION};
+use crate::transform::{decode_action, AnalysisCache, Analyzer, STOP_ACTION};
 use crate::util::Rng;
 
 /// Environment configuration.
@@ -37,6 +44,28 @@ impl Default for EnvConfig {
             cuda: false,
             reward: RewardCfg::default(),
         }
+    }
+}
+
+/// The memo subsystems an env (or a whole sweep) routes through. All
+/// three are optional and independent, and none of them changes outcomes
+/// — only wall-clock:
+/// - `cost`: kernel/eager pricing memo ([`CostCache`]);
+/// - `analysis`: region/action-mask memo ([`AnalysisCache`]);
+/// - `edges`: whole-transition memo ([`EdgeMemo`], `Arc`-shared so a
+///   [`super::TreeEnv`] can own its table and the [`crate::eval::BatchRunner`]
+///   can share one across workers).
+#[derive(Clone, Debug, Default)]
+pub struct EnvCaches<'a> {
+    pub cost: Option<&'a CostCache>,
+    pub analysis: Option<&'a AnalysisCache>,
+    pub edges: Option<Arc<EdgeMemo>>,
+}
+
+impl<'a> EnvCaches<'a> {
+    /// No caching anywhere — the bit-identical cold reference.
+    pub fn none() -> EnvCaches<'a> {
+        EnvCaches::default()
     }
 }
 
@@ -76,6 +105,13 @@ pub struct OptimEnv<'a> {
     /// lookahead in the harness) through a per-sweep [`CostCache`] when
     /// one is attached; bit-identical to direct pricing either way.
     pub pricer: Pricer<'a>,
+    /// Analysis handle: routes region analysis and action masks through a
+    /// per-sweep [`AnalysisCache`] when one is attached.
+    pub analyzer: Analyzer<'a>,
+    /// Shared transition memo; `None` = every step runs live.
+    memo: Option<Arc<EdgeMemo>>,
+    /// Scope fingerprint of this env's transitions in the [`EdgeMemo`].
+    edge_ctx: u64,
     pub(crate) base_seed: u64,
 }
 
@@ -89,17 +125,30 @@ fn mix(a: u64, b: u64) -> u64 {
 impl<'a> OptimEnv<'a> {
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> OptimEnv<'a> {
-        Self::with_cache(task, spec, profile, cfg, seed, None)
+        Self::with_caches(task, spec, profile, cfg, seed, EnvCaches::none())
     }
 
-    /// Like [`OptimEnv::new`], pricing through a shared [`CostCache`].
-    /// Outcomes are bit-identical with and without the cache (the cost
-    /// model is pure); only wall-clock differs.
+    /// Like [`OptimEnv::new`], pricing through a shared [`CostCache`]
+    /// (compatibility constructor predating [`OptimEnv::with_caches`]).
     pub fn with_cache(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                       cfg: EnvConfig, seed: u64,
                       cache: Option<&'a CostCache>) -> OptimEnv<'a> {
+        Self::with_caches(task, spec, profile, cfg, seed,
+                          EnvCaches { cost: cache, ..EnvCaches::none() })
+    }
+
+    /// Build an env wired into a sweep's memo subsystems. Outcomes are
+    /// bit-identical for every cache combination (all three memoize pure
+    /// or edge-deterministic computations); only wall-clock differs.
+    pub fn with_caches(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+                       cfg: EnvConfig, seed: u64,
+                       caches: EnvCaches<'a>) -> OptimEnv<'a> {
         let shapes = infer_shapes(&task.graph);
-        let pricer = Pricer::new(cache, &task.graph, &shapes);
+        let graph_ctx = graph_fingerprint(&task.graph, &shapes);
+        let pricer = Pricer::from_ctx(caches.cost, graph_ctx);
+        let analyzer = Analyzer::from_ctx(caches.analysis, graph_ctx);
+        let edge_ctx = memo::edge_context(task, graph_ctx, &spec, &profile,
+                                          &cfg, seed);
         let affinity = crate::gpusim::library_affinity(&task.id);
         let eager_us = pricer.eager_time_us(&task.graph, &shapes, &spec,
                                             affinity);
@@ -117,12 +166,33 @@ impl<'a> OptimEnv<'a> {
             done: false,
         };
         OptimEnv { task, spec, profile, cfg, shapes, eager_us, state,
-                   pricer, base_seed: seed }
+                   pricer, analyzer, memo: caches.edges, edge_ctx,
+                   base_seed: seed }
     }
 
-    /// Validity mask for the current state.
+    /// The memo subsystems this env routes through (used to rebuild an
+    /// env over the same task, e.g. [`super::TreeEnv::reset`]).
+    pub fn caches(&self) -> EnvCaches<'a> {
+        EnvCaches {
+            cost: self.pricer.cache(),
+            analysis: self.analyzer.cache(),
+            edges: self.memo.clone(),
+        }
+    }
+
+    /// The shared transition memo, if one is attached.
+    pub fn edge_memo(&self) -> Option<&EdgeMemo> {
+        self.memo.as_deref()
+    }
+
+    /// Validity mask for the current state (through the analysis memo
+    /// when one is attached).
     pub fn mask(&self) -> Vec<bool> {
-        action_mask(&self.state.program, &self.task.graph, &self.shapes, &self.spec)
+        self.analyzer
+            .mask(&self.state.program, &self.task.graph, &self.shapes,
+                  &self.spec)
+            .as_ref()
+            .clone()
     }
 
     /// Observation vector for the current state.
@@ -132,6 +202,7 @@ impl<'a> OptimEnv<'a> {
             &self.shapes,
             &self.state.program,
             &self.spec,
+            &self.pricer,
             mask,
             &self.state.history,
             self.state.speedup,
@@ -157,6 +228,14 @@ impl<'a> OptimEnv<'a> {
     /// budgeted call still attempts its action and then terminates
     /// (truncation is checked *after* the attempt, so no step of the
     /// budget is silently swallowed).
+    ///
+    /// With an [`EdgeMemo`] attached, a transition the memo has already
+    /// seen (from this env, an earlier episode over the same tree, or any
+    /// other worker sharing the table) is *replayed* instead of re-run:
+    /// the stored (program, signal, speedup) is applied to the live state
+    /// and the reward/truncation are recomputed for this step index.
+    /// Because transitions are edge-deterministic, the replay is
+    /// bit-identical to the live step it stands in for.
     pub fn step(&mut self, action: usize) -> StepResult {
         assert!(!self.state.done, "episode finished");
         let step_idx = self.state.step;
@@ -174,18 +253,49 @@ impl<'a> OptimEnv<'a> {
             };
         }
 
+        let key = self
+            .memo
+            .as_ref()
+            .map(|m| (Arc::clone(m),
+                      memo::edge_key(self.edge_ctx, self.state.path_hash,
+                                     action)));
+        if let Some((memo, key)) = &key {
+            if let Some(edge) = memo.get(*key) {
+                return self.replay(edge, step_idx);
+            }
+        }
+        let signal = self.transition(action);
+        if let Some((memo, key)) = &key {
+            memo.insert(*key, CachedEdge {
+                program: matches!(signal, StepSignal::Correct { .. })
+                    .then(|| Arc::new(self.state.program.clone())),
+                signal,
+                speedup: self.state.speedup,
+            });
+        }
+        self.finish(signal, step_idx)
+    }
+
+    /// Run the live transition (micro-coding + verification + pricing),
+    /// mutating the state on acceptance. The regions feeding the
+    /// transform and the bug-site lookup come from the (possibly cached)
+    /// analyzer — one analysis per state instead of several per step.
+    fn transition(&mut self, action: usize) -> StepSignal {
         let mut rng = Rng::new(self.edge_seed(action));
-        let outcome = micro_step(
+        let regions =
+            self.analyzer.regions(&self.state.program, &self.task.graph);
+        let outcome = micro_step_at(
             &self.state.program,
             &self.task.graph,
             &self.shapes,
+            &regions,
             &decode_action(action),
             &self.profile,
             &self.spec,
             self.cfg.cuda,
             &mut rng,
         );
-        let signal = match outcome {
+        match outcome {
             StepOutcome::Rejected(_) => StepSignal::Rejected,
             StepOutcome::CompileError => StepSignal::CompileFail,
             StepOutcome::Buggy(p) => {
@@ -199,7 +309,29 @@ impl<'a> OptimEnv<'a> {
                 }
             }
             StepOutcome::Ok(p) => self.accept(p),
-        };
+        }
+    }
+
+    /// Apply a memoized edge to the live state — the exact state updates
+    /// [`OptimEnv::transition`] + [`OptimEnv::accept`] would perform.
+    fn replay(&mut self, edge: CachedEdge, step_idx: usize) -> StepResult {
+        if let Some(p) = edge.program {
+            let action = *self.state.history.first().unwrap();
+            self.state.path_hash = mix(self.state.path_hash,
+                                       action as u64 + 1);
+            self.state.program = (*p).clone();
+            self.state.speedup = edge.speedup;
+            if edge.speedup > self.state.best_speedup {
+                self.state.best_speedup = edge.speedup;
+                self.state.best_program = self.state.program.clone();
+            }
+        }
+        self.finish(edge.signal, step_idx)
+    }
+
+    /// Shape the reward and apply the step-budget truncation rule (shared
+    /// by live and replayed steps, so `done` semantics cannot drift).
+    fn finish(&mut self, signal: StepSignal, step_idx: usize) -> StepResult {
         let reward = shape_reward(&signal, step_idx, &self.cfg.reward);
         let done = self.state.step >= self.cfg.max_steps;
         if done {
@@ -314,6 +446,48 @@ mod tests {
         assert!(cached.state.done);
         assert_eq!(plain.state.best_speedup.to_bits(),
                    cached.state.best_speedup.to_bits());
+    }
+
+    #[test]
+    fn fully_cached_env_matches_plain_bitwise() {
+        // all three memo subsystems attached at once, and a second
+        // episode replayed over the warm edge memo
+        let (tasks, _) = env(12);
+        let cost = crate::gpusim::CostCache::new();
+        let analysis = AnalysisCache::new();
+        let edges = Arc::new(EdgeMemo::new());
+        for pass in 0..2 {
+            let mut plain = mk(&tasks, 21);
+            let mut cached = OptimEnv::with_caches(
+                &tasks[0],
+                GpuSpec::a100(),
+                LlmProfile::get(ProfileId::GeminiPro25),
+                EnvConfig::default(),
+                21,
+                EnvCaches {
+                    cost: Some(&cost),
+                    analysis: Some(&analysis),
+                    edges: Some(Arc::clone(&edges)),
+                },
+            );
+            while !plain.state.done {
+                let mask = plain.mask();
+                assert_eq!(mask, cached.mask(), "masks diverged");
+                let a = (0..mask.len()).find(|&a| mask[a]).unwrap();
+                let r1 = plain.step(a);
+                let r2 = cached.step(a);
+                assert_eq!(r1.reward.to_bits(), r2.reward.to_bits());
+                assert_eq!(r1.done, r2.done);
+                assert_eq!(plain.state.speedup.to_bits(),
+                           cached.state.speedup.to_bits());
+            }
+            assert!(cached.state.done);
+            assert_eq!(plain.state.best_program, cached.state.best_program);
+            if pass == 1 {
+                let s = edges.stats();
+                assert!(s.hits > 0, "second episode must replay from memo");
+            }
+        }
     }
 
     #[test]

@@ -8,36 +8,30 @@
 //! and cost analysis. This is the role the paper's pre-collected 60k
 //! trajectories play: decoupling policy optimization from generation
 //! latency.
+//!
+//! The memoization itself lives in the shared [`EdgeMemo`] transposition
+//! table (the [`OptimEnv`] consults it on every step); `TreeEnv` is the
+//! ownership pattern — one table per tree, kept warm across
+//! [`TreeEnv::reset`] — while the batched evaluator shares one table
+//! across a whole sweep instead.
 
-use super::reward::{shape_reward, StepSignal};
-use super::stepper::{EnvConfig, OptimEnv, StepResult};
-use crate::gpusim::{CostCache, GpuSpec};
-use crate::kir::Program;
+use std::sync::Arc;
+
+use super::memo::EdgeMemo;
+use super::stepper::{EnvCaches, EnvConfig, OptimEnv, StepResult};
+use crate::gpusim::{CostCache, GpuSpec, MemoStats};
 use crate::microcode::LlmProfile;
 use crate::tasks::Task;
-use crate::transform::STOP_ACTION;
-use std::collections::HashMap;
-
-#[derive(Clone, Debug)]
-struct CachedEdge {
-    program: Option<Program>, // None = state unchanged (fail/reject)
-    signal: StepSignal,
-    speedup: f64,
-}
 
 /// Memoizing wrapper around [`OptimEnv`].
 pub struct TreeEnv<'a> {
     pub env: OptimEnv<'a>,
-    cache: HashMap<(u64, usize), CachedEdge>,
-    /// cache statistics: (hits, misses)
-    pub stats: (usize, usize),
-    max_entries: usize,
 }
 
 impl<'a> TreeEnv<'a> {
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> TreeEnv<'a> {
-        Self::with_cache(task, spec, profile, cfg, seed, None)
+        Self::with_caches(task, spec, profile, cfg, seed, EnvCaches::none())
     }
 
     /// Like [`TreeEnv::new`], pricing the wrapped env through a shared
@@ -46,96 +40,63 @@ impl<'a> TreeEnv<'a> {
     pub fn with_cache(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                       cfg: EnvConfig, seed: u64,
                       cost_cache: Option<&'a CostCache>) -> TreeEnv<'a> {
+        Self::with_caches(task, spec, profile, cfg, seed,
+                          EnvCaches { cost: cost_cache, ..EnvCaches::none() })
+    }
+
+    /// Fully wired constructor. When `caches.edges` is `None` the tree
+    /// owns a fresh private table (the classic TreeEnv behavior); passing
+    /// a shared [`EdgeMemo`] lets several trees — or a whole batched
+    /// sweep — pool their transitions.
+    pub fn with_caches(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+                       cfg: EnvConfig, seed: u64,
+                       mut caches: EnvCaches<'a>) -> TreeEnv<'a> {
+        if caches.edges.is_none() {
+            caches.edges = Some(Arc::new(EdgeMemo::new()));
+        }
         TreeEnv {
-            env: OptimEnv::with_cache(task, spec, profile, cfg, seed,
-                                      cost_cache),
-            cache: HashMap::new(),
-            stats: (0, 0),
-            max_entries: 200_000,
+            env: OptimEnv::with_caches(task, spec, profile, cfg, seed, caches),
         }
     }
 
     /// Reset to a fresh episode over the same tree (same seed => same
-    /// tree; the cache stays warm).
+    /// tree; the memo stays warm).
     pub fn reset(&mut self) {
         let task = self.env.task;
         let spec = self.env.spec.clone();
         let profile = self.env.profile.clone();
         let cfg = self.env.cfg.clone();
         let base = self.env.base_seed;
-        let cost_cache = self.env.pricer.cache();
-        self.env = OptimEnv::with_cache(task, spec, profile, cfg, base,
-                                        cost_cache);
+        let caches = self.env.caches();
+        self.env = OptimEnv::with_caches(task, spec, profile, cfg, base,
+                                         caches);
     }
 
-    /// Step with memoization.
+    /// Step with memoization (delegates to the memo-wired env).
     pub fn step(&mut self, action: usize) -> StepResult {
-        let step_idx = self.env.state.step;
-        // Bypass the edge cache for Stop and for the final budgeted step:
-        // both terminate the episode (`done = true`), and cached replays
-        // never set `done` — consistent with `OptimEnv::step` attempting
-        // (not truncating) the final action.
-        if action == STOP_ACTION
-            || self.env.state.step + 1 >= self.env.cfg.max_steps
-        {
-            return self.env.step(action);
-        }
-        let key = (self.env.state.path_hash, action);
-        if let Some(edge) = self.cache.get(&key).cloned() {
-            self.stats.0 += 1;
-            // replay the cached transition onto the live state
-            self.env.state.step += 1;
-            self.env.state.history.insert(0, action);
-            self.env.state.history.truncate(8);
-            if let Some(p) = edge.program {
-                self.env.state.path_hash = path_mix(self.env.state.path_hash,
-                                                    action as u64 + 1);
-                self.env.state.program = p;
-                self.env.state.speedup = edge.speedup;
-                if edge.speedup > self.env.state.best_speedup {
-                    self.env.state.best_speedup = edge.speedup;
-                    self.env.state.best_program = self.env.state.program.clone();
-                }
-            }
-            let reward = shape_reward(&edge.signal, step_idx, &self.env.cfg.reward);
-            return StepResult { reward, signal: edge.signal, done: false };
-        }
-        self.stats.1 += 1;
-        let key_state = self.env.state.path_hash;
-        let result = self.env.step(action);
-        if self.cache.len() < self.max_entries {
-            let program = match result.signal {
-                StepSignal::Correct { .. } => Some(self.env.state.program.clone()),
-                _ => None,
-            };
-            self.cache.insert(
-                (key_state, action),
-                CachedEdge {
-                    program,
-                    signal: result.signal,
-                    speedup: self.env.state.speedup,
-                },
-            );
-        }
-        result
+        self.env.step(action)
+    }
+
+    /// This tree's transition table.
+    pub fn memo(&self) -> &EdgeMemo {
+        self.env.edge_memo().expect("TreeEnv always carries an edge memo")
+    }
+
+    /// (hits, misses) of the transition table.
+    pub fn stats(&self) -> (usize, usize) {
+        let MemoStats { hits, misses, .. } = self.memo().stats();
+        (hits, misses)
     }
 
     pub fn cache_len(&self) -> usize {
-        self.cache.len()
+        self.memo().len()
     }
-}
-
-/// Same mixing as OptimEnv::accept uses for path hashes.
-fn path_mix(a: u64, b: u64) -> u64 {
-    let mut x = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
-    x ^= x >> 30;
-    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
-    x ^ (x >> 27)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::env::StepSignal;
     use crate::microcode::ProfileId;
     use crate::util::Rng;
 
@@ -165,7 +126,7 @@ mod tests {
             7,
         );
         let (_r1, s1) = run_episode(&mut env, 1);
-        let misses_after_first = env.stats.1;
+        let misses_after_first = env.stats().1;
         env.reset();
         let (_r2, s2) = run_episode(&mut env, 1); // same action stream
         assert_eq!(
@@ -173,8 +134,8 @@ mod tests {
             format!("{s2:?}"),
             "replay of the same action stream must match"
         );
-        assert!(env.stats.0 > 0, "no cache hits on replay");
-        assert_eq!(env.stats.1, misses_after_first, "replay caused misses");
+        assert!(env.stats().0 > 0, "no cache hits on replay");
+        assert_eq!(env.stats().1, misses_after_first, "replay caused misses");
     }
 
     #[test]
@@ -195,5 +156,32 @@ mod tests {
         let (r_cold, s_cold) = run_episode(&mut cold, 9);
         assert_eq!(format!("{s_warm:?}"), format!("{s_cold:?}"));
         assert!((r_warm - r_cold).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_trees_pool_transitions_through_a_shared_memo() {
+        // same (task, spec, profile, seed): the second tree replays the
+        // first tree's episode entirely from the shared table
+        let tasks = crate::tasks::kernelbench_level(2)[..1].to_vec();
+        let shared = Arc::new(EdgeMemo::new());
+        let mk = || TreeEnv::with_caches(
+            &tasks[0],
+            GpuSpec::a100(),
+            LlmProfile::get(ProfileId::GeminiFlash25),
+            EnvConfig::default(),
+            31,
+            EnvCaches { edges: Some(Arc::clone(&shared)),
+                        ..EnvCaches::none() },
+        );
+        let mut first = mk();
+        let (r1, s1) = run_episode(&mut first, 3);
+        let misses_after_first = shared.stats().misses;
+        let mut second = mk();
+        let (r2, s2) = run_episode(&mut second, 3);
+        assert_eq!(format!("{s1:?}"), format!("{s2:?}"));
+        assert_eq!(r1.to_bits(), r2.to_bits());
+        assert_eq!(shared.stats().misses, misses_after_first,
+                   "second tree must not recompute shared edges");
+        assert!(shared.stats().hits > 0);
     }
 }

@@ -12,17 +12,24 @@
 //! - per-task outcomes stream to a JSON-lines sink ([`JsonlSink`], built
 //!   on [`crate::util::json`]) as units complete, so a long sweep is
 //!   observable and resumable downstream;
-//! - one thread-safe [`CostCache`] per runner is the sweep's pricing
-//!   engine: every unit's env steps, greedy-lookahead candidate pricing
-//!   and eager baselines route through it (unless the job's
-//!   `cfg.use_cost_cache` is off), and sink records are enriched with
-//!   the memoized eager baseline. Hits dominate because (task, gpu)
-//!   pairs repeat across methods and lookahead siblings share kernels.
+//! - one thread-safe memo trio per runner carries the sweep's redundant
+//!   work: the [`CostCache`] is the pricing engine (env steps,
+//!   greedy-lookahead candidate pricing, eager baselines — (task, gpu)
+//!   pairs repeat across methods and lookahead siblings share kernels),
+//!   the [`AnalysisCache`] de-duplicates region analysis / action masks
+//!   per program state, and the [`EdgeMemo`] transposition table replays
+//!   whole env transitions across methods, repeated sweeps and threads
+//!   (methods that walk the same trees — e.g. the greedy surrogate under
+//!   several labels — pay for each micro-coding transition once). Each is
+//!   opt-out per job via `cfg.use_cost_cache` / `use_analysis_cache` /
+//!   `use_edge_memo`; sink records are enriched with the memoized eager
+//!   baseline.
 //!
 //! Determinism: unit seeds derive from (job seed, task index) exactly as
-//! in [`super::evaluate`], never from thread identity — results are
-//! byte-identical across `threads = 1` and `threads = N` (guarded by
-//! `rust/tests/batch.rs`).
+//! in [`super::evaluate`], never from thread identity — and every memo
+//! stores only deterministic pure/edge-deterministic results — so results
+//! are byte-identical across `threads = 1` and `threads = N` and across
+//! every cache on/off combination (guarded by `rust/tests/batch.rs`).
 
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -31,9 +38,11 @@ use std::sync::{Arc, Mutex};
 use super::harness::{evaluate_task, EvalCfg, SuiteResult};
 use super::metrics::{aggregate, TaskOutcome};
 use super::methods::{MacroKind, Method};
+use crate::env::{EdgeMemo, EnvCaches};
 use crate::gpusim::{library_affinity, CostCache, GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::tasks::Task;
+use crate::transform::AnalysisCache;
 use crate::util::json::Json;
 use crate::util::parallel::{default_threads, par_map};
 
@@ -132,11 +141,14 @@ impl JsonlSink {
     }
 }
 
-/// The batched evaluation engine. Construct once per sweep; the cost
-/// cache persists across [`BatchRunner::run`] calls.
+/// The batched evaluation engine. Construct once per sweep; the memo trio
+/// (cost cache, analysis cache, edge memo) persists across
+/// [`BatchRunner::run`] calls, so repeated sweeps replay from warm tables.
 pub struct BatchRunner {
     threads: usize,
     cache: CostCache,
+    analysis: AnalysisCache,
+    edges: Arc<EdgeMemo>,
     sink: Option<JsonlSink>,
 }
 
@@ -146,12 +158,28 @@ impl BatchRunner {
             Some(path) => Some(JsonlSink::create(path)?),
             None => None,
         };
-        Ok(BatchRunner { threads: cfg.threads.max(1), cache: CostCache::new(), sink })
+        Ok(BatchRunner {
+            threads: cfg.threads.max(1),
+            cache: CostCache::new(),
+            analysis: AnalysisCache::new(),
+            edges: Arc::new(EdgeMemo::new()),
+            sink,
+        })
     }
 
     /// The shared cost-model memo cache (hit/miss stats for reporting).
     pub fn cache(&self) -> &CostCache {
         &self.cache
+    }
+
+    /// The shared region-analysis / action-mask memo.
+    pub fn analysis(&self) -> &AnalysisCache {
+        &self.analysis
+    }
+
+    /// The shared transition transposition table.
+    pub fn edge_memo(&self) -> &EdgeMemo {
+        &self.edges
     }
 
     /// True if a configured JSONL sink dropped any record (I/O error).
@@ -188,20 +216,27 @@ impl BatchRunner {
             par_map(&units, self.threads, |_, &(ji, ti)| {
                 let job = &jobs[ji];
                 let task = &job.tasks[ti];
-                // the runner's cache prices the whole unit (env steps,
-                // greedy lookahead, eager baselines) unless the job opts
-                // out — outcomes are bit-identical either way
-                let cache =
-                    if job.cfg.use_cost_cache { Some(&self.cache) } else { None };
+                // the runner's memo trio serves the whole unit (env
+                // steps, greedy lookahead, eager baselines, transition
+                // replays) unless the job opts out of a layer — outcomes
+                // are bit-identical for every combination
+                let caches = EnvCaches {
+                    cost: job.cfg.use_cost_cache.then_some(&self.cache),
+                    analysis: job.cfg.use_analysis_cache
+                        .then_some(&self.analysis),
+                    edges: job.cfg.use_edge_memo
+                        .then(|| Arc::clone(&self.edges)),
+                };
                 let outcome = evaluate_task(&job.method, task, ti as u64,
-                                            &job.gpu, &job.cfg, cache);
+                                            &job.gpu, &job.cfg, &caches);
                 if let Some(sink) = &self.sink {
                     // enrich the streamed record with the task's eager
                     // baseline — (task, gpu) pairs repeat across every
                     // method of a sweep, so this is almost always a cache
                     // hit; skipped entirely when nothing consumes it
                     let shapes = infer_shapes(&task.graph);
-                    let eager_us = Pricer::new(cache, &task.graph, &shapes)
+                    let eager_us = Pricer::new(caches.cost, &task.graph,
+                                               &shapes)
                         .eager_time_us(&task.graph, &shapes, &job.gpu,
                                        library_affinity(&task.id));
                     sink.write(&unit_record(ji, job, task, &outcome, eager_us));

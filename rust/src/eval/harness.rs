@@ -1,8 +1,10 @@
 //! The evaluation harness: method × suite × GPU -> metrics.
 
+use std::sync::Arc;
+
 use super::metrics::{aggregate, Metrics, TaskOutcome};
 use super::methods::{MacroKind, Method};
-use crate::env::{EnvConfig, OptimEnv};
+use crate::env::{EdgeMemo, EnvCaches, EnvConfig, OptimEnv};
 use crate::gpusim::{CostCache, GpuSpec, Pricer};
 use crate::microcode::{
     check_correct, single_pass_generate, CheckOutcome, LlmProfile, ProfileId,
@@ -13,7 +15,7 @@ use crate::policy::{FreeformPolicy, HeuristicPolicy, Policy, PjrtPolicy,
 use crate::runtime::{load_params, PjrtRuntime};
 use crate::tasks::{Suite, Task};
 use crate::transform::{
-    action_mask, apply_action, decode_action, STOP_ACTION,
+    apply_action_with, decode_action, AnalysisCache, Analyzer, STOP_ACTION,
 };
 use crate::util::{parallel::par_map, Rng};
 
@@ -31,6 +33,14 @@ pub struct EvalCfg {
     /// escape hatch for benchmarking the cold path or ruling the cache
     /// out while debugging.
     pub use_cost_cache: bool,
+    /// Route region analysis / action masks through a per-sweep
+    /// [`AnalysisCache`]. Bit-identical either way; `false`
+    /// (`--no-analysis-cache`) is the escape hatch.
+    pub use_analysis_cache: bool,
+    /// Replay env transitions through a per-sweep [`EdgeMemo`]
+    /// transposition table. Bit-identical either way; `false`
+    /// (`--no-edge-memo`) is the escape hatch.
+    pub use_edge_memo: bool,
 }
 
 impl Default for EvalCfg {
@@ -41,6 +51,8 @@ impl Default for EvalCfg {
             env: EnvConfig::default(),
             cuda: false,
             use_cost_cache: true,
+            use_analysis_cache: true,
+            use_edge_memo: true,
         }
     }
 }
@@ -136,14 +148,25 @@ fn assembly_error_prob(profile: &LlmProfile, op_count: usize,
     (suite_assembly_base(suite) + size_risk).min(0.80)
 }
 
-/// Evaluate one method over a task set. Pricing goes through one
-/// [`CostCache`] for the whole call (unless `cfg.use_cost_cache` is off);
-/// for a cache shared across many calls, drive
-/// [`crate::eval::BatchRunner`] instead.
+/// Evaluate one method over a task set. Pricing, program analysis and
+/// transitions go through one [`CostCache`] / [`AnalysisCache`] /
+/// [`EdgeMemo`] trio for the whole call (per the `cfg.use_*` flags); for
+/// caches shared across many calls, drive [`crate::eval::BatchRunner`]
+/// instead.
 pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                 cfg: &EvalCfg) -> SuiteResult {
-    let cache = if cfg.use_cost_cache { Some(CostCache::new()) } else { None };
-    let cache = cache.as_ref();
+    let cost = if cfg.use_cost_cache { Some(CostCache::new()) } else { None };
+    let analysis =
+        if cfg.use_analysis_cache { Some(AnalysisCache::new()) } else { None };
+    let caches = EnvCaches {
+        cost: cost.as_ref(),
+        analysis: analysis.as_ref(),
+        edges: if cfg.use_edge_memo {
+            Some(Arc::new(EdgeMemo::new()))
+        } else {
+            None
+        },
+    };
     let outcomes: Vec<TaskOutcome> = match method {
         // The learned-policy path needs the (non-Sync) PJRT runtime: run
         // it sequentially; every other method parallelises over tasks
@@ -166,16 +189,16 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                     .map(|(ti, task)| {
                         let mut policy = PjrtPolicy::new(&rt, params.clone(), false);
                         mtmc_task(&mut MacroRunner::ObsPolicy(&mut policy),
-                                  *micro, task, spec, cfg, ti as u64, cache)
+                                  *micro, task, spec, cfg, ti as u64, &caches)
                     })
                     .collect(),
                 None => par_map(tasks, cfg.threads, |ti, task| {
-                    evaluate_task(method, task, ti as u64, spec, cfg, cache)
+                    evaluate_task(method, task, ti as u64, spec, cfg, &caches)
                 }),
             }
         }
         _ => par_map(tasks, cfg.threads, |ti, task| {
-            evaluate_task(method, task, ti as u64, spec, cfg, cache)
+            evaluate_task(method, task, ti as u64, spec, cfg, &caches)
         }),
     };
     SuiteResult {
@@ -191,8 +214,9 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
 /// work item. `ti` is the task's index within its suite: it seeds the
 /// per-task RNG streams, so calling this with suite-order indices
 /// reproduces [`evaluate`] outcome-for-outcome regardless of thread count.
-/// `cache` is the sweep's shared pricing memo (`None` = price cold; the
-/// outcome is bit-identical either way).
+/// `caches` is the sweep's shared memo trio — pricing, program analysis,
+/// and the transition transposition table ([`EnvCaches::none`] = run
+/// everything cold; the outcome is bit-identical either way).
 ///
 /// The one divergence: `MacroKind::LearnedOrGreedy` always uses the greedy
 /// cost-model surrogate here (the PJRT runtime is not `Sync`, so the
@@ -200,37 +224,37 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
 /// lookahead is the objective the policy converges to — see
 /// EXPERIMENTS.md).
 pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
-                     cfg: &EvalCfg, cache: Option<&CostCache>) -> TaskOutcome {
+                     cfg: &EvalCfg, caches: &EnvCaches) -> TaskOutcome {
     match method {
         Method::Baseline { profile } => {
-            baseline_task(*profile, task, spec, cfg, ti, cache)
+            baseline_task(*profile, task, spec, cfg, ti, caches)
         }
         Method::MtmcNoHier { micro } => {
-            no_hier_task(*micro, task, spec, cfg, ti, cache)
+            no_hier_task(*micro, task, spec, cfg, ti, caches)
         }
         Method::Mtmc { macro_kind, micro } => match macro_kind {
             MacroKind::LearnedOrGreedy { .. } | MacroKind::GreedyLookahead => {
                 mtmc_task(&mut MacroRunner::Greedy, *micro, task, spec, cfg,
-                          ti, cache)
+                          ti, caches)
             }
             MacroKind::Heuristic { label, mistake_rate } => {
                 let mut p = HeuristicPolicy::new(label, *mistake_rate, 4);
                 mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
-                          spec, cfg, ti, cache)
+                          spec, cfg, ti, caches)
             }
             MacroKind::Freeform { label, wildness, mistake_rate } => {
                 let mut p = FreeformPolicy::new(label, *wildness, *mistake_rate);
                 mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut p), *micro,
-                                 task, spec, cfg, ti, 2.2, cache)
+                                 task, spec, cfg, ti, 2.2, caches)
             }
             MacroKind::Random => {
                 let mut p = RandomPolicy;
                 mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
-                          spec, cfg, ti, cache)
+                          spec, cfg, ti, caches)
             }
             MacroKind::Scripted(plan) => {
                 mtmc_task(&mut MacroRunner::Scripted(plan.clone()), *micro,
-                          task, spec, cfg, ti, cache)
+                          task, spec, cfg, ti, caches)
             }
         },
     }
@@ -240,10 +264,10 @@ pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
 
 fn baseline_task(profile: ProfileId, task: &Task, spec: &GpuSpec,
                  cfg: &EvalCfg, ti: u64,
-                 cache: Option<&CostCache>) -> TaskOutcome {
+                 caches: &EnvCaches) -> TaskOutcome {
     let prof = effective_profile(profile, task.suite);
     let shapes = crate::graph::infer_shapes(&task.graph);
-    let pricer = Pricer::new(cache, &task.graph, &shapes);
+    let pricer = Pricer::new(caches.cost, &task.graph, &shapes);
     let mut rng = Rng::new(cfg.seed ^ (ti << 17) ^ 0xBA5E);
     // interface gate (TritonBench only): a mismatch is a call failure
     // with high probability regardless of the kernel body
@@ -290,11 +314,13 @@ fn score_program(p: &crate::kir::Program, task: &Task,
 /// Table 6: derive the greedy plan (what Macro Thinking would do), then
 /// hand ALL of it to the LLM in a single prompt.
 fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
-                ti: u64, cache: Option<&CostCache>) -> TaskOutcome {
+                ti: u64, caches: &EnvCaches) -> TaskOutcome {
     let prof = effective_profile(micro, task.suite);
     let shapes = crate::graph::infer_shapes(&task.graph);
-    let pricer = Pricer::new(cache, &task.graph, &shapes);
-    let plan = greedy_plan(task, &shapes, spec, cfg.env.max_steps, &pricer);
+    let pricer = Pricer::new(caches.cost, &task.graph, &shapes);
+    let analyzer = Analyzer::new(caches.analysis, &task.graph, &shapes);
+    let plan = greedy_plan(task, &shapes, spec, cfg.env.max_steps, &pricer,
+                           &analyzer);
     let mut rng = Rng::new(cfg.seed ^ (ti << 13) ^ 0x0441E4);
     match single_pass_generate(&task.graph, &shapes, &prof, spec,
                                &SinglePassMode::AllActionsAtOnce(plan),
@@ -314,12 +340,12 @@ fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
 /// Greedy cost-model plan: repeatedly apply the valid action with the
 /// best one-step time improvement (>1%).
 fn greedy_plan(task: &Task, shapes: &[Vec<usize>], spec: &GpuSpec,
-               max_steps: usize, pricer: &Pricer)
+               max_steps: usize, pricer: &Pricer, analyzer: &Analyzer)
                -> Vec<crate::transform::Action> {
     let mut p = crate::kir::lower_naive(&task.graph);
     let mut plan = Vec::new();
     for _ in 0..max_steps {
-        match greedy_best_action(&p, task, shapes, spec, pricer) {
+        match greedy_best_action(&p, task, shapes, spec, pricer, analyzer) {
             Some((a, next)) => {
                 plan.push(decode_action(a));
                 p = next;
@@ -332,36 +358,41 @@ fn greedy_plan(task: &Task, shapes: &[Vec<usize>], spec: &GpuSpec,
 
 /// Best one-step improvement, or None if nothing improves > 1%.
 fn greedy_best_action(p: &crate::kir::Program, task: &Task,
-                      shapes: &[Vec<usize>], spec: &GpuSpec, pricer: &Pricer)
+                      shapes: &[Vec<usize>], spec: &GpuSpec, pricer: &Pricer,
+                      analyzer: &Analyzer)
                       -> Option<(usize, crate::kir::Program)> {
     greedy_best_action_excluding(p, task, shapes, spec, &Default::default(),
-                                 pricer)
+                                 pricer, analyzer)
 }
 
 /// Greedy selection skipping edges that already failed in this episode
 /// (the tree env is edge-deterministic: a failed micro-coding never
 /// succeeds on retry, and the paper's policy likewise learns to move on).
 ///
-/// This is the pricing hot path: every step prices every valid candidate
-/// one lookahead deep. Candidates differ from the current program in
-/// exactly one kernel, so pricing through the [`Pricer`]'s per-kernel
-/// memo re-computes only the mutated kernel — the untouched siblings hit
-/// the cache (and so does `now`, re-priced every step of the episode).
+/// This is the stepping hot path: every step prices every valid candidate
+/// one lookahead deep. Two memos carry it: candidates differ from the
+/// current program in exactly one kernel, so pricing through the
+/// [`Pricer`]'s per-kernel memo re-computes only the mutated kernel — the
+/// untouched siblings hit the cache (and so does `now`, re-priced every
+/// step of the episode) — and the state's region analysis + action mask
+/// come once from the [`Analyzer`], shared by every candidate instead of
+/// being re-derived per `apply_action` call.
 pub fn greedy_best_action_excluding(
     p: &crate::kir::Program, task: &Task, shapes: &[Vec<usize>],
     spec: &GpuSpec, exclude: &std::collections::HashSet<usize>,
-    pricer: &Pricer,
+    pricer: &Pricer, analyzer: &Analyzer,
 ) -> Option<(usize, crate::kir::Program)> {
     let now = pricer.program_time_us(p, &task.graph, shapes, spec);
-    let mask = action_mask(p, &task.graph, shapes, spec);
+    let regions = analyzer.regions(p, &task.graph);
+    let mask = analyzer.mask(p, &task.graph, shapes, spec);
     let mut best: Option<(usize, crate::kir::Program)> = None;
     let mut best_t = f64::INFINITY;
     for a in 0..STOP_ACTION {
         if !mask[a] || exclude.contains(&a) {
             continue;
         }
-        if let Ok(next) =
-            apply_action(p, &task.graph, shapes, &decode_action(a), spec, 1.0)
+        if let Ok(next) = apply_action_with(p, &task.graph, shapes, &regions,
+                                            &decode_action(a), spec, 1.0)
         {
             let t = pricer.program_time_us(&next, &task.graph, shapes, spec);
             if t < now * 0.99 && t < best_t {
@@ -384,8 +415,8 @@ enum MacroRunner<'a> {
 /// Run one MTMC episode on a task, then the final-assembly check.
 fn mtmc_task(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
              spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
-             cache: Option<&CostCache>) -> TaskOutcome {
-    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0, cache)
+             caches: &EnvCaches) -> TaskOutcome {
+    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0, caches)
 }
 
 /// `micro_err_mult` > 1 models macro proposals arriving *without* the
@@ -395,12 +426,12 @@ fn mtmc_task(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
 fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
                     spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
                     micro_err_mult: f64,
-                    cache: Option<&CostCache>) -> TaskOutcome {
+                    caches: &EnvCaches) -> TaskOutcome {
     let prof = effective_profile(micro, task.suite).scaled(micro_err_mult);
-    let mut env = OptimEnv::with_cache(
+    let mut env = OptimEnv::with_caches(
         task, spec.clone(), prof.clone(),
         EnvConfig { cuda: cfg.cuda, ..cfg.env.clone() },
-        cfg.seed ^ (ti << 21) ^ 0x47C0, cache);
+        cfg.seed ^ (ti << 21) ^ 0x47C0, caches.clone());
     let mut rng = Rng::new(cfg.seed ^ (ti << 9) ^ 0x9097);
     let mut scripted_idx = 0usize;
     // failed edges at the *current* tree node (cleared when state moves)
@@ -421,7 +452,8 @@ fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
                 match greedy_best_action_excluding(&env.state.program, task,
                                                    &env.shapes, spec,
                                                    &failed_here,
-                                                   &env.pricer) {
+                                                   &env.pricer,
+                                                   &env.analyzer) {
                     Some((a, _)) => a,
                     None => STOP_ACTION,
                 }
@@ -535,7 +567,7 @@ mod tests {
             let mut probe = ProbePolicy { plan: vec![a], masks: Vec::new() };
             mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut probe),
                              ProfileId::Gpt4o, task, &spec, &cfg, 0, mult,
-                             None);
+                             &EnvCaches::none());
             assert!(probe.masks.len() >= 2, "episode ended after one step");
             assert!(probe.masks[0][a], "first offer must include the edge");
             assert!(!probe.masks[1][a],

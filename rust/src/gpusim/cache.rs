@@ -1,4 +1,6 @@
-//! Thread-safe memoization of cost-model results.
+//! Thread-safe memoization of cost-model results, plus the shared
+//! sharding / fingerprint plumbing the repo's other memo subsystems are
+//! built on ([`crate::transform::AnalysisCache`], [`crate::env::EdgeMemo`]).
 //!
 //! The batched evaluation engine ([`crate::eval::BatchRunner`]) sweeps
 //! method × suite × GPU, and the same pricing inputs recur constantly —
@@ -19,7 +21,7 @@
 //! cache. Warm-vs-cold equivalence is guarded end-to-end by the property
 //! tests in `rust/tests/properties.rs` and `rust/tests/batch.rs`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -33,30 +35,45 @@ const FNV_OFFSET: u64 = 0xcbf29ce484222325;
 const FNV_PRIME: u64 = 0x100000001b3;
 
 /// Minimal FNV-1a accumulator (no std Hasher: we want a stable, portable
-/// 64-bit fingerprint, not a per-process randomized hash).
-struct Fnv(u64);
+/// 64-bit fingerprint, not a per-process randomized hash). Shared by every
+/// memo subsystem that needs content-addressed keys.
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl Fnv {
-    fn new() -> Fnv {
+    pub fn new() -> Fnv {
         Fnv(FNV_OFFSET)
     }
 
-    fn byte(&mut self, b: u8) {
+    pub fn byte(&mut self, b: u8) {
         self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
     }
 
-    fn bytes(&mut self, bs: &[u8]) {
+    pub fn bytes(&mut self, bs: &[u8]) {
         for &b in bs {
             self.byte(b);
         }
     }
 
-    fn u64(&mut self, v: u64) {
+    pub fn u64(&mut self, v: u64) {
         self.bytes(&v.to_le_bytes());
     }
 
-    fn usize(&mut self, v: usize) {
+    pub fn usize(&mut self, v: usize) {
         self.u64(v as u64);
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
     }
 }
 
@@ -134,14 +151,30 @@ pub fn kernel_fingerprint(k: &Kernel) -> u64 {
     h.0
 }
 
-fn spec_tag(spec: &GpuSpec) -> u64 {
+/// Fingerprint of a program's *structural* state: the kernel partition
+/// (names + node groups) and every schedule. Mutations and the
+/// compile-broken flag are deliberately excluded — they change the
+/// program's semantics, never its region structure or action validity —
+/// so a buggy program shares its analysis with its clean twin. Keys the
+/// [`crate::transform::AnalysisCache`].
+pub fn program_fingerprint(p: &Program) -> u64 {
+    let mut h = Fnv::new();
+    h.usize(p.kernels.len());
+    for k in &p.kernels {
+        h.bytes(k.name.as_bytes());
+        h.u64(kernel_fingerprint(k));
+    }
+    h.0
+}
+
+pub(crate) fn spec_tag(spec: &GpuSpec) -> u64 {
     let mut h = Fnv::new();
     h.bytes(spec.name.as_bytes());
     h.0
 }
 
 /// splitmix-style avalanche over the combined key parts.
-fn combine(a: u64, b: u64, c: u64) -> u64 {
+pub(crate) fn combine(a: u64, b: u64, c: u64) -> u64 {
     let mut x = a ^ b.rotate_left(21) ^ c.rotate_left(42);
     x ^= x >> 30;
     x = x.wrapping_mul(0xBF58476D1CE4E5B9);
@@ -151,16 +184,138 @@ fn combine(a: u64, b: u64, c: u64) -> u64 {
 }
 
 const SHARDS: usize = 16;
-/// Per-shard entry cap: a runaway sweep degrades to recomputation, never
-/// to unbounded memory.
+/// Per-shard entry cap used by [`CostCache`]: a runaway sweep degrades to
+/// recomputation, never to unbounded memory.
 const MAX_PER_SHARD: usize = 1 << 16;
+
+/// Aggregate traffic counters of one memo. `lookups` is derived as
+/// `hits + misses` when the snapshot is taken — the identity holds by
+/// construction (guarded by `rust/tests/batch.rs`) and costs no third
+/// atomic on the lookup hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    pub lookups: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+}
+
+impl MemoStats {
+    /// Hit rate in [0, 1]; 0 when the memo saw no traffic.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+
+    /// Component-wise sum (for caches built from several memos).
+    pub fn merged(&self, other: &MemoStats) -> MemoStats {
+        MemoStats {
+            lookups: self.lookups + other.lookups,
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            evictions: self.evictions + other.evictions,
+        }
+    }
+}
+
+struct MemoShard<V> {
+    map: HashMap<u64, V>,
+    /// Insertion order for FIFO eviction (contains exactly the map keys).
+    order: VecDeque<u64>,
+}
+
+/// Sharded, thread-safe, capacity-bounded memo table: the common chassis
+/// under [`CostCache`], [`crate::transform::AnalysisCache`] and
+/// [`crate::env::EdgeMemo`]. 16-way sharded on the key's high bits so
+/// concurrent workers rarely contend; bounded per shard with FIFO
+/// eviction, so overflow degrades to recomputation, never to unbounded
+/// memory. Values must be cheap to clone (breakdowns, `Arc`s, programs).
+pub struct ShardedMemo<V> {
+    shards: Vec<Mutex<MemoShard<V>>>,
+    max_per_shard: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl<V: Clone> ShardedMemo<V> {
+    /// A memo holding at most `max_entries` values in total (rounded up to
+    /// at least one per shard).
+    pub fn new(max_entries: usize) -> ShardedMemo<V> {
+        ShardedMemo {
+            shards: (0..SHARDS)
+                .map(|_| {
+                    Mutex::new(MemoShard {
+                        map: HashMap::new(),
+                        order: VecDeque::new(),
+                    })
+                })
+                .collect(),
+            max_per_shard: (max_entries / SHARDS).max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            evictions: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &Mutex<MemoShard<V>> {
+        // high bits: the low bits feed the HashMap's own bucketing
+        &self.shards[(key >> 48) as usize % SHARDS]
+    }
+
+    /// Look a key up, counting the hit or miss.
+    pub fn get(&self, key: u64) -> Option<V> {
+        let hit = self.shard(key).lock().unwrap().map.get(&key).cloned();
+        match &hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Insert a value, FIFO-evicting the shard's oldest entries when the
+    /// capacity bound is hit. Racing inserts of the same key keep the
+    /// last writer (all writers compute the same pure value anyway).
+    pub fn insert(&self, key: u64, value: V) {
+        let mut shard = self.shard(key).lock().unwrap();
+        if shard.map.insert(key, value).is_none() {
+            shard.order.push_back(key);
+            while shard.map.len() > self.max_per_shard {
+                let oldest = shard.order.pop_front().expect("order tracks map");
+                shard.map.remove(&oldest);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Traffic counters since construction.
+    pub fn stats(&self) -> MemoStats {
+        let hits = self.hits.load(Ordering::Relaxed);
+        let misses = self.misses.load(Ordering::Relaxed);
+        MemoStats {
+            lookups: hits + misses,
+            hits,
+            misses,
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Sharded, thread-safe cost-model memo cache.
 pub struct CostCache {
-    kernels: Vec<Mutex<HashMap<u64, CostBreakdown>>>,
-    eager: Vec<Mutex<HashMap<u64, f64>>>,
-    hits: AtomicUsize,
-    misses: AtomicUsize,
+    kernels: ShardedMemo<CostBreakdown>,
+    eager: ShardedMemo<f64>,
 }
 
 impl Default for CostCache {
@@ -172,17 +327,9 @@ impl Default for CostCache {
 impl CostCache {
     pub fn new() -> CostCache {
         CostCache {
-            kernels: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            eager: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            hits: AtomicUsize::new(0),
-            misses: AtomicUsize::new(0),
+            kernels: ShardedMemo::new(SHARDS * MAX_PER_SHARD),
+            eager: ShardedMemo::new(SHARDS * MAX_PER_SHARD),
         }
-    }
-
-    #[inline]
-    fn shard(key: u64) -> usize {
-        // high bits: the low bits feed the HashMap's own bucketing
-        (key >> 48) as usize % SHARDS
     }
 
     /// Price one kernel through the cache. `ctx` is the
@@ -191,19 +338,13 @@ impl CostCache {
                           shapes: &[Vec<usize>], spec: &GpuSpec)
                           -> CostBreakdown {
         let key = combine(ctx, kernel_fingerprint(kernel), spec_tag(spec));
-        let shard = &self.kernels[Self::shard(key)];
-        if let Some(hit) = shard.lock().unwrap().get(&key).cloned() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(hit) = self.kernels.get(key) {
             return hit;
         }
         // compute outside the lock: pricing an L3 kernel is ~µs-scale and
         // must not serialize other shard users
         let cost = kernel_time_us(kernel, g, shapes, spec);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = shard.lock().unwrap();
-        if guard.len() < MAX_PER_SHARD {
-            guard.insert(key, cost.clone());
-        }
+        self.kernels.insert(key, cost.clone());
         cost
     }
 
@@ -220,28 +361,27 @@ impl CostCache {
     pub fn eager_time_us(&self, ctx: u64, g: &Graph, shapes: &[Vec<usize>],
                          spec: &GpuSpec, affinity: f64) -> f64 {
         let key = combine(ctx, affinity.to_bits(), spec_tag(spec));
-        let shard = &self.eager[Self::shard(key)];
-        if let Some(&hit) = shard.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(hit) = self.eager.get(key) {
             return hit;
         }
         let t = eager_time_us(g, shapes, spec, affinity);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut guard = shard.lock().unwrap();
-        if guard.len() < MAX_PER_SHARD {
-            guard.insert(key, t);
-        }
+        self.eager.insert(key, t);
         t
     }
 
     /// (hits, misses) since construction.
     pub fn stats(&self) -> (usize, usize) {
-        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+        let s = self.full_stats();
+        (s.hits, s.misses)
+    }
+
+    /// Full traffic counters (both the kernel and eager memos).
+    pub fn full_stats(&self) -> MemoStats {
+        self.kernels.stats().merged(&self.eager.stats())
     }
 
     pub fn len(&self) -> usize {
-        self.kernels.iter().map(|s| s.lock().unwrap().len()).sum::<usize>()
-            + self.eager.iter().map(|s| s.lock().unwrap().len()).sum::<usize>()
+        self.kernels.len() + self.eager.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -264,13 +404,30 @@ pub struct Pricer<'c> {
 impl<'c> Pricer<'c> {
     pub fn new(cache: Option<&'c CostCache>, g: &Graph,
                shapes: &[Vec<usize>]) -> Pricer<'c> {
-        Pricer { cache, ctx: graph_fingerprint(g, shapes) }
+        Self::from_ctx(cache, graph_fingerprint(g, shapes))
+    }
+
+    /// Build from an already-computed [`graph_fingerprint`] (shared with
+    /// the env's [`crate::transform::Analyzer`] so a task is
+    /// fingerprinted once per episode, not once per subsystem).
+    pub fn from_ctx(cache: Option<&'c CostCache>, ctx: u64) -> Pricer<'c> {
+        Pricer { cache, ctx }
     }
 
     /// The cache this pricer routes through, if any (used to rebuild an
     /// env over the same task without re-fingerprinting).
     pub fn cache(&self) -> Option<&'c CostCache> {
         self.cache
+    }
+
+    /// Price one kernel (through the memo when caching).
+    pub fn kernel_time_us(&self, k: &Kernel, g: &Graph,
+                          shapes: &[Vec<usize>], spec: &GpuSpec)
+                          -> CostBreakdown {
+        match self.cache {
+            Some(c) => c.kernel_time_us(self.ctx, k, g, shapes, spec),
+            None => kernel_time_us(k, g, shapes, spec),
+        }
     }
 
     /// Price a whole program (per-kernel through the memo when caching).
@@ -391,9 +548,48 @@ mod tests {
                 cached.eager_time_us(&g, &shapes, &spec, 0.5).to_bits(),
                 plain.eager_time_us(&g, &shapes, &spec, 0.5).to_bits()
             );
+            assert_eq!(
+                cached.kernel_time_us(&p.kernels[0], &g, &shapes, &spec),
+                plain.kernel_time_us(&p.kernels[0], &g, &shapes, &spec)
+            );
         }
         assert!(cache.stats().0 > 0, "second round must hit");
         assert!(plain.cache().is_none() && cached.cache().is_some());
+    }
+
+    #[test]
+    fn program_fingerprint_tracks_structure_not_mutations() {
+        let (g, _shapes) = demo();
+        let p = lower_naive(&g);
+        let base = program_fingerprint(&p);
+        let mut mutated = p.clone();
+        mutated.mutations.push(crate::graph::Mutation {
+            node: 2,
+            kind: crate::graph::MutationKind::SkippedOp,
+        });
+        mutated.compile_broken = true;
+        assert_eq!(base, program_fingerprint(&mutated),
+                   "mutations change semantics, not structure");
+        let mut tiled = p.clone();
+        tiled.kernels[0].schedule.block_tile = Some((32, 32, 32));
+        assert_ne!(base, program_fingerprint(&tiled),
+                   "schedule changes must change the fingerprint");
+    }
+
+    #[test]
+    fn sharded_memo_fifo_evicts_and_counts() {
+        let memo: ShardedMemo<usize> = ShardedMemo::new(2);
+        // keys with identical high bits land in one shard (cap = 1)
+        for k in 0..10u64 {
+            memo.insert(k, k as usize);
+        }
+        let s = memo.stats();
+        assert_eq!(s.evictions, 9, "cap-1 shard keeps only the newest");
+        assert_eq!(memo.len(), 1);
+        assert_eq!(memo.get(9), Some(9));
+        assert_eq!(memo.get(0), None, "oldest entries were evicted");
+        let s = memo.stats();
+        assert_eq!((s.lookups, s.hits, s.misses), (2, 1, 1));
     }
 
     #[test]

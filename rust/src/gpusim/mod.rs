@@ -12,7 +12,9 @@ mod cost;
 mod cache;
 mod eager;
 
-pub use cache::{graph_fingerprint, kernel_fingerprint, CostCache, Pricer};
+pub use cache::{graph_fingerprint, kernel_fingerprint, program_fingerprint,
+                CostCache, Fnv, MemoStats, Pricer, ShardedMemo};
+pub(crate) use cache::{combine, spec_tag};
 pub use cost::{kernel_time_us, op_flops, program_time_us, CostBreakdown};
 pub use eager::{eager_time_us, library_affinity};
 pub use spec::{GpuArch, GpuSpec};

@@ -26,8 +26,10 @@ pub enum RegionKind {
 }
 
 /// One candidate region with a human-readable description (the "lines 15
-/// to 20" part of the paper's action example).
-#[derive(Clone, Debug)]
+/// to 20" part of the paper's action example). `PartialEq` so the
+/// differential tests can compare cached against freshly-analyzed
+/// regions field-for-field.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Region {
     pub kind: RegionKind,
     pub describe: String,

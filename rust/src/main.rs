@@ -60,11 +60,15 @@ COMMANDS:
   train [--iters 60] [--tasks 40] [--out data/policy.bin] [--gpu A100]
   optimize --task kb2_000_gemm_bias_act [--gpu A100] [--show-code]
   eval --suite kb2 [--gpu A100] [--method mtmc|greedy|<profile>] [--limit N]
-       [--threads N] [--jsonl out.jsonl] [--no-cost-cache]
-                             (runs through the BatchRunner; pricing goes
-                              through the sweep's CostCache unless
-                              --no-cost-cache, hit/miss stats on stderr)
-  table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--no-cost-cache]
+       [--threads N] [--jsonl out.jsonl]
+       [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
+                             (runs through the BatchRunner; pricing,
+                              program analysis and transitions go through
+                              the sweep's CostCache / AnalysisCache /
+                              EdgeMemo unless the matching --no-* flag is
+                              given; hit/miss/eviction stats on stderr)
+  table 3|4|6 [--limit N] [--threads N] [--jsonl F]
+       [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              batched table sweep
   table 5|7                  pointer to the bench binaries
 ";
@@ -226,16 +230,24 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let shapes = qimeng_mtmc::graph::infer_shapes(&task.graph);
 
     // one-task session: the lookahead below re-prices sibling candidates
-    // every step, so even here the cost cache pays for itself
+    // and re-analyzes the state every step, so even here the memo trio
+    // pays for itself
     let cost_cache = qimeng_mtmc::gpusim::CostCache::new();
-    let cache = if args.has("no-cost-cache") { None } else { Some(&cost_cache) };
-    let mut env = qimeng_mtmc::env::OptimEnv::with_cache(
+    let analysis_cache = qimeng_mtmc::transform::AnalysisCache::new();
+    let edge_memo = std::sync::Arc::new(qimeng_mtmc::env::EdgeMemo::new());
+    let caches = qimeng_mtmc::env::EnvCaches {
+        cost: (!args.has("no-cost-cache")).then_some(&cost_cache),
+        analysis: (!args.has("no-analysis-cache")).then_some(&analysis_cache),
+        edges: (!args.has("no-edge-memo"))
+            .then(|| std::sync::Arc::clone(&edge_memo)),
+    };
+    let mut env = qimeng_mtmc::env::OptimEnv::with_caches(
         task,
         spec.clone(),
         qimeng_mtmc::microcode::LlmProfile::get(ProfileId::GeminiPro25),
         cfg.env.clone(),
         cfg.seed,
-        cache,
+        caches,
     );
     println!("task {} on {} | eager {:.1}us", task.id, spec.name, env.eager_us);
     println!("step  0: naive lowering, speedup {:.2}x", env.state.speedup);
@@ -245,6 +257,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         // the same cached greedy lookahead the eval harness runs
         let choice = qimeng_mtmc::eval::greedy_best_action_excluding(
             &env.state.program, task, &shapes, &spec, &failed, &env.pricer,
+            &env.analyzer,
         );
         let Some((a, _)) = choice else { break };
         let act = qimeng_mtmc::transform::decode_action(a);
@@ -266,6 +279,8 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     }
     println!("best speedup {:.2}x over eager", env.state.best_speedup);
     print_cache_stats(&cost_cache);
+    print_memo_stats("analysis-cache", &analysis_cache.stats());
+    print_memo_stats("edge-memo", &edge_memo.stats());
     if args.has("show-code") {
         let lang = if args.get_or("lang", "triton") == "cuda" {
             TargetLang::Cuda
@@ -295,24 +310,41 @@ fn batch_runner(args: &Args) -> Result<BatchRunner> {
     })
 }
 
-/// Honor `--no-cost-cache` on every job of a sweep.
+/// Honor the `--no-*-cache` escape hatches on every job of a sweep.
 fn apply_cache_flag(args: &Args, jobs: &mut [BatchJob]) {
-    if args.has("no-cost-cache") {
-        for j in jobs.iter_mut() {
+    for j in jobs.iter_mut() {
+        if args.has("no-cost-cache") {
             j.cfg.use_cost_cache = false;
+        }
+        if args.has("no-analysis-cache") {
+            j.cfg.use_analysis_cache = false;
+        }
+        if args.has("no-edge-memo") {
+            j.cfg.use_edge_memo = false;
         }
     }
 }
 
-/// Pricing-cache hit/miss summary for a finished sweep or session.
-fn print_cache_stats(cache: &qimeng_mtmc::gpusim::CostCache) {
-    let (hits, misses) = cache.stats();
-    if hits + misses > 0 {
+/// One memo's hit/miss/eviction summary line (silent when untouched).
+fn print_memo_stats(name: &str, s: &qimeng_mtmc::gpusim::MemoStats) {
+    if s.lookups > 0 {
         eprintln!(
-            "cost-cache: {hits} hits / {misses} misses ({:.1}% hit rate)",
-            100.0 * hits as f64 / (hits + misses) as f64
+            "{name}: {} hits / {} misses ({:.1}% hit rate, {} evictions)",
+            s.hits, s.misses, 100.0 * s.hit_rate(), s.evictions
         );
     }
+}
+
+/// Pricing-cache hit/miss summary for a finished session.
+fn print_cache_stats(cache: &qimeng_mtmc::gpusim::CostCache) {
+    print_memo_stats("cost-cache", &cache.full_stats());
+}
+
+/// All three memo summaries for a finished BatchRunner sweep.
+fn print_runner_stats(runner: &BatchRunner) {
+    print_cache_stats(runner.cache());
+    print_memo_stats("analysis-cache", &runner.analysis().stats());
+    print_memo_stats("edge-memo", &runner.edge_memo().stats());
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -324,6 +356,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = EvalCfg {
         seed: args.u64_or("seed", 0xE7A1),
         use_cost_cache: !args.has("no-cost-cache"),
+        use_analysis_cache: !args.has("no-analysis-cache"),
+        use_edge_memo: !args.has("no-edge-memo"),
         ..Default::default()
     };
     let method = match args.get_or("method", "mtmc") {
@@ -364,7 +398,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         let runner = batch_runner(args)?;
         let results =
             runner.run(&[BatchJob { method, gpu: spec, tasks: tasks.into(), cfg }]);
-        print_cache_stats(runner.cache());
+        print_runner_stats(&runner);
         anyhow::ensure!(
             !runner.sink_failed(),
             "JSONL sink reported I/O failures; output is truncated"
@@ -440,7 +474,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
                 print!("{}", t.render());
             }
-            print_cache_stats(runner.cache());
+            print_runner_stats(&runner);
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
@@ -480,7 +514,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
                 print!("{}", t.render());
             }
-            print_cache_stats(runner.cache());
+            print_runner_stats(&runner);
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
@@ -520,7 +554,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 t.row(cells);
             }
             print!("{}", t.render());
-            print_cache_stats(runner.cache());
+            print_runner_stats(&runner);
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"

@@ -8,8 +8,8 @@
 
 use super::profiles::LlmProfile;
 use crate::graph::{Graph, Mutation, MutationKind};
-use crate::kir::{analyze_regions, Program, RegionKind};
-use crate::transform::{apply_action, Action, TransformError};
+use crate::kir::{analyze_regions, Program, Region, RegionKind};
+use crate::transform::{apply_action_with, Action, TransformError};
 use crate::util::Rng;
 
 /// Outcome of one micro-coding step.
@@ -30,8 +30,8 @@ pub enum StepOutcome {
 
 /// The graph node a buggy implementation of `action` perturbs: a node of
 /// the kernel the region denotes.
-fn bug_site(p: &Program, g: &Graph, action: &Action) -> Option<usize> {
-    let regions = analyze_regions(p, g);
+fn bug_site(p: &Program, regions: &[Region], action: &Action)
+            -> Option<usize> {
     let region = regions.get(action.region)?;
     let k = match region.kind {
         RegionKind::Kernel { kernel } => kernel,
@@ -77,12 +77,33 @@ pub fn micro_step(
     cuda: bool,
     rng: &mut Rng,
 ) -> StepOutcome {
+    micro_step_at(p, g, shapes, &analyze_regions(p, g), action, profile,
+                  spec, cuda, rng)
+}
+
+/// [`micro_step`] over already-analyzed regions of `p` — the hot-path
+/// variant the env uses so one (cached) region analysis serves the
+/// transform application *and* the bug-site lookup. RNG draws are
+/// identical to [`micro_step`], so outcomes are bit-for-bit the same.
+#[allow(clippy::too_many_arguments)]
+pub fn micro_step_at(
+    p: &Program,
+    g: &Graph,
+    shapes: &[Vec<usize>],
+    regions: &[Region],
+    action: &Action,
+    profile: &LlmProfile,
+    spec: &crate::gpusim::GpuSpec,
+    cuda: bool,
+    rng: &mut Rng,
+) -> StepOutcome {
     // parameter skill with per-step jitter: even strong models sometimes
     // pick a mediocre tile
     let quality = (profile.param_skill as f32
         + 0.25 * (rng.f32() - 0.5))
         .clamp(0.05, 1.0);
-    let next = match apply_action(p, g, shapes, action, spec, quality) {
+    let next = match apply_action_with(p, g, shapes, regions, action, spec,
+                                       quality) {
         Ok(next) => next,
         Err(e) => return StepOutcome::Rejected(e),
     };
@@ -96,7 +117,7 @@ pub fn micro_step(
             StepOutcome::CompileError
         } else {
             let mut buggy = next;
-            if let Some(site) = bug_site(p, g, action) {
+            if let Some(site) = bug_site(p, regions, action) {
                 buggy.mutations.push(Mutation {
                     node: site,
                     kind: draw_bug(action, rng),
@@ -116,7 +137,7 @@ mod tests {
     use crate::graph::Op;
     use crate::kir::lower_naive;
     use crate::microcode::profiles::ProfileId;
-    use crate::transform::OptType;
+    use crate::transform::{apply_action, OptType};
 
     fn setup() -> (Graph, Vec<Vec<usize>>, Program) {
         let mut g = Graph::new("t");

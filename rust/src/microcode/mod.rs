@@ -17,6 +17,6 @@ mod check;
 mod singlepass;
 
 pub use check::{check_correct, CheckOutcome, VERIF_ATOL, VERIF_RTOL};
-pub use coder::{micro_step, StepOutcome};
+pub use coder::{micro_step, micro_step_at, StepOutcome};
 pub use profiles::{LlmProfile, ProfileId};
 pub use singlepass::{single_pass_generate, SinglePassMode, SinglePassOutcome};

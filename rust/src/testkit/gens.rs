@@ -1,0 +1,390 @@
+//! Generators + shrinkers for the differential test suite: random tasks,
+//! programs, action sequences and env configs.
+//!
+//! The cache subsystems (cost / analysis / edge-memo) silently rewire
+//! every transition the evaluator takes, so their parity guarantees must
+//! hold on *arbitrary* programs, not just the hand-picked table shapes.
+//! Everything here is recipe-based: a case carries the small integers
+//! that generated it (seed, op count, action stream), and `build()`
+//! re-materializes graphs deterministically from the recipe — so
+//! [`Shrink`] can walk toward genuinely smaller graphs and shorter action
+//! paths while the failure stays reproducible from the printed
+//! counterexample alone.
+
+use super::Shrink;
+use crate::env::EnvConfig;
+use crate::graph::{Graph, Op};
+use crate::gpusim::GpuSpec;
+use crate::kir::{lower_naive, Program};
+use crate::tasks::{Family, Suite, Task};
+use crate::transform::{apply_action, decode_action, ACTION_DIM, STOP_ACTION};
+use crate::util::Rng;
+
+/// Perf-scale dimension table (indexed by the recipe's dim picks).
+const PERF_DIMS: [usize; 3] = [96, 128, 192];
+/// Verif-scale twin — same topology, executably small tensors.
+const VERIF_DIMS: [usize; 3] = [4, 8, 16];
+
+/// One step of a generated op chain; dims are table *indices* so the perf
+/// and verif twins materialize from the same plan.
+#[derive(Clone, Copy, Debug)]
+enum PlanOp {
+    MatMul { n_idx: usize },
+    BiasAdd,
+    Relu,
+    Gelu,
+    Tanh,
+    Softmax,
+    Scale(u32), // milli-units; same constant at both scales
+}
+
+/// Deterministic recipe for a random chain-structured task: `seed` fixes
+/// the op/dimension draws, `n_ops` bounds the chain length. Two recipes
+/// with equal fields build identical tasks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GraphRecipe {
+    pub seed: u64,
+    pub n_ops: usize,
+}
+
+impl GraphRecipe {
+    fn plan(&self) -> (usize, usize, Vec<PlanOp>) {
+        let mut rng = Rng::new(self.seed);
+        let m_idx = rng.below(PERF_DIMS.len());
+        let k_idx = rng.below(PERF_DIMS.len());
+        let ops = (0..self.n_ops.max(1))
+            .map(|_| match rng.below(7) {
+                0 | 1 => PlanOp::MatMul { n_idx: rng.below(PERF_DIMS.len()) },
+                2 => PlanOp::BiasAdd,
+                3 => PlanOp::Relu,
+                4 => PlanOp::Gelu,
+                5 => PlanOp::Tanh,
+                _ => {
+                    if rng.bool(0.5) {
+                        PlanOp::Softmax
+                    } else {
+                        PlanOp::Scale(rng.below(3000) as u32 + 100)
+                    }
+                }
+            })
+            .collect();
+        (m_idx, k_idx, ops)
+    }
+
+    fn materialize(&self, dims: &[usize; 3]) -> Graph {
+        let (m_idx, k_idx, plan) = self.plan();
+        let mut g = Graph::new(&format!("gen_{:016x}_{}", self.seed,
+                                        self.n_ops));
+        let mut cur = g.input("x", &[dims[m_idx], dims[k_idx]]);
+        let mut col_idx = k_idx; // current trailing-dim table index
+        for (wi, op) in plan.iter().enumerate() {
+            cur = match *op {
+                PlanOp::MatMul { n_idx } => {
+                    let w = g.weight(&format!("w{wi}"),
+                                     &[dims[col_idx], dims[n_idx]]);
+                    col_idx = n_idx;
+                    g.op(Op::MatMul, &[cur, w])
+                }
+                PlanOp::BiasAdd => {
+                    let b = g.weight(&format!("b{wi}"), &[dims[col_idx]]);
+                    g.op(Op::BiasAdd, &[cur, b])
+                }
+                PlanOp::Relu => g.op(Op::Relu, &[cur]),
+                PlanOp::Gelu => g.op(Op::Gelu, &[cur]),
+                PlanOp::Tanh => g.op(Op::Tanh, &[cur]),
+                PlanOp::Softmax => g.op(Op::Softmax, &[cur]),
+                PlanOp::Scale(milli) => {
+                    g.op(Op::Scale(milli as f32 / 1000.0), &[cur])
+                }
+            };
+        }
+        g.mark_output(cur);
+        g
+    }
+
+    /// The perf-scale graph alone (for program-level properties).
+    pub fn build_graph(&self) -> Graph {
+        self.materialize(&PERF_DIMS)
+    }
+
+    /// A full [`Task`] (perf graph + executable verif twin) for
+    /// episode-level properties.
+    pub fn task(&self) -> Task {
+        let graph = self.materialize(&PERF_DIMS);
+        let verif_graph = self.materialize(&VERIF_DIMS);
+        let has_matmul = graph
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::MatMul));
+        Task {
+            id: format!("gen_{:016x}_{}", self.seed, self.n_ops),
+            suite: Suite::TrainCorpus,
+            family: if has_matmul {
+                Family::GemmBiasAct
+            } else {
+                Family::Elementwise
+            },
+            graph,
+            verif_graph,
+        }
+    }
+}
+
+impl Shrink for GraphRecipe {
+    /// Shrink toward smaller graphs (the seed is kept: it pins which op
+    /// chain the survivors come from).
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for n in [1, self.n_ops / 2, self.n_ops.saturating_sub(1)] {
+            if n >= 1 && n < self.n_ops {
+                out.push(GraphRecipe { seed: self.seed, n_ops: n });
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generate a random action stream (indices over the full action space,
+/// Stop included). `Vec<usize>` already shrinks toward shorter paths via
+/// the blanket [`Shrink`] impl.
+pub fn gen_actions(rng: &mut Rng, max_len: usize) -> Vec<usize> {
+    (0..rng.below(max_len.max(1)) + 1)
+        .map(|_| rng.below(ACTION_DIM))
+        .collect()
+}
+
+/// A generated program: a random task graph lowered naively, advanced by
+/// a random action stream at a random micro-coder quality.
+#[derive(Clone, Debug)]
+pub struct ProgramCase {
+    pub recipe: GraphRecipe,
+    pub actions: Vec<usize>,
+    pub quality_milli: usize,
+}
+
+impl ProgramCase {
+    /// Materialize (graph, shapes, program): invalid actions are skipped,
+    /// valid ones applied in stream order.
+    pub fn build(&self, spec: &GpuSpec) -> (Graph, Vec<Vec<usize>>, Program) {
+        let g = self.recipe.build_graph();
+        let shapes = crate::graph::infer_shapes(&g);
+        let mut p = lower_naive(&g);
+        for &a in &self.actions {
+            if a >= STOP_ACTION {
+                continue;
+            }
+            if let Ok(next) = apply_action(
+                &p, &g, &shapes, &decode_action(a), spec,
+                self.quality_milli as f32 / 1000.0,
+            ) {
+                p = next;
+            }
+        }
+        (g, shapes, p)
+    }
+}
+
+impl Shrink for ProgramCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<ProgramCase> = self
+            .actions
+            .shrink()
+            .into_iter()
+            .map(|actions| ProgramCase { actions, ..self.clone() })
+            .collect();
+        out.extend(
+            self.recipe
+                .shrink()
+                .into_iter()
+                .map(|recipe| ProgramCase { recipe, ..self.clone() }),
+        );
+        out
+    }
+}
+
+/// [`crate::testkit::Gen`] entry point for [`ProgramCase`].
+pub fn gen_program_case(rng: &mut Rng) -> ProgramCase {
+    ProgramCase {
+        recipe: GraphRecipe { seed: rng.next_u64(), n_ops: rng.below(6) + 1 },
+        actions: gen_actions(rng, 10),
+        quality_milli: rng.below(1001),
+    }
+}
+
+/// A generated [`EnvConfig`] (the transition-relevant knobs; reward
+/// shaping stays at its default — it never feeds the caches).
+#[derive(Clone, Debug)]
+pub struct EnvCfgCase {
+    pub max_steps: usize,
+    pub verif_trials: usize,
+    pub cuda: bool,
+}
+
+impl EnvCfgCase {
+    pub fn to_cfg(&self) -> EnvConfig {
+        EnvConfig {
+            max_steps: self.max_steps,
+            verif_trials: self.verif_trials,
+            cuda: self.cuda,
+            ..EnvConfig::default()
+        }
+    }
+}
+
+impl Shrink for EnvCfgCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.max_steps > 1 {
+            out.push(EnvCfgCase { max_steps: 1, ..self.clone() });
+            out.push(EnvCfgCase {
+                max_steps: self.max_steps / 2,
+                ..self.clone()
+            });
+        }
+        if self.verif_trials > 1 {
+            out.push(EnvCfgCase { verif_trials: 1, ..self.clone() });
+        }
+        if self.cuda {
+            out.push(EnvCfgCase { cuda: false, ..self.clone() });
+        }
+        out
+    }
+}
+
+/// [`crate::testkit::Gen`] entry point for [`EnvCfgCase`].
+pub fn gen_env_cfg(rng: &mut Rng) -> EnvCfgCase {
+    EnvCfgCase {
+        max_steps: rng.below(8) + 1,
+        verif_trials: rng.below(3) + 1,
+        cuda: rng.bool(0.25),
+    }
+}
+
+/// A whole generated episode: task recipe + env config + base seed +
+/// action stream. The unit of the cache-differential properties.
+#[derive(Clone, Debug)]
+pub struct EpisodeCase {
+    pub recipe: GraphRecipe,
+    pub env: EnvCfgCase,
+    pub seed: u64,
+    pub actions: Vec<usize>,
+}
+
+impl Shrink for EpisodeCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<EpisodeCase> = self
+            .actions
+            .shrink()
+            .into_iter()
+            .filter(|a| !a.is_empty())
+            .map(|actions| EpisodeCase { actions, ..self.clone() })
+            .collect();
+        out.extend(
+            self.recipe
+                .shrink()
+                .into_iter()
+                .map(|recipe| EpisodeCase { recipe, ..self.clone() }),
+        );
+        out.extend(
+            self.env
+                .shrink()
+                .into_iter()
+                .map(|env| EpisodeCase { env, ..self.clone() }),
+        );
+        out
+    }
+}
+
+/// [`crate::testkit::Gen`] entry point for [`EpisodeCase`].
+pub fn gen_episode_case(rng: &mut Rng) -> EpisodeCase {
+    EpisodeCase {
+        recipe: GraphRecipe { seed: rng.next_u64(), n_ops: rng.below(5) + 1 },
+        env: gen_env_cfg(rng),
+        seed: rng.next_u64(),
+        actions: gen_actions(rng, 8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    #[test]
+    fn recipes_build_valid_twin_graphs() {
+        check(
+            0xF00D,
+            48,
+            |rng: &mut Rng| GraphRecipe {
+                seed: rng.next_u64(),
+                n_ops: rng.below(8) + 1,
+            },
+            |recipe: &GraphRecipe| {
+                let task = recipe.task();
+                task.graph.validate().map_err(|e| format!("perf: {e}"))?;
+                task.verif_graph
+                    .validate()
+                    .map_err(|e| format!("verif: {e}"))?;
+                crate::prop_assert!(
+                    task.graph.nodes.len() == task.verif_graph.nodes.len(),
+                    "perf/verif topology mismatch"
+                );
+                let shapes = crate::graph::infer_shapes(&task.verif_graph);
+                let biggest = shapes
+                    .iter()
+                    .map(|s| s.iter().product::<usize>())
+                    .max()
+                    .unwrap();
+                crate::prop_assert!(
+                    biggest <= 1 << 12,
+                    "verif tensors must stay executable, got {biggest}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn recipes_are_deterministic() {
+        let r = GraphRecipe { seed: 0xAB5E, n_ops: 4 };
+        let a = r.task();
+        let b = r.task();
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.graph.nodes.len(), b.graph.nodes.len());
+        assert_eq!(
+            crate::gpusim::graph_fingerprint(
+                &a.graph, &crate::graph::infer_shapes(&a.graph)),
+            crate::gpusim::graph_fingerprint(
+                &b.graph, &crate::graph::infer_shapes(&b.graph)),
+        );
+    }
+
+    #[test]
+    fn program_case_builds_valid_programs() {
+        let spec = GpuSpec::a100();
+        check(0xBEEF, 48, gen_program_case, |case: &ProgramCase| {
+            let (g, _shapes, p) = case.build(&spec);
+            p.validate(&g)
+        });
+    }
+
+    #[test]
+    fn shrinks_walk_downward() {
+        let mut rng = Rng::new(3);
+        let case = gen_episode_case(&mut rng);
+        for s in case.shrink() {
+            assert!(
+                s.actions.len() < case.actions.len()
+                    || s.recipe.n_ops < case.recipe.n_ops
+                    || s.env.max_steps < case.env.max_steps
+                    || s.env.verif_trials < case.env.verif_trials
+                    || (case.env.cuda && !s.env.cuda),
+                "shrink must simplify at least one axis"
+            );
+        }
+        let r = GraphRecipe { seed: 9, n_ops: 6 };
+        assert!(r.shrink().iter().all(|s| s.n_ops < r.n_ops));
+        assert!(GraphRecipe { seed: 9, n_ops: 1 }.shrink().is_empty());
+    }
+}

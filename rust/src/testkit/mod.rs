@@ -6,7 +6,12 @@
 //! panicking with the minimal counterexample it found.
 //!
 //! Used by `rust/tests/properties.rs` for coordinator invariants (routing,
-//! schedule legality, reward monotonicity, serialization round-trips).
+//! schedule legality, reward monotonicity, serialization round-trips) and
+//! the cache-differential suite. [`gens`] holds the recipe-based
+//! generators/shrinkers for random tasks, programs, action sequences and
+//! env configs.
+
+pub mod gens;
 
 use crate::util::Rng;
 

@@ -2,13 +2,13 @@
 //! artifact → repeat.
 
 use super::gae::{compute_gae, normalize};
-use crate::env::{EnvConfig, TreeEnv};
-use crate::gpusim::GpuSpec;
+use crate::env::{EnvCaches, EnvConfig, TreeEnv};
+use crate::gpusim::{CostCache, GpuSpec};
 use crate::microcode::{LlmProfile, ProfileId};
 use crate::runtime::{PjrtRuntime, TrainState};
 use crate::runtime::TrainBatch;
 use crate::tasks::Task;
-use crate::transform::ACTION_DIM;
+use crate::transform::{AnalysisCache, ACTION_DIM};
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -101,17 +101,27 @@ pub fn train_ppo(
     let mut rng = Rng::new(cfg.seed);
     let mut logs = Vec::new();
 
-    // one warm tree per task, reused across iterations
+    // one warm tree per task, reused across iterations; the trees share
+    // one analysis/cost cache pair for the whole run, so replayed visits
+    // skip micro-coding (per-tree EdgeMemo) *and* masks/observations stop
+    // re-walking and re-pricing programs (bit-identical either way)
+    let analysis_cache = AnalysisCache::new();
+    let cost_cache = CostCache::new();
     let mut envs: Vec<TreeEnv> = tasks
         .iter()
         .enumerate()
         .map(|(i, t)| {
-            TreeEnv::new(
+            TreeEnv::with_caches(
                 t,
                 spec.clone(),
                 LlmProfile::get(cfg.profile),
                 cfg.env.clone(),
                 cfg.seed ^ ((i as u64) << 32),
+                EnvCaches {
+                    cost: Some(&cost_cache),
+                    analysis: Some(&analysis_cache),
+                    edges: None, // each tree owns its replay table
+                },
             )
         })
         .collect();
@@ -177,7 +187,8 @@ pub fn train_ppo(
         }
 
         let (hits, misses) = envs.iter().fold((0, 0), |acc, e| {
-            (acc.0 + e.stats.0, acc.1 + e.stats.1)
+            let (h, m) = e.stats();
+            (acc.0 + h, acc.1 + m)
         });
         let log = IterLog {
             iter,

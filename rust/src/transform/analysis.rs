@@ -1,0 +1,242 @@
+//! Memoized program analysis: [`AnalysisCache`] de-duplicates
+//! [`analyze_regions`](crate::kir::analyze_regions) and
+//! [`action_mask`](super::action_mask) per *program state* instead of per
+//! *call site*.
+//!
+//! Region analysis walks the whole program (kernel ranking, consumer
+//! scans, fusion-edge discovery), and before this cache the stepping hot
+//! path re-ran it several times per action: once for the env's validity
+//! mask, once inside `apply_action`, once more for the micro-coder's bug
+//! site — and the greedy lookahead repeated that for every candidate.
+//! Keys are `(graph fingerprint, program fingerprint[, spec])`, so every
+//! env step, lookahead candidate and observation encoder that revisits a
+//! program state reuses one analysis. Like the
+//! [`CostCache`](crate::gpusim::CostCache), the analysis functions are
+//! pure: a hit returns exactly what a cold miss would compute, so cached
+//! and fresh paths are interchangeable (guarded by
+//! `prop_analysis_cache_mask_identical` in `rust/tests/properties.rs`).
+
+use std::sync::Arc;
+
+use super::{action_mask, action_mask_with};
+use crate::gpusim::{combine, graph_fingerprint, program_fingerprint,
+                    spec_tag, GpuSpec, MemoStats, ShardedMemo};
+use crate::graph::Graph;
+use crate::kir::{analyze_regions, Program, Region};
+
+/// Salt distinguishing region keys from mask keys in the combined space.
+const REGIONS_SALT: u64 = 0x5EC1_0A17_AB5E_0001;
+
+/// Default total capacity (regions + masks counted separately). Distinct
+/// program states per sweep number in the thousands, far below this; the
+/// bound only guards runaway workloads.
+const DEFAULT_MAX_ENTRIES: usize = 1 << 20;
+
+/// Sharded, thread-safe memo for region analysis and action masks.
+pub struct AnalysisCache {
+    regions: ShardedMemo<Arc<Vec<Region>>>,
+    masks: ShardedMemo<Arc<Vec<bool>>>,
+}
+
+impl Default for AnalysisCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AnalysisCache {
+    pub fn new() -> AnalysisCache {
+        Self::with_capacity(DEFAULT_MAX_ENTRIES)
+    }
+
+    /// A cache bounded to `max_entries` regions and as many masks.
+    pub fn with_capacity(max_entries: usize) -> AnalysisCache {
+        AnalysisCache {
+            regions: ShardedMemo::new(max_entries),
+            masks: ShardedMemo::new(max_entries),
+        }
+    }
+
+    /// Memoized [`analyze_regions`]. `ctx` is the task's
+    /// [`graph_fingerprint`].
+    pub fn regions(&self, ctx: u64, p: &Program, g: &Graph)
+                   -> Arc<Vec<Region>> {
+        self.regions_keyed(combine(ctx, program_fingerprint(p), REGIONS_SALT),
+                           p, g)
+    }
+
+    /// Region lookup with the key precomputed — lets [`Self::action_mask`]
+    /// fingerprint the program once per call, not once per memo layer.
+    fn regions_keyed(&self, key: u64, p: &Program, g: &Graph)
+                     -> Arc<Vec<Region>> {
+        if let Some(hit) = self.regions.get(key) {
+            return hit;
+        }
+        // compute outside the lock (same policy as the cost cache)
+        let fresh = Arc::new(analyze_regions(p, g));
+        self.regions.insert(key, Arc::clone(&fresh));
+        fresh
+    }
+
+    /// Memoized [`action_mask`] (built on the memoized regions, so a mask
+    /// miss still reuses a region hit; the program is fingerprinted once
+    /// and the hash reused for both keys).
+    pub fn action_mask(&self, ctx: u64, p: &Program, g: &Graph,
+                       shapes: &[Vec<usize>], spec: &GpuSpec)
+                       -> Arc<Vec<bool>> {
+        let pfp = program_fingerprint(p);
+        let key = combine(ctx, pfp, spec_tag(spec));
+        if let Some(hit) = self.masks.get(key) {
+            return hit;
+        }
+        let regions = self.regions_keyed(combine(ctx, pfp, REGIONS_SALT), p, g);
+        let fresh = Arc::new(action_mask_with(p, g, shapes, &regions, spec));
+        self.masks.insert(key, Arc::clone(&fresh));
+        fresh
+    }
+
+    /// Combined traffic counters (regions + masks).
+    pub fn stats(&self) -> MemoStats {
+        self.regions.stats().merged(&self.masks.stats())
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len() + self.masks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::fmt::Debug for AnalysisCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(f, "AnalysisCache {{ entries: {}, hits: {}, misses: {} }}",
+               self.len(), s.hits, s.misses)
+    }
+}
+
+/// An analysis handle for one task: couples an optional shared
+/// [`AnalysisCache`] with the task's precomputed [`graph_fingerprint`]
+/// (the analysis twin of [`crate::gpusim::Pricer`]). With `cache: None`
+/// every method falls through to the direct analysis functions —
+/// bit-identical either way.
+#[derive(Clone, Copy, Debug)]
+pub struct Analyzer<'a> {
+    cache: Option<&'a AnalysisCache>,
+    ctx: u64,
+}
+
+impl<'a> Analyzer<'a> {
+    pub fn new(cache: Option<&'a AnalysisCache>, g: &Graph,
+               shapes: &[Vec<usize>]) -> Analyzer<'a> {
+        Self::from_ctx(cache, graph_fingerprint(g, shapes))
+    }
+
+    /// Build from an already-computed [`graph_fingerprint`].
+    pub fn from_ctx(cache: Option<&'a AnalysisCache>, ctx: u64)
+                    -> Analyzer<'a> {
+        Analyzer { cache, ctx }
+    }
+
+    /// The cache this analyzer routes through, if any.
+    pub fn cache(&self) -> Option<&'a AnalysisCache> {
+        self.cache
+    }
+
+    /// Candidate regions of the current program (memoized when caching).
+    pub fn regions(&self, p: &Program, g: &Graph) -> Arc<Vec<Region>> {
+        match self.cache {
+            Some(c) => c.regions(self.ctx, p, g),
+            None => Arc::new(analyze_regions(p, g)),
+        }
+    }
+
+    /// Validity mask of the current program (memoized when caching).
+    pub fn mask(&self, p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                spec: &GpuSpec) -> Arc<Vec<bool>> {
+        match self.cache {
+            Some(c) => c.action_mask(self.ctx, p, g, shapes, spec),
+            None => Arc::new(action_mask(p, g, shapes, spec)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, Op};
+    use crate::kir::lower_naive;
+
+    fn demo() -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("analysis_demo");
+        let x = g.input("x", &[256, 256]);
+        let w = g.weight("w", &[256, 64]);
+        let b = g.weight("b", &[64]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let ba = g.op(Op::BiasAdd, &[mm, b]);
+        let r = g.op(Op::Relu, &[ba]);
+        g.mark_output(r);
+        let shapes = infer_shapes(&g);
+        (g, shapes)
+    }
+
+    #[test]
+    fn cached_mask_and_regions_match_fresh() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::a100();
+        let p = lower_naive(&g);
+        let cache = AnalysisCache::new();
+        let az = Analyzer::new(Some(&cache), &g, &shapes);
+        let fresh_mask = action_mask(&p, &g, &shapes, &spec);
+        let fresh_regions = analyze_regions(&p, &g);
+        for _ in 0..2 {
+            assert_eq!(*az.mask(&p, &g, &shapes, &spec), fresh_mask);
+            assert_eq!(*az.regions(&p, &g), fresh_regions);
+        }
+        let s = cache.stats();
+        assert!(s.hits > 0, "second pass must hit");
+        assert_eq!(s.hits + s.misses, s.lookups);
+    }
+
+    #[test]
+    fn uncached_analyzer_is_transparent() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::v100();
+        let p = lower_naive(&g);
+        let az = Analyzer::new(None, &g, &shapes);
+        assert!(az.cache().is_none());
+        assert_eq!(*az.mask(&p, &g, &shapes, &spec),
+                   action_mask(&p, &g, &shapes, &spec));
+        assert_eq!(*az.regions(&p, &g), analyze_regions(&p, &g));
+    }
+
+    #[test]
+    fn distinct_program_states_do_not_alias() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::h100();
+        let p = lower_naive(&g);
+        let cache = AnalysisCache::new();
+        let az = Analyzer::new(Some(&cache), &g, &shapes);
+        let m0 = az.mask(&p, &g, &shapes, &spec);
+        let mut tiled = p.clone();
+        tiled.kernels[0].schedule.block_tile = Some((64, 64, 32));
+        let m1 = az.mask(&tiled, &g, &shapes, &spec);
+        assert_eq!(*m1, action_mask(&tiled, &g, &shapes, &spec));
+        assert_ne!(*m0, *m1, "tiling unlocks pipeline actions");
+    }
+
+    #[test]
+    fn specs_keyed_separately() {
+        let (g, shapes) = demo();
+        let p = lower_naive(&g);
+        let cache = AnalysisCache::new();
+        let az = Analyzer::new(Some(&cache), &g, &shapes);
+        let a = az.mask(&p, &g, &shapes, &GpuSpec::a100());
+        let v = az.mask(&p, &g, &shapes, &GpuSpec::v100());
+        assert_eq!(*a, action_mask(&p, &g, &shapes, &GpuSpec::a100()));
+        assert_eq!(*v, action_mask(&p, &g, &shapes, &GpuSpec::v100()));
+        assert_eq!(cache.stats().hits, 0, "different specs must not hit");
+    }
+}

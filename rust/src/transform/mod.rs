@@ -6,6 +6,7 @@
 //! GPU spec, degraded by the micro-coder's `quality` skill in [0,1].
 
 mod actions;
+mod analysis;
 mod tiling;
 mod fusion;
 mod pipeline;
@@ -16,6 +17,7 @@ pub use actions::{
     decode_action, encode_action, Action, OptType, ACTION_DIM, NUM_OPT_TYPES,
     STOP_ACTION,
 };
+pub use analysis::{AnalysisCache, Analyzer};
 
 use crate::gpusim::GpuSpec;
 use crate::graph::Graph;
@@ -34,12 +36,19 @@ pub enum TransformError {
 /// state. `mask[STOP_ACTION]` is always true.
 pub fn action_mask(p: &Program, g: &Graph, shapes: &[Vec<usize>],
                    spec: &GpuSpec) -> Vec<bool> {
-    let regions = analyze_regions(p, g);
+    action_mask_with(p, g, shapes, &analyze_regions(p, g), spec)
+}
+
+/// [`action_mask`] over already-analyzed regions — the hot-path variant
+/// used by the [`AnalysisCache`] and the greedy lookahead, which analyze
+/// a program state once and reuse the regions across every action.
+pub fn action_mask_with(p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                        regions: &[Region], spec: &GpuSpec) -> Vec<bool> {
     let mut mask = vec![false; ACTION_DIM];
     mask[STOP_ACTION] = true;
-    for a in 0..STOP_ACTION {
+    for (a, slot) in mask.iter_mut().enumerate().take(STOP_ACTION) {
         let action = decode_action(a);
-        mask[a] = check_action(p, g, shapes, &regions, &action, spec).is_ok();
+        *slot = check_action(p, g, shapes, regions, &action, spec).is_ok();
     }
     mask
 }
@@ -88,8 +97,18 @@ pub fn check_action(p: &Program, g: &Graph, shapes: &[Vec<usize>],
 pub fn apply_action(p: &Program, g: &Graph, shapes: &[Vec<usize>],
                     action: &Action, spec: &GpuSpec,
                     quality: f32) -> Result<Program, TransformError> {
-    let regions = analyze_regions(p, g);
-    check_action(p, g, shapes, &regions, action, spec)?;
+    apply_action_with(p, g, shapes, &analyze_regions(p, g), action, spec,
+                      quality)
+}
+
+/// [`apply_action`] over already-analyzed regions. `regions` must be
+/// `analyze_regions(p, g)` for this exact program state (the
+/// [`Analyzer`] guarantees that); results are identical to
+/// [`apply_action`], minus the re-analysis.
+pub fn apply_action_with(p: &Program, g: &Graph, shapes: &[Vec<usize>],
+                         regions: &[Region], action: &Action, spec: &GpuSpec,
+                         quality: f32) -> Result<Program, TransformError> {
+    check_action(p, g, shapes, regions, action, spec)?;
     let region = &regions[action.region];
     let mut next = p.clone();
     match (action.opt, &region.kind) {

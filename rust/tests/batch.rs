@@ -2,6 +2,7 @@
 //! sharded-queue refactor of `par_map` + `BatchRunner`), equivalence with
 //! the one-shot `evaluate`, and the JSONL sink contract.
 
+use qimeng_mtmc::env::{CachedEdge, EdgeMemo, StepSignal};
 use qimeng_mtmc::eval::{
     evaluate, BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind, Method,
 };
@@ -161,4 +162,141 @@ fn jsonl_sink_records_are_parseable_and_complete() {
         results[0].outcomes.iter().map(|o| o.task_id.clone()).collect();
     expect.sort();
     assert_eq!(seen, expect, "one record per unit, no dupes/losses");
+}
+
+/// The tentpole guard at the BatchRunner level: a sweep whose methods
+/// walk identical episode trees (the greedy surrogate under two macro
+/// labels) through one shared [`EdgeMemo`] must stream byte-identical
+/// JSONL outcomes at every thread count — the memo is populated in
+/// whatever order the threads race, but replays are deterministic.
+#[test]
+fn edge_memo_shared_across_threads_identical_jsonl() {
+    let dir = std::env::temp_dir().join("qimeng_edge_memo_threads");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tasks = kernelbench_level(2)[..6].to_vec();
+    let jobs = vec![
+        BatchJob::new(mtmc(), GpuSpec::a100(), tasks.clone()),
+        // LearnedOrGreedy with no params falls back to the greedy
+        // surrogate: identical episodes, so every transition the first
+        // job paid for replays from the shared memo here
+        BatchJob::new(
+            Method::Mtmc {
+                macro_kind: MacroKind::LearnedOrGreedy { params_path: None },
+                micro: ProfileId::GeminiFlash25,
+            },
+            GpuSpec::a100(),
+            tasks,
+        ),
+    ];
+    let mut sorted_lines: Vec<Vec<String>> = Vec::new();
+    for (i, threads) in [1usize, 2, 8].into_iter().enumerate() {
+        let path = dir.join(format!("t{threads}.jsonl"));
+        let runner = BatchRunner::new(BatchCfg {
+            threads,
+            sink: Some(path.clone()),
+        })
+        .unwrap();
+        runner.run(&jobs);
+        let stats = runner.edge_memo().stats();
+        assert_eq!(stats.hits + stats.misses, stats.lookups,
+                   "stats identity broken at {threads} threads");
+        assert!(stats.hits > 0,
+                "cross-method episode reuse must hit the shared memo");
+        let mut lines: Vec<String> = std::fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .map(String::from)
+            .collect();
+        lines.sort();
+        sorted_lines.push(lines);
+        assert_eq!(sorted_lines[0], sorted_lines[i],
+                   "JSONL outcomes diverged at {threads} threads");
+    }
+    assert_eq!(sorted_lines[0].len(), 12, "one record per unit");
+}
+
+/// Sweep outcomes must be byte-identical with the edge memo and analysis
+/// cache on and off (mirroring the cost-cache guard above).
+#[test]
+fn edge_memo_and_analysis_cache_on_off_byte_identical() {
+    let tasks = kernelbench_level(2)[..6].to_vec();
+    let mk_jobs = |edge: bool, analysis: bool| -> Vec<BatchJob> {
+        let mut job = BatchJob::new(mtmc(), GpuSpec::h100(), tasks.clone());
+        job.cfg = EvalCfg {
+            seed: 0xBEEF,
+            use_edge_memo: edge,
+            use_analysis_cache: analysis,
+            ..Default::default()
+        };
+        vec![job]
+    };
+    let mut runs = Vec::new();
+    for (edge, analysis) in [(true, true), (true, false), (false, true),
+                             (false, false)] {
+        let runner = BatchRunner::new(BatchCfg { threads: 4, sink: None })
+            .unwrap();
+        let r = runner.run(&mk_jobs(edge, analysis));
+        if !edge {
+            assert_eq!(runner.edge_memo().stats().lookups, 0,
+                       "--no-edge-memo must keep the table silent");
+        }
+        if !analysis {
+            assert_eq!(runner.analysis().stats().lookups, 0,
+                       "--no-analysis-cache must keep the cache silent");
+        } else {
+            assert!(runner.analysis().stats().hits > 0,
+                    "episodes revisit states; analysis must hit");
+        }
+        runs.push(r.into_iter().next().unwrap());
+    }
+    let base = &runs[0];
+    for r in &runs[1..] {
+        assert_eq!(base.metrics, r.metrics);
+        for (x, y) in base.outcomes.iter().zip(&r.outcomes) {
+            assert_eq!(x.task_id, y.task_id);
+            assert_eq!(x.compiled, y.compiled);
+            assert_eq!(x.correct, y.correct);
+            assert_eq!(x.speedup.to_bits(), y.speedup.to_bits(),
+                       "{}: cache combo changed the outcome", x.task_id);
+        }
+    }
+}
+
+/// Stats sanity: `hits + misses == lookups` always, and eviction counts
+/// are monotone across repeated sweeps over one runner.
+#[test]
+fn edge_memo_stats_sane_and_evictions_monotone() {
+    let tasks = kernelbench_level(1)[..6].to_vec();
+    let jobs = vec![BatchJob::new(mtmc(), GpuSpec::a100(), tasks)];
+    let runner = BatchRunner::new(BatchCfg { threads: 3, sink: None }).unwrap();
+    runner.run(&jobs);
+    let s1 = runner.edge_memo().stats();
+    assert_eq!(s1.hits + s1.misses, s1.lookups);
+    runner.run(&jobs);
+    let s2 = runner.edge_memo().stats();
+    assert_eq!(s2.hits + s2.misses, s2.lookups);
+    assert!(s2.lookups > s1.lookups, "second sweep must look edges up");
+    assert_eq!(s2.misses, s1.misses,
+               "a repeated sweep replays entirely from the warm memo");
+    assert!(s2.evictions >= s1.evictions, "eviction count must be monotone");
+
+    // direct eviction pressure: same-shard keys (identical high bits)
+    // against a 2-entry table
+    let tiny = EdgeMemo::with_capacity(2);
+    let edge = CachedEdge {
+        program: None,
+        signal: StepSignal::Rejected,
+        speedup: 1.0,
+    };
+    let mut last_evictions = 0;
+    for k in 0..10u64 {
+        tiny.insert(k, edge.clone());
+        let e = tiny.stats().evictions;
+        assert!(e >= last_evictions, "evictions must never decrease");
+        last_evictions = e;
+    }
+    assert!(last_evictions >= 9, "cap-1 shard must evict on every insert");
+    assert_eq!(tiny.len(), 1);
+    let s = tiny.stats();
+    assert_eq!(s.hits + s.misses, s.lookups);
 }

@@ -8,10 +8,12 @@
 //! `QIMENG_BLESS=1 cargo test --test golden_render` rewrites the golden
 //! files in place; re-run without the env var to confirm, then commit.
 
+use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::graph::{infer_shapes, Graph, Op};
 use qimeng_mtmc::kir::{
     lower_naive, render, Kernel, LoopOrder, Program, Schedule, TargetLang,
 };
+use qimeng_mtmc::testkit::gens::{GraphRecipe, ProgramCase};
 
 /// Fused elementwise representative: GEMM + bias + ReLU collapsed into a
 /// single scheduled kernel (the shape every KernelBench-L2 winner takes).
@@ -109,6 +111,97 @@ fn reduction_cuda_matches_golden() {
         "softmax_reduction", &g, &p, TargetLang::Cuda,
         include_str!("goldens/softmax_reduction.cuda.txt"),
     );
+}
+
+// ---------------------------------------------------------------------
+// Generated-then-shrunk goldens: the property suite exercises the render
+// path over testkit-generated programs, but those shapes only ever
+// existed transiently inside a property run. The two cases below are
+// pinned generator outputs (recipes shrunk to their minimal interesting
+// form: a scheduled matmul chain and a 1-op elementwise graph), so the
+// exact source the generators' program shapes render to is frozen.
+//
+// These goldens live on disk (not `include_str!`): the first run in a
+// fresh checkout writes the snapshot, every later run compares
+// byte-for-byte. `QIMENG_BLESS=1` rewrites them after an intentional
+// printer change, exactly like the hand-written goldens above.
+
+/// Shrunk case A: a generated matmul chain with a tiling + vectorize
+/// action stream applied at full quality.
+fn generated_case_a() -> (Graph, Program) {
+    let case = ProgramCase {
+        recipe: GraphRecipe { seed: 0xA11CE, n_ops: 3 },
+        actions: (0..16).collect(),
+        quality_milli: 1000,
+    };
+    let (g, _shapes, p) = case.build(&GpuSpec::a100());
+    (g, p)
+}
+
+/// Shrunk case B: the generators' minimal graph (n_ops = 1), unscheduled
+/// — what every shrink chain bottoms out at.
+fn generated_case_b() -> (Graph, Program) {
+    let case = ProgramCase {
+        recipe: GraphRecipe { seed: 0xB0B, n_ops: 1 },
+        actions: Vec::new(),
+        quality_milli: 500,
+    };
+    let (g, _shapes, p) = case.build(&GpuSpec::a100());
+    (g, p)
+}
+
+fn check_disk_golden(name: &str, g: &Graph, p: &Program, lang: TargetLang) {
+    let shapes = infer_shapes(g);
+    let got = render(p, g, &shapes, lang);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/goldens")
+        .join(format!("{name}.{}.txt", lang.label()));
+    if std::env::var("QIMENG_BLESS").is_ok() || !path.exists() {
+        std::fs::write(&path, &got).expect("bless write");
+        eprintln!("blessed {}", path.display());
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        got, golden,
+        "rendered {} source for `{name}` diverged from {} — if the \
+         printer or generator change is intentional, regenerate with \
+         QIMENG_BLESS=1 cargo test --test golden_render",
+        lang.label(),
+        path.display()
+    );
+}
+
+#[test]
+fn generated_shrunk_case_a_matches_golden() {
+    let (g, p) = generated_case_a();
+    p.validate(&g).expect("generated program must be valid");
+    check_disk_golden("gen_shrunk_a", &g, &p, TargetLang::Triton);
+    check_disk_golden("gen_shrunk_a", &g, &p, TargetLang::Cuda);
+}
+
+#[test]
+fn generated_shrunk_case_b_matches_golden() {
+    let (g, p) = generated_case_b();
+    p.validate(&g).expect("generated program must be valid");
+    check_disk_golden("gen_shrunk_b", &g, &p, TargetLang::Triton);
+    check_disk_golden("gen_shrunk_b", &g, &p, TargetLang::Cuda);
+}
+
+#[test]
+fn generated_cases_are_stable_across_rebuilds() {
+    // the recipes must materialize identically every time, or the goldens
+    // above would be meaningless
+    for mk in [generated_case_a, generated_case_b] {
+        let (g1, p1) = mk();
+        let (g2, p2) = mk();
+        let s1 = infer_shapes(&g1);
+        assert_eq!(p1, p2);
+        assert_eq!(
+            render(&p1, &g1, &s1, TargetLang::Triton),
+            render(&p2, &g2, &infer_shapes(&g2), TargetLang::Triton)
+        );
+    }
 }
 
 #[test]

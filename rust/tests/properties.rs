@@ -3,18 +3,23 @@
 //! model sanity, reward shaping, serialization round-trips, region
 //! analysis stability.
 
+use std::sync::Arc;
+
 use qimeng_mtmc::dataset::{load_trajectories, save_trajectories, TrajStep,
                            Trajectory};
-use qimeng_mtmc::env::{EnvConfig, OptimEnv};
+use qimeng_mtmc::env::{EdgeMemo, EnvCaches, EnvConfig, OptimEnv};
 use qimeng_mtmc::gpusim::{graph_fingerprint, kernel_time_us,
                           program_time_us, CostCache, GpuSpec};
 use qimeng_mtmc::graph::infer_shapes;
-use qimeng_mtmc::kir::{analyze_regions, lower_naive, MAX_REGIONS};
+use qimeng_mtmc::kir::{analyze_regions, lower_naive, Program, MAX_REGIONS};
 use qimeng_mtmc::microcode::{LlmProfile, ProfileId};
 use qimeng_mtmc::tasks::{kernelbench_suite, Task};
+use qimeng_mtmc::testkit::gens::{gen_episode_case, gen_program_case,
+                                 EpisodeCase, ProgramCase};
 use qimeng_mtmc::testkit::{check, default_cases, Shrink};
 use qimeng_mtmc::transform::{
-    action_mask, apply_action, decode_action, ACTION_DIM, STOP_ACTION,
+    action_mask, apply_action, decode_action, AnalysisCache, Analyzer,
+    ACTION_DIM, STOP_ACTION,
 };
 use qimeng_mtmc::util::parallel::par_map;
 use qimeng_mtmc::util::Rng;
@@ -349,6 +354,162 @@ fn prop_cached_episode_bitwise_identical_to_cold() {
                     == warm.state.best_speedup.to_bits()
                     && cold.state.best_program == warm.state.best_program,
                 "{}: episode outcome diverged", task.id
+            );
+        }
+        Ok(())
+    });
+}
+
+/// AnalysisCache differential: on arbitrary generated programs, the
+/// cached `action_mask` / `analyze_regions` must equal the fresh
+/// computation field-for-field — on the cold miss, on the warm hit, and
+/// again after the program state moves.
+#[test]
+fn prop_analysis_cache_mask_identical() {
+    check(1111, default_cases(), gen_program_case, |case: &ProgramCase| {
+        let spec = GpuSpec::a100();
+        let (g, shapes, p) = case.build(&spec);
+        let cache = AnalysisCache::new();
+        let az = Analyzer::new(Some(&cache), &g, &shapes);
+        // walk a couple of states: the initial one, then the first valid
+        // action applied (mask/regions change with the program)
+        let mut states = vec![p];
+        let mask0 = action_mask(&states[0], &g, &shapes, &spec);
+        if let Some(a) = (0..STOP_ACTION).find(|&a| mask0[a]) {
+            if let Ok(next) = apply_action(&states[0], &g, &shapes,
+                                           &decode_action(a), &spec, 1.0) {
+                states.push(next);
+            }
+        }
+        for (si, state) in states.iter().enumerate() {
+            let fresh_mask = action_mask(state, &g, &shapes, &spec);
+            let fresh_regions = analyze_regions(state, &g);
+            for pass in 0..2 {
+                let cached_mask = az.mask(state, &g, &shapes, &spec);
+                prop_assert!(
+                    *cached_mask == fresh_mask,
+                    "cached mask diverged (state {si}, pass {pass})"
+                );
+                let cached_regions = az.regions(state, &g);
+                prop_assert!(
+                    *cached_regions == fresh_regions,
+                    "cached regions diverged (state {si}, pass {pass})"
+                );
+            }
+        }
+        let s = cache.stats();
+        prop_assert!(s.hits + s.misses == s.lookups,
+                     "stats identity broken: {s:?}");
+        prop_assert!(s.hits > 0, "second pass never hit the cache");
+        Ok(())
+    });
+}
+
+/// Everything observable about one episode, bit-exact.
+#[derive(PartialEq, Debug)]
+struct EpisodeTrace {
+    eager_bits: u64,
+    rewards: Vec<u64>,
+    signals: Vec<String>,
+    speedups: Vec<u64>,
+    best_bits: u64,
+    best_program: Program,
+}
+
+fn run_episode(task: &Task, case: &EpisodeCase, caches: EnvCaches)
+               -> EpisodeTrace {
+    let mut env = OptimEnv::with_caches(
+        task,
+        GpuSpec::a100(),
+        LlmProfile::get(ProfileId::GeminiFlash25),
+        case.env.to_cfg(),
+        case.seed,
+        caches,
+    );
+    let mut trace = EpisodeTrace {
+        eager_bits: env.eager_us.to_bits(),
+        rewards: Vec::new(),
+        signals: Vec::new(),
+        speedups: Vec::new(),
+        best_bits: 0,
+        best_program: Program::default(),
+    };
+    for &a in case.actions.iter().cycle().take(env.cfg.max_steps) {
+        if env.state.done {
+            break;
+        }
+        let mask = env.mask();
+        let pick = if mask[a % ACTION_DIM] { a % ACTION_DIM } else { STOP_ACTION };
+        let r = env.step(pick);
+        trace.rewards.push(r.reward.to_bits());
+        trace.signals.push(format!("{:?}", r.signal));
+        trace.speedups.push(env.state.speedup.to_bits());
+    }
+    trace.best_bits = env.state.best_speedup.to_bits();
+    trace.best_program = env.state.best_program.clone();
+    trace
+}
+
+/// EdgeMemo differential (the headline tentpole guard): on generated
+/// tasks, configs and action streams, episodes must be byte-identical
+/// across every cache on/off combination — cold, each cache alone, all
+/// three together, a *warm shared* memo replaying a second run, and an
+/// edge memo under eviction pressure (`with_capacity(2)`).
+#[test]
+fn prop_edge_memo_episode_bitwise_identical() {
+    check(2222, default_cases(), gen_episode_case, |case: &EpisodeCase| {
+        let task = case.recipe.task();
+        let baseline = run_episode(&task, case, EnvCaches::none());
+        prop_assert!(
+            !baseline.signals.is_empty(),
+            "episode must take at least one step"
+        );
+        // every on/off combination of (cost, analysis, edges)
+        for combo in 1..8u8 {
+            let cost = CostCache::new();
+            let analysis = AnalysisCache::new();
+            let caches = EnvCaches {
+                cost: (combo & 1 != 0).then_some(&cost),
+                analysis: (combo & 2 != 0).then_some(&analysis),
+                edges: (combo & 4 != 0).then(|| Arc::new(EdgeMemo::new())),
+            };
+            // two passes: the second replays from whatever warmed up
+            for pass in 0..2 {
+                let got = run_episode(&task, case, caches.clone());
+                prop_assert!(
+                    got == baseline,
+                    "combo {combo:#05b} pass {pass} diverged from cold \
+                     episode:\n  got {:?}\n  want {:?}",
+                    got.signals, baseline.signals
+                );
+            }
+            if combo & 4 != 0 {
+                let s = caches.edges.as_ref().unwrap().stats();
+                prop_assert!(s.hits + s.misses == s.lookups,
+                             "edge-memo stats identity broken: {s:?}");
+                // Stop steps bypass the memo, so only a real transition
+                // guarantees a replay on the warm pass
+                let has_transition = baseline
+                    .signals
+                    .iter()
+                    .any(|s| !s.starts_with("Stop"));
+                prop_assert!(
+                    !has_transition || s.hits > 0,
+                    "warm pass never replayed from the edge memo"
+                );
+            }
+        }
+        // eviction pressure: a 2-entry table thrashes constantly but must
+        // never change outcomes (misses just recompute)
+        let tiny = Arc::new(EdgeMemo::with_capacity(2));
+        for _ in 0..2 {
+            let got = run_episode(&task, case, EnvCaches {
+                edges: Some(Arc::clone(&tiny)),
+                ..EnvCaches::none()
+            });
+            prop_assert!(
+                got == baseline,
+                "eviction pressure changed the episode outcome"
             );
         }
         Ok(())
