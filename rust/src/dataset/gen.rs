@@ -2,7 +2,7 @@
 //! parallel across tasks.
 
 use super::store::{TrajStep, Trajectory};
-use crate::env::{EnvCaches, EnvConfig, StepSignal, TreeEnv};
+use crate::env::{EdgeMemo, EnvCaches, EnvConfig, StepSignal, TreeEnv};
 use crate::gpusim::{CostCache, GpuSpec};
 use crate::microcode::{LlmProfile, ProfileId};
 use crate::policy::{HeuristicPolicy, Policy, RandomPolicy};
@@ -21,6 +21,12 @@ pub struct DatasetCfg {
     /// Fraction of episodes rolled out by the heuristic ladder (rest are
     /// random exploration).
     pub heuristic_frac: f64,
+    /// Share one [`EdgeMemo`] across every task tree instead of the
+    /// default per-tree tables — the `--memo-store` persistence hook: the
+    /// caller warm-starts it from disk before generation and flushes it
+    /// after, so replayed edges skip micro-coding across runs. Replay is
+    /// bit-identical either way.
+    pub shared_edges: Option<std::sync::Arc<EdgeMemo>>,
 }
 
 impl Default for DatasetCfg {
@@ -31,6 +37,7 @@ impl Default for DatasetCfg {
             seed: 0xDA7A,
             threads: crate::util::parallel::default_threads(),
             heuristic_frac: 0.3,
+            shared_edges: None,
         }
     }
 }
@@ -99,7 +106,8 @@ pub fn generate(tasks: &[Task], spec: &GpuSpec, profile_id: ProfileId,
             EnvCaches {
                 cost: Some(&cost_cache),
                 analysis: Some(&analysis_cache),
-                edges: None, // each task's tree owns its replay table
+                // None: each task's tree owns its replay table
+                edges: cfg.shared_edges.clone(),
             },
         );
         for ep in 0..cfg.per_task {

@@ -22,6 +22,7 @@
 //! memo on, off, shared, or under eviction pressure (guarded by
 //! `prop_edge_memo_episode_bitwise_identical` and `rust/tests/batch.rs`).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::reward::StepSignal;
@@ -32,7 +33,7 @@ use crate::microcode::LlmProfile;
 use crate::tasks::Task;
 
 /// Default total capacity. Edges carry whole programs, so this is kept an
-/// order of magnitude below the cost cache's bound; overflow FIFO-evicts
+/// order of magnitude below the cost cache's bound; overflow LRU-evicts
 /// (recompute, never unbounded memory).
 const DEFAULT_MAX_ENTRIES: usize = 200_000;
 
@@ -42,16 +43,25 @@ const DEFAULT_MAX_ENTRIES: usize = 200_000;
 /// the program moved). The program is `Arc`-wrapped so a table hit
 /// clones a refcount, not a multi-kernel program, inside the shard lock
 /// (the [`ShardedMemo`] contract: values must be cheap to clone).
+/// `from_disk` marks entries warm-started from a persisted store (see
+/// [`super::memo_store`]) so hits on them can be surfaced separately —
+/// it is deliberately excluded from edge equality: a disk edge replays
+/// bit-identically to its freshly-computed twin.
 #[derive(Clone, Debug)]
 pub struct CachedEdge {
     pub program: Option<Arc<Program>>,
     pub signal: StepSignal,
     pub speedup: f64,
+    pub from_disk: bool,
 }
 
-/// The shared transition table.
+/// The shared transition table, plus the disk-tier counters backing the
+/// `--memo-store` persistence flow (how many edges were warm-started
+/// from a store, and how many lookups those edges have served).
 pub struct EdgeMemo {
     edges: ShardedMemo<CachedEdge>,
+    disk_loaded: AtomicUsize,
+    disk_hits: AtomicUsize,
 }
 
 impl Default for EdgeMemo {
@@ -65,24 +75,36 @@ impl EdgeMemo {
         Self::with_capacity(DEFAULT_MAX_ENTRIES)
     }
 
-    /// A memo bounded to `max_entries` edges (FIFO eviction per shard).
+    /// A memo bounded to `max_entries` edges (LRU eviction per shard).
     /// Tiny capacities are legitimate — the differential tests run under
     /// eviction pressure to prove outcomes never depend on residency.
     pub fn with_capacity(max_entries: usize) -> EdgeMemo {
-        EdgeMemo { edges: ShardedMemo::new(max_entries) }
+        EdgeMemo {
+            edges: ShardedMemo::new(max_entries),
+            disk_loaded: AtomicUsize::new(0),
+            disk_hits: AtomicUsize::new(0),
+        }
     }
 
     pub fn get(&self, key: u64) -> Option<CachedEdge> {
-        self.edges.get(key)
+        let hit = self.edges.get(key);
+        if matches!(&hit, Some(e) if e.from_disk) {
+            self.disk_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
     }
 
     pub fn insert(&self, key: u64, edge: CachedEdge) {
         self.edges.insert(key, edge);
     }
 
-    /// Traffic counters (`hits + misses == lookups`; evictions monotone).
+    /// Traffic counters (`hits + misses == lookups`; evictions monotone;
+    /// `disk_hits` counts hits served by warm-started entries).
     pub fn stats(&self) -> MemoStats {
-        self.edges.stats()
+        MemoStats {
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            ..self.edges.stats()
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -92,6 +114,21 @@ impl EdgeMemo {
     pub fn is_empty(&self) -> bool {
         self.edges.is_empty()
     }
+
+    /// Snapshot every resident `(key, edge)` pair (see
+    /// [`ShardedMemo::entries`]); the persistence tier serializes this.
+    pub fn entries(&self) -> Vec<(u64, CachedEdge)> {
+        self.edges.entries()
+    }
+
+    /// Number of edges warm-started from a persisted store.
+    pub fn disk_loaded(&self) -> usize {
+        self.disk_loaded.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_disk_loaded(&self, n: usize) {
+        self.disk_loaded.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 impl std::fmt::Debug for EdgeMemo {
@@ -99,8 +136,10 @@ impl std::fmt::Debug for EdgeMemo {
         let s = self.stats();
         write!(
             f,
-            "EdgeMemo {{ entries: {}, hits: {}, misses: {}, evictions: {} }}",
-            self.len(), s.hits, s.misses, s.evictions
+            "EdgeMemo {{ entries: {}, hits: {}, misses: {}, evictions: {}, \
+             disk: {}/{} }}",
+            self.len(), s.hits, s.misses, s.evictions,
+            s.disk_hits, self.disk_loaded()
         )
     }
 }
@@ -195,6 +234,7 @@ mod tests {
             program: None,
             signal: StepSignal::Rejected,
             speedup: 1.0,
+            from_disk: false,
         };
         assert!(memo.get(1).is_none());
         memo.insert(1, edge.clone());
@@ -204,5 +244,27 @@ mod tests {
         assert_eq!(s.hits + s.misses, s.lookups);
         assert_eq!((s.lookups, s.hits, s.misses, s.evictions), (2, 1, 1, 0));
         assert_eq!(memo.len(), 1);
+        assert_eq!(s.disk_hits, 0);
+    }
+
+    #[test]
+    fn disk_hits_counted_only_for_disk_edges() {
+        let memo = EdgeMemo::with_capacity(8);
+        let live = CachedEdge {
+            program: None,
+            signal: StepSignal::Rejected,
+            speedup: 1.0,
+            from_disk: false,
+        };
+        let disk = CachedEdge { from_disk: true, ..live.clone() };
+        memo.insert(1, live);
+        memo.insert(2, disk);
+        memo.note_disk_loaded(1);
+        memo.get(1);
+        memo.get(2);
+        memo.get(2);
+        let s = memo.stats();
+        assert_eq!((s.hits, s.disk_hits), (3, 2));
+        assert_eq!(memo.disk_loaded(), 1);
     }
 }

@@ -1,0 +1,626 @@
+//! Disk persistence for the [`EdgeMemo`] transposition table: the
+//! process-crossing tier of the memo subsystem.
+//!
+//! The paper's Macro Thinking stage amortizes exploration over an
+//! experience store of optimization trajectories; an in-memory memo only
+//! amortizes within one process. This module serializes the memo's
+//! `(key → CachedEdge)` entries — including the `Arc<Program>` payloads —
+//! to a versioned, self-describing binary file, so a later `repro eval` /
+//! `train-ppo` run warm-starts from everything earlier runs computed
+//! (the `--memo-store <path>` flag).
+//!
+//! Framing is hand-rolled (the workspace allows no serialization deps):
+//! an 8-byte magic that doubles as the format version, a u64 entry
+//! count, then length-prefixed little-endian records. Floats travel as
+//! IEEE bits, so a loaded edge replays **bit-identically** to its
+//! freshly-computed twin (guarded by the persistence property in
+//! `rust/tests/properties.rs`). Entries are written key-sorted so equal
+//! memo contents produce byte-identical files.
+//!
+//! Loading is strict but the entry points are forgiving:
+//! [`load_edge_memo`] rejects bad magic (wrong version), truncation,
+//! implausible lengths, unknown tags and trailing bytes with an `Err`;
+//! [`warm_start_edge_memo`] turns any of those into a logged cold start,
+//! never a panic — a corrupt store costs recomputation, not the run.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::memo::{CachedEdge, EdgeMemo};
+use super::reward::StepSignal;
+use crate::graph::{Mutation, MutationKind};
+use crate::kir::{Kernel, LoopOrder, Program, Schedule};
+
+/// Format magic; the trailing digit is the version. Bump it on any layout
+/// change — old stores then fail the magic check and cold-start cleanly.
+const MAGIC: &[u8; 8] = b"QMMCEDG1";
+
+/// Load-time sanity bounds: a corrupted length prefix must bail early,
+/// not drive a multi-gigabyte allocation.
+const MAX_ENTRIES: u64 = 10_000_000;
+const MAX_KERNELS: u32 = 4_096;
+const MAX_NODES: u32 = 100_000;
+const MAX_MUTATIONS: u32 = 10_000;
+const MAX_NAME: u32 = 4_096;
+
+// --- primitive framing -----------------------------------------------
+
+fn w_byte(w: &mut impl Write, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+fn w_u32(w: &mut impl Write, v: usize) -> Result<()> {
+    let v = u32::try_from(v).context("field exceeds u32 framing")?;
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32(w: &mut impl Write, v: f32) -> Result<()> {
+    w.write_all(&v.to_bits().to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f64(w: &mut impl Write, v: f64) -> Result<()> {
+    w_u64(w, v.to_bits())
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> Result<()> {
+    if s.len() as u64 > MAX_NAME as u64 {
+        bail!("string field of {} bytes exceeds framing bound", s.len());
+    }
+    w_u32(w, s.len())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn r_byte(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b).context("truncated store")?;
+    Ok(b[0])
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated store")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("truncated store")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f32(r: &mut impl Read) -> Result<f32> {
+    Ok(f32::from_bits(r_u32(r)?))
+}
+
+fn r_f64(r: &mut impl Read) -> Result<f64> {
+    Ok(f64::from_bits(r_u64(r)?))
+}
+
+fn r_str(r: &mut impl Read) -> Result<String> {
+    let len = r_u32(r)?;
+    if len > MAX_NAME {
+        bail!("string length {len} exceeds framing bound");
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf).context("truncated store")?;
+    String::from_utf8(buf).context("non-UTF-8 string field")
+}
+
+// --- record framing --------------------------------------------------
+
+fn write_schedule(w: &mut impl Write, s: &Schedule) -> Result<()> {
+    match s.block_tile {
+        None => w_byte(w, 0)?,
+        Some((m, n, k)) => {
+            w_byte(w, 1)?;
+            w_u32(w, m)?;
+            w_u32(w, n)?;
+            w_u32(w, k)?;
+        }
+    }
+    match s.reg_tile {
+        None => w_byte(w, 0)?,
+        Some((m, n)) => {
+            w_byte(w, 1)?;
+            w_u32(w, m)?;
+            w_u32(w, n)?;
+        }
+    }
+    w_u32(w, s.pipeline_depth)?;
+    w_byte(w, match s.loop_order {
+        LoopOrder::Naive => 0,
+        LoopOrder::Coalesced => 1,
+        LoopOrder::Blocked => 2,
+    })?;
+    w_u32(w, s.vector_width)
+}
+
+fn read_schedule(r: &mut impl Read) -> Result<Schedule> {
+    let block_tile = match r_byte(r)? {
+        0 => None,
+        1 => Some((
+            r_u32(r)? as usize,
+            r_u32(r)? as usize,
+            r_u32(r)? as usize,
+        )),
+        t => bail!("bad block-tile tag {t}"),
+    };
+    let reg_tile = match r_byte(r)? {
+        0 => None,
+        1 => Some((r_u32(r)? as usize, r_u32(r)? as usize)),
+        t => bail!("bad reg-tile tag {t}"),
+    };
+    let pipeline_depth = r_u32(r)? as usize;
+    let loop_order = match r_byte(r)? {
+        0 => LoopOrder::Naive,
+        1 => LoopOrder::Coalesced,
+        2 => LoopOrder::Blocked,
+        t => bail!("bad loop-order tag {t}"),
+    };
+    let vector_width = r_u32(r)? as usize;
+    Ok(Schedule { block_tile, reg_tile, pipeline_depth, loop_order, vector_width })
+}
+
+fn write_mutation(w: &mut impl Write, m: &Mutation) -> Result<()> {
+    w_u32(w, m.node)?;
+    match m.kind {
+        MutationKind::BoundaryDrop { frac } => {
+            w_byte(w, 0)?;
+            w_f32(w, frac)
+        }
+        MutationKind::RaceCorruption { scale } => {
+            w_byte(w, 1)?;
+            w_f32(w, scale)
+        }
+        MutationKind::IndexOffset => w_byte(w, 2),
+        MutationKind::SkippedOp => w_byte(w, 3),
+        MutationKind::BadAccumInit { bias } => {
+            w_byte(w, 4)?;
+            w_f32(w, bias)
+        }
+    }
+}
+
+fn read_mutation(r: &mut impl Read) -> Result<Mutation> {
+    let node = r_u32(r)? as usize;
+    let kind = match r_byte(r)? {
+        0 => MutationKind::BoundaryDrop { frac: r_f32(r)? },
+        1 => MutationKind::RaceCorruption { scale: r_f32(r)? },
+        2 => MutationKind::IndexOffset,
+        3 => MutationKind::SkippedOp,
+        4 => MutationKind::BadAccumInit { bias: r_f32(r)? },
+        t => bail!("bad mutation tag {t}"),
+    };
+    Ok(Mutation { node, kind })
+}
+
+fn write_program(w: &mut impl Write, p: &Program) -> Result<()> {
+    w_u32(w, p.kernels.len())?;
+    for k in &p.kernels {
+        w_str(w, &k.name)?;
+        w_u32(w, k.nodes.len())?;
+        for &n in &k.nodes {
+            w_u32(w, n)?;
+        }
+        write_schedule(w, &k.schedule)?;
+    }
+    w_u32(w, p.mutations.len())?;
+    for m in &p.mutations {
+        write_mutation(w, m)?;
+    }
+    w_byte(w, p.compile_broken as u8)
+}
+
+fn read_program(r: &mut impl Read) -> Result<Program> {
+    let n_kernels = r_u32(r)?;
+    if n_kernels > MAX_KERNELS {
+        bail!("implausible kernel count {n_kernels}");
+    }
+    let mut kernels = Vec::with_capacity(n_kernels as usize);
+    for _ in 0..n_kernels {
+        let name = r_str(r)?;
+        let n_nodes = r_u32(r)?;
+        if n_nodes > MAX_NODES {
+            bail!("implausible node count {n_nodes}");
+        }
+        let mut nodes = Vec::with_capacity(n_nodes as usize);
+        for _ in 0..n_nodes {
+            nodes.push(r_u32(r)? as usize);
+        }
+        let schedule = read_schedule(r)?;
+        kernels.push(Kernel { nodes, schedule, name });
+    }
+    let n_mutations = r_u32(r)?;
+    if n_mutations > MAX_MUTATIONS {
+        bail!("implausible mutation count {n_mutations}");
+    }
+    let mut mutations = Vec::with_capacity(n_mutations as usize);
+    for _ in 0..n_mutations {
+        mutations.push(read_mutation(r)?);
+    }
+    let compile_broken = match r_byte(r)? {
+        0 => false,
+        1 => true,
+        t => bail!("bad compile-broken tag {t}"),
+    };
+    Ok(Program { kernels, mutations, compile_broken })
+}
+
+fn write_signal(w: &mut impl Write, s: StepSignal) -> Result<()> {
+    match s {
+        StepSignal::CompileFail => w_byte(w, 0),
+        StepSignal::WrongResult => w_byte(w, 1),
+        StepSignal::Rejected => w_byte(w, 2),
+        StepSignal::Correct { prev, now } => {
+            w_byte(w, 3)?;
+            w_f64(w, prev)?;
+            w_f64(w, now)
+        }
+        StepSignal::Stop { best } => {
+            w_byte(w, 4)?;
+            w_f64(w, best)
+        }
+    }
+}
+
+fn read_signal(r: &mut impl Read) -> Result<StepSignal> {
+    Ok(match r_byte(r)? {
+        0 => StepSignal::CompileFail,
+        1 => StepSignal::WrongResult,
+        2 => StepSignal::Rejected,
+        3 => StepSignal::Correct { prev: r_f64(r)?, now: r_f64(r)? },
+        4 => StepSignal::Stop { best: r_f64(r)? },
+        t => bail!("bad signal tag {t}"),
+    })
+}
+
+fn write_edge(w: &mut impl Write, edge: &CachedEdge) -> Result<()> {
+    // `from_disk` is not stored: every loaded edge is a disk edge
+    match &edge.program {
+        None => w_byte(w, 0)?,
+        Some(p) => {
+            w_byte(w, 1)?;
+            write_program(w, p)?;
+        }
+    }
+    write_signal(w, edge.signal)?;
+    w_f64(w, edge.speedup)
+}
+
+fn read_edge(r: &mut impl Read) -> Result<CachedEdge> {
+    let program = match r_byte(r)? {
+        0 => None,
+        1 => Some(Arc::new(read_program(r)?)),
+        t => bail!("bad edge-program tag {t}"),
+    };
+    let signal = read_signal(r)?;
+    let speedup = r_f64(r)?;
+    Ok(CachedEdge { program, signal, speedup, from_disk: true })
+}
+
+// --- entry points ----------------------------------------------------
+
+/// Serialize every resident edge of `memo` to `path` (key-sorted, so
+/// equal contents yield byte-identical files). Returns the edge count.
+pub fn save_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+    let mut entries = memo.entries();
+    entries.sort_by_key(|&(k, _)| k);
+    let file = File::create(path)
+        .with_context(|| format!("create edge-memo store {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w_u64(&mut w, entries.len() as u64)?;
+    for (key, edge) in &entries {
+        w_u64(&mut w, *key)?;
+        write_edge(&mut w, edge)?;
+    }
+    w.flush()?;
+    Ok(entries.len())
+}
+
+/// Load a store written by [`save_edge_memo`] into `memo`, marking every
+/// entry `from_disk`. Strict: bad magic (wrong version), truncation,
+/// implausible lengths, unknown tags and trailing bytes are all `Err`s,
+/// and on error the memo is left untouched (entries are parsed in full
+/// before any insert).
+pub fn load_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+    let file = File::open(path)
+        .with_context(|| format!("open edge-memo store {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("store too short for header")?;
+    if magic != *MAGIC {
+        bail!("{path:?}: not a v1 edge-memo store (magic {magic:02x?})");
+    }
+    let n = r_u64(&mut r)?;
+    if n > MAX_ENTRIES {
+        bail!("{path:?}: implausible entry count {n}");
+    }
+    let mut entries = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let key = r_u64(&mut r)?;
+        entries.push((key, read_edge(&mut r)?));
+    }
+    let mut trail = [0u8; 1];
+    if r.read(&mut trail)? != 0 {
+        bail!("{path:?}: trailing bytes after {n} entries");
+    }
+    let loaded = entries.len();
+    for (key, edge) in entries {
+        memo.insert(key, edge);
+    }
+    memo.note_disk_loaded(loaded);
+    Ok(loaded)
+}
+
+/// Best-effort warm start behind the `--memo-store` flag: a missing
+/// store is a silent cold start (the first run of a pair), a corrupt /
+/// truncated / version-mismatched one logs and cold-starts, a good one
+/// logs the edge count. Never panics, never fails the run.
+pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> usize {
+    if !path.exists() {
+        return 0;
+    }
+    match load_edge_memo(memo, path) {
+        Ok(n) => {
+            eprintln!(
+                "edge-memo: warm-started {n} edges from {}",
+                path.display()
+            );
+            n
+        }
+        Err(e) => {
+            eprintln!(
+                "edge-memo: ignoring store {}: {e:#} (cold start)",
+                path.display()
+            );
+            0
+        }
+    }
+}
+
+/// Best-effort flush behind the `--memo-store` flag: persists the memo,
+/// logging instead of failing on I/O errors (a full disk costs the next
+/// run its warm start, not this run its results).
+pub fn flush_edge_memo(memo: &EdgeMemo, path: &Path) -> usize {
+    match save_edge_memo(memo, path) {
+        Ok(n) => {
+            eprintln!("edge-memo: persisted {n} edges to {}", path.display());
+            n
+        }
+        Err(e) => {
+            eprintln!(
+                "edge-memo: failed to persist to {}: {e:#}",
+                path.display()
+            );
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qimeng_memo_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// One edge of every flavour the stepper produces.
+    fn sample_edges() -> Vec<(u64, CachedEdge)> {
+        let program = Program {
+            kernels: vec![
+                Kernel {
+                    nodes: vec![2, 3, 4],
+                    schedule: Schedule {
+                        block_tile: Some((128, 64, 32)),
+                        reg_tile: Some((8, 4)),
+                        pipeline_depth: 2,
+                        loop_order: LoopOrder::Blocked,
+                        vector_width: 4,
+                    },
+                    name: "k0_matmul".to_string(),
+                },
+                Kernel {
+                    nodes: vec![5],
+                    schedule: Schedule::default(),
+                    name: "k1_relu".to_string(),
+                },
+            ],
+            mutations: vec![
+                Mutation { node: 2, kind: MutationKind::BoundaryDrop { frac: 0.25 } },
+                Mutation { node: 3, kind: MutationKind::RaceCorruption { scale: 0.5 } },
+                Mutation { node: 4, kind: MutationKind::IndexOffset },
+                Mutation { node: 5, kind: MutationKind::SkippedOp },
+                Mutation { node: 5, kind: MutationKind::BadAccumInit { bias: 1.5 } },
+            ],
+            compile_broken: true,
+        };
+        vec![
+            (7, CachedEdge {
+                program: Some(Arc::new(program)),
+                signal: StepSignal::Correct { prev: 0.1, now: 0.7 },
+                speedup: 2.25,
+                from_disk: false,
+            }),
+            (9, CachedEdge {
+                program: None,
+                signal: StepSignal::Rejected,
+                speedup: 1.0,
+                from_disk: false,
+            }),
+            (11, CachedEdge {
+                program: None,
+                signal: StepSignal::CompileFail,
+                speedup: 1.0,
+                from_disk: false,
+            }),
+            (13, CachedEdge {
+                program: None,
+                signal: StepSignal::WrongResult,
+                speedup: 1.0,
+                from_disk: false,
+            }),
+            (15, CachedEdge {
+                program: None,
+                signal: StepSignal::Stop { best: 3.5 },
+                speedup: 3.5,
+                from_disk: false,
+            }),
+        ]
+    }
+
+    fn assert_same_edge(a: &CachedEdge, b: &CachedEdge) {
+        match (&a.program, &b.program) {
+            (None, None) => {}
+            (Some(x), Some(y)) => assert_eq!(**x, **y),
+            _ => panic!("program presence diverged"),
+        }
+        assert_eq!(a.signal, b.signal);
+        assert_eq!(a.speedup.to_bits(), b.speedup.to_bits());
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_edge_flavour() {
+        let path = tmp("roundtrip.bin");
+        let memo = EdgeMemo::with_capacity(64);
+        for (k, e) in sample_edges() {
+            memo.insert(k, e);
+        }
+        let saved = save_edge_memo(&memo, &path).unwrap();
+        assert_eq!(saved, 5);
+
+        let loaded_memo = EdgeMemo::with_capacity(64);
+        let loaded = load_edge_memo(&loaded_memo, &path).unwrap();
+        assert_eq!(loaded, 5);
+        assert_eq!(loaded_memo.disk_loaded(), 5);
+        for (k, original) in sample_edges() {
+            let got = loaded_memo.get(k).expect("edge survived the roundtrip");
+            assert!(got.from_disk, "loaded edges must be marked from_disk");
+            assert_same_edge(&got, &original);
+        }
+        assert!(loaded_memo.stats().disk_hits > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_is_deterministic_for_equal_contents() {
+        let (p1, p2) = (tmp("det1.bin"), tmp("det2.bin"));
+        let a = EdgeMemo::with_capacity(64);
+        let b = EdgeMemo::with_capacity(64);
+        for (k, e) in sample_edges() {
+            a.insert(k, e);
+        }
+        // reversed insertion order must not change the bytes
+        for (k, e) in sample_edges().into_iter().rev() {
+            b.insert(k, e);
+        }
+        save_edge_memo(&a, &p1).unwrap();
+        save_edge_memo(&b, &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn wrong_version_or_magic_degrades_to_cold() {
+        let path = tmp("wrong_magic.bin");
+        let mut bytes = b"QMMCEDG9".to_vec(); // future version
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let memo = EdgeMemo::with_capacity(8);
+        assert!(load_edge_memo(&memo, &path).is_err());
+        assert_eq!(warm_start_edge_memo(&memo, &path), 0);
+        assert!(memo.is_empty(), "rejected store must leave the memo cold");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_store_degrades_to_cold() {
+        let path = tmp("truncated.bin");
+        let memo = EdgeMemo::with_capacity(64);
+        for (k, e) in sample_edges() {
+            memo.insert(k, e);
+        }
+        save_edge_memo(&memo, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let cold = EdgeMemo::with_capacity(64);
+        assert!(load_edge_memo(&cold, &path).is_err());
+        assert_eq!(warm_start_edge_memo(&cold, &path), 0);
+        assert!(cold.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trailing_garbage_degrades_to_cold() {
+        let path = tmp("trailing.bin");
+        let memo = EdgeMemo::with_capacity(8);
+        memo.insert(1, CachedEdge {
+            program: None,
+            signal: StepSignal::Rejected,
+            speedup: 1.0,
+            from_disk: false,
+        });
+        save_edge_memo(&memo, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0xFF);
+        std::fs::write(&path, &bytes).unwrap();
+        let cold = EdgeMemo::with_capacity(8);
+        assert!(load_edge_memo(&cold, &path).is_err());
+        assert!(cold.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_count_degrades_to_cold() {
+        let path = tmp("bad_count.bin");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let memo = EdgeMemo::with_capacity(8);
+        assert!(load_edge_memo(&memo, &path).is_err());
+        assert_eq!(warm_start_edge_memo(&memo, &path), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_store_is_a_silent_cold_start() {
+        let path = tmp("never_written.bin");
+        let _ = std::fs::remove_file(&path);
+        let memo = EdgeMemo::with_capacity(8);
+        assert_eq!(warm_start_edge_memo(&memo, &path), 0);
+        assert!(memo.is_empty());
+        assert_eq!(memo.disk_loaded(), 0);
+    }
+
+    #[test]
+    fn flush_then_warm_start_counts_disk_state() {
+        let path = tmp("flush_warm.bin");
+        let memo = EdgeMemo::with_capacity(64);
+        for (k, e) in sample_edges() {
+            memo.insert(k, e);
+        }
+        assert_eq!(flush_edge_memo(&memo, &path), 5);
+        let warm = EdgeMemo::with_capacity(64);
+        assert_eq!(warm_start_edge_memo(&warm, &path), 5);
+        assert_eq!(warm.len(), 5);
+        assert_eq!(warm.disk_loaded(), 5);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -11,12 +11,16 @@
 //! micro-coding rollouts for states it has already visited.
 
 mod memo;
+mod memo_store;
 mod obs;
 mod reward;
 mod stepper;
 mod tree;
 
 pub use memo::{CachedEdge, EdgeMemo};
+pub use memo_store::{
+    flush_edge_memo, load_edge_memo, save_edge_memo, warm_start_edge_memo,
+};
 pub use obs::{featurize, OBS_DIM};
 pub use reward::{shape_reward, RewardCfg, StepSignal};
 pub use stepper::{EnvCaches, EnvConfig, EnvState, OptimEnv, StepResult};

@@ -16,7 +16,8 @@ use std::sync::Arc;
 use super::memo::{self, CachedEdge, EdgeMemo};
 use super::obs::featurize;
 use super::reward::{shape_reward, RewardCfg, StepSignal};
-use crate::gpusim::{graph_fingerprint, CostCache, GpuSpec, Pricer};
+use crate::gpusim::{graph_fingerprint, program_fingerprint, CostCache,
+                    GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::kir::{lower_naive, Program};
 use crate::microcode::{
@@ -81,6 +82,11 @@ pub struct EnvState {
     pub history: Vec<usize>,
     /// Hash of the *successful* action path (tree-node identity).
     pub path_hash: u64,
+    /// Cached [`program_fingerprint`] of `program`, refreshed whenever
+    /// the program changes (accept/replay) — the mask lookup and the
+    /// region lookup within one step share this one hash instead of each
+    /// re-fingerprinting the program.
+    pub program_fp: u64,
     pub done: bool,
 }
 
@@ -157,6 +163,7 @@ impl<'a> OptimEnv<'a> {
             / pricer.program_time_us(&program, &task.graph, &shapes, &spec);
         let state = EnvState {
             best_program: program.clone(),
+            program_fp: program_fingerprint(&program),
             program,
             step: 0,
             speedup,
@@ -189,8 +196,8 @@ impl<'a> OptimEnv<'a> {
     /// when one is attached).
     pub fn mask(&self) -> Vec<bool> {
         self.analyzer
-            .mask(&self.state.program, &self.task.graph, &self.shapes,
-                  &self.spec)
+            .mask_fp(self.state.program_fp, &self.state.program,
+                     &self.task.graph, &self.shapes, &self.spec)
             .as_ref()
             .clone()
     }
@@ -271,6 +278,7 @@ impl<'a> OptimEnv<'a> {
                     .then(|| Arc::new(self.state.program.clone())),
                 signal,
                 speedup: self.state.speedup,
+                from_disk: false,
             });
         }
         self.finish(signal, step_idx)
@@ -282,8 +290,8 @@ impl<'a> OptimEnv<'a> {
     /// analyzer — one analysis per state instead of several per step.
     fn transition(&mut self, action: usize) -> StepSignal {
         let mut rng = Rng::new(self.edge_seed(action));
-        let regions =
-            self.analyzer.regions(&self.state.program, &self.task.graph);
+        let regions = self.analyzer.regions_fp(
+            self.state.program_fp, &self.state.program, &self.task.graph);
         let outcome = micro_step_at(
             &self.state.program,
             &self.task.graph,
@@ -320,6 +328,7 @@ impl<'a> OptimEnv<'a> {
             self.state.path_hash = mix(self.state.path_hash,
                                        action as u64 + 1);
             self.state.program = (*p).clone();
+            self.state.program_fp = program_fingerprint(&self.state.program);
             self.state.speedup = edge.speedup;
             if edge.speedup > self.state.best_speedup {
                 self.state.best_speedup = edge.speedup;
@@ -346,6 +355,7 @@ impl<'a> OptimEnv<'a> {
         self.state.path_hash = mix(self.state.path_hash,
                                    *self.state.history.first().unwrap() as u64 + 1);
         self.state.program = p;
+        self.state.program_fp = program_fingerprint(&self.state.program);
         self.state.speedup = now;
         if now > self.state.best_speedup {
             self.state.best_speedup = now;
@@ -488,6 +498,37 @@ mod tests {
                 assert!(s.hits > 0, "second episode must replay from memo");
             }
         }
+    }
+
+    #[test]
+    fn cached_program_fp_tracks_program() {
+        // regression: the mask lookup and the edge-memo/region lookups of
+        // one step used to each re-fingerprint the program; the cached
+        // fingerprint must stay in sync through live steps AND replays
+        let (tasks, _) = env(9);
+        let edges = Arc::new(EdgeMemo::new());
+        for _ in 0..2 {
+            let mut e = OptimEnv::with_caches(
+                &tasks[0],
+                GpuSpec::a100(),
+                LlmProfile::get(ProfileId::GeminiPro25),
+                EnvConfig::default(),
+                13,
+                EnvCaches { edges: Some(Arc::clone(&edges)),
+                            ..EnvCaches::none() },
+            );
+            assert_eq!(e.state.program_fp,
+                       program_fingerprint(&e.state.program));
+            while !e.state.done {
+                let mask = e.mask();
+                let a = (0..mask.len()).find(|&a| mask[a]).unwrap();
+                e.step(a);
+                assert_eq!(e.state.program_fp,
+                           program_fingerprint(&e.state.program),
+                           "fingerprint cache went stale");
+            }
+        }
+        assert!(edges.stats().hits > 0, "second pass must exercise replay");
     }
 
     #[test]

@@ -188,6 +188,21 @@ impl BatchRunner {
         self.sink.as_ref().is_some_and(|s| s.failed())
     }
 
+    /// Warm the sweep's edge memo from a persisted `--memo-store` file
+    /// (see [`crate::env::warm_start_edge_memo`]): returns the edge count
+    /// loaded; a missing store is a silent cold start and a corrupt /
+    /// version-mismatched one logs and cold-starts — never aborts.
+    pub fn warm_edge_store(&self, path: &Path) -> usize {
+        crate::env::warm_start_edge_memo(&self.edges, path)
+    }
+
+    /// Persist the sweep's edge memo to a `--memo-store` file (see
+    /// [`crate::env::flush_edge_memo`]): returns the edge count written;
+    /// I/O failures log instead of failing the run.
+    pub fn flush_edge_store(&self, path: &Path) -> usize {
+        crate::env::flush_edge_memo(&self.edges, path)
+    }
+
     /// Run a sweep: every job's tasks become units on one work queue.
     /// Returns one [`SuiteResult`] per job, in job order.
     pub fn run(&self, jobs: &[BatchJob]) -> Vec<SuiteResult> {

@@ -41,6 +41,13 @@ pub struct EvalCfg {
     /// transposition table. Bit-identical either way; `false`
     /// (`--no-edge-memo`) is the escape hatch.
     pub use_edge_memo: bool,
+    /// Use this caller-owned [`EdgeMemo`] instead of a fresh per-call one
+    /// — the hook for the persistence tier (`--memo-store`): the caller
+    /// warm-starts the memo from disk before the sweep and flushes it
+    /// after. Ignored when `use_edge_memo` is `false`. A disk-loaded edge
+    /// replays bit-identically to a recomputed one, so results are
+    /// unchanged either way.
+    pub shared_edges: Option<Arc<EdgeMemo>>,
 }
 
 impl Default for EvalCfg {
@@ -53,6 +60,7 @@ impl Default for EvalCfg {
             use_cost_cache: true,
             use_analysis_cache: true,
             use_edge_memo: true,
+            shared_edges: None,
         }
     }
 }
@@ -162,7 +170,8 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
         cost: cost.as_ref(),
         analysis: analysis.as_ref(),
         edges: if cfg.use_edge_memo {
-            Some(Arc::new(EdgeMemo::new()))
+            Some(cfg.shared_edges.clone()
+                     .unwrap_or_else(|| Arc::new(EdgeMemo::new())))
         } else {
             None
         },

@@ -198,6 +198,10 @@ pub struct MemoStats {
     pub hits: usize,
     pub misses: usize,
     pub evictions: usize,
+    /// Hits whose value was warm-started from a persisted store rather
+    /// than computed by this process. Only [`crate::env::EdgeMemo`]
+    /// overlays this (via `--memo-store`); plain memos report 0.
+    pub disk_hits: usize,
 }
 
 impl MemoStats {
@@ -216,22 +220,60 @@ impl MemoStats {
             hits: self.hits + other.hits,
             misses: self.misses + other.misses,
             evictions: self.evictions + other.evictions,
+            disk_hits: self.disk_hits + other.disk_hits,
         }
     }
 }
 
+struct Slot<V> {
+    value: V,
+    /// Recency stamp: matches exactly one `(key, stamp)` pair in the
+    /// shard's `order` queue — that pair is the entry's *live* position;
+    /// older pairs for the same key are stale and skipped at eviction.
+    stamp: u64,
+}
+
 struct MemoShard<V> {
-    map: HashMap<u64, V>,
-    /// Insertion order for FIFO eviction (contains exactly the map keys).
-    order: VecDeque<u64>,
+    map: HashMap<u64, Slot<V>>,
+    /// Recency queue, least-recent first, of `(key, stamp)` pairs.
+    /// Touching a key (get-hit or insert) pushes a fresh pair instead of
+    /// splicing the old one out (O(1) instead of O(n)); eviction and
+    /// compaction drop pairs whose stamp no longer matches the map.
+    order: VecDeque<(u64, u64)>,
+    /// Monotone stamp source for this shard.
+    tick: u64,
+}
+
+impl<V> MemoShard<V> {
+    fn new() -> MemoShard<V> {
+        MemoShard { map: HashMap::new(), order: VecDeque::new(), tick: 0 }
+    }
+
+    fn next_stamp(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Drop stale `(key, stamp)` pairs once they dominate the queue, so
+    /// `order` stays O(live entries) even under heavy re-touching.
+    fn compact_if_needed(&mut self) {
+        if self.order.len() > self.map.len().saturating_mul(2).max(8) {
+            let map = &self.map;
+            self.order.retain(|&(k, s)| {
+                map.get(&k).map(|slot| slot.stamp) == Some(s)
+            });
+        }
+    }
 }
 
 /// Sharded, thread-safe, capacity-bounded memo table: the common chassis
 /// under [`CostCache`], [`crate::transform::AnalysisCache`] and
 /// [`crate::env::EdgeMemo`]. 16-way sharded on the key's high bits so
-/// concurrent workers rarely contend; bounded per shard with FIFO
-/// eviction, so overflow degrades to recomputation, never to unbounded
-/// memory. Values must be cheap to clone (breakdowns, `Arc`s, programs).
+/// concurrent workers rarely contend; bounded per shard with LRU
+/// eviction (recency refreshed on both `get` hits and re-`insert`s), so
+/// overflow degrades to recomputation of the coldest entries, never to
+/// unbounded memory. Values must be cheap to clone (breakdowns, `Arc`s,
+/// programs).
 pub struct ShardedMemo<V> {
     shards: Vec<Mutex<MemoShard<V>>>,
     max_per_shard: usize,
@@ -245,14 +287,7 @@ impl<V: Clone> ShardedMemo<V> {
     /// at least one per shard).
     pub fn new(max_entries: usize) -> ShardedMemo<V> {
         ShardedMemo {
-            shards: (0..SHARDS)
-                .map(|_| {
-                    Mutex::new(MemoShard {
-                        map: HashMap::new(),
-                        order: VecDeque::new(),
-                    })
-                })
-                .collect(),
+            shards: (0..SHARDS).map(|_| Mutex::new(MemoShard::new())).collect(),
             max_per_shard: (max_entries / SHARDS).max(1),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -266,29 +301,47 @@ impl<V: Clone> ShardedMemo<V> {
         &self.shards[(key >> 48) as usize % SHARDS]
     }
 
-    /// Look a key up, counting the hit or miss.
+    /// Look a key up, counting the hit or miss. A hit refreshes the
+    /// entry's LRU recency.
     pub fn get(&self, key: u64) -> Option<V> {
-        let hit = self.shard(key).lock().unwrap().map.get(&key).cloned();
+        let mut guard = self.shard(key).lock().unwrap();
+        let shard = &mut *guard;
+        let stamp = shard.next_stamp();
+        let hit = shard.map.get_mut(&key).map(|slot| {
+            slot.stamp = stamp;
+            slot.value.clone()
+        });
         match &hit {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            Some(_) => {
+                shard.order.push_back((key, stamp));
+                shard.compact_if_needed();
+                self.hits.fetch_add(1, Ordering::Relaxed)
+            }
             None => self.misses.fetch_add(1, Ordering::Relaxed),
         };
         hit
     }
 
-    /// Insert a value, FIFO-evicting the shard's oldest entries when the
-    /// capacity bound is hit. Racing inserts of the same key keep the
-    /// last writer (all writers compute the same pure value anyway).
+    /// Insert a value, LRU-evicting the shard's least-recently-touched
+    /// entries when the capacity bound is hit. Re-inserting an existing
+    /// key refreshes its recency (and keeps the last writer's value —
+    /// racing writers compute the same pure value anyway).
     pub fn insert(&self, key: u64, value: V) {
-        let mut shard = self.shard(key).lock().unwrap();
-        if shard.map.insert(key, value).is_none() {
-            shard.order.push_back(key);
-            while shard.map.len() > self.max_per_shard {
-                let oldest = shard.order.pop_front().expect("order tracks map");
-                shard.map.remove(&oldest);
+        let mut guard = self.shard(key).lock().unwrap();
+        let shard = &mut *guard;
+        let stamp = shard.next_stamp();
+        shard.map.insert(key, Slot { value, stamp });
+        shard.order.push_back((key, stamp));
+        while shard.map.len() > self.max_per_shard {
+            let (k, s) = shard.order.pop_front().expect("order covers map");
+            // stale pair: the key was touched again after this pair was
+            // queued (or already evicted) — only live removals count
+            if shard.map.get(&k).map(|slot| slot.stamp) == Some(s) {
+                shard.map.remove(&k);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
+        shard.compact_if_needed();
     }
 
     /// Traffic counters since construction.
@@ -300,6 +353,7 @@ impl<V: Clone> ShardedMemo<V> {
             hits,
             misses,
             evictions: self.evictions.load(Ordering::Relaxed),
+            disk_hits: 0,
         }
     }
 
@@ -309,6 +363,37 @@ impl<V: Clone> ShardedMemo<V> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Snapshot every resident `(key, value)` pair, locking one shard at
+    /// a time. For persistence and diagnostics — not a hot path, and not
+    /// an atomic view across shards (racing inserts may or may not be
+    /// included). Counts no stats and bumps no recency.
+    pub fn entries(&self) -> Vec<(u64, V)> {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            out.extend(s.map.iter().map(|(k, slot)| (*k, slot.value.clone())));
+        }
+        out
+    }
+
+    /// Test hook: every map entry must own exactly one live recency pair,
+    /// and no shard may exceed its capacity bound.
+    #[cfg(test)]
+    fn assert_lru_invariant(&self) {
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            assert!(s.map.len() <= self.max_per_shard, "shard over capacity");
+            for (k, slot) in &s.map {
+                let live = s
+                    .order
+                    .iter()
+                    .filter(|&&(ok, os)| ok == *k && os == slot.stamp)
+                    .count();
+                assert_eq!(live, 1, "key {k}: one live recency pair expected");
+            }
+        }
     }
 }
 
@@ -577,7 +662,7 @@ mod tests {
     }
 
     #[test]
-    fn sharded_memo_fifo_evicts_and_counts() {
+    fn sharded_memo_evicts_and_counts() {
         let memo: ShardedMemo<usize> = ShardedMemo::new(2);
         // keys with identical high bits land in one shard (cap = 1)
         for k in 0..10u64 {
@@ -590,6 +675,73 @@ mod tests {
         assert_eq!(memo.get(0), None, "oldest entries were evicted");
         let s = memo.stats();
         assert_eq!((s.lookups, s.hits, s.misses), (2, 1, 1));
+        assert_eq!(s.disk_hits, 0, "plain memos never report disk hits");
+        memo.assert_lru_invariant();
+    }
+
+    #[test]
+    fn lru_get_refreshes_recency() {
+        // max_entries = 32 -> cap 2 per shard; keys 0..3 share shard 0
+        let memo: ShardedMemo<u64> = ShardedMemo::new(32);
+        memo.insert(0, 100);
+        memo.insert(1, 101);
+        assert_eq!(memo.get(0), Some(100), "touch 0: now 1 is coldest");
+        memo.insert(2, 102);
+        assert_eq!(memo.stats().evictions, 1);
+        assert_eq!(memo.get(0), Some(100), "recently-read entry survives");
+        assert_eq!(memo.get(1), None, "LRU entry was evicted");
+        assert_eq!(memo.get(2), Some(102));
+        memo.assert_lru_invariant();
+    }
+
+    #[test]
+    fn lru_reinsert_refreshes_recency() {
+        // regression: FIFO left a re-inserted key at its original queue
+        // position, so refreshing a hot entry could still evict it first
+        let memo: ShardedMemo<u64> = ShardedMemo::new(32);
+        memo.insert(0, 100);
+        memo.insert(1, 101);
+        memo.insert(0, 200);
+        memo.insert(2, 102);
+        assert_eq!(memo.stats().evictions, 1);
+        assert_eq!(memo.get(0), Some(200), "re-inserted key keeps new value");
+        assert_eq!(memo.get(1), None, "stale key evicted instead");
+        assert_eq!(memo.get(2), Some(102));
+        memo.assert_lru_invariant();
+    }
+
+    #[test]
+    fn lru_order_map_invariant_under_eviction_pressure() {
+        // hammer one cap-2 shard with interleaved inserts, re-inserts and
+        // gets; the live-pair/map invariant must hold at every step and
+        // same-key traffic must never count as an eviction
+        let memo: ShardedMemo<u64> = ShardedMemo::new(32);
+        for round in 0..50u64 {
+            memo.insert(round % 5, round);
+            memo.get(round % 3);
+            memo.insert(round % 2, round + 1000);
+            memo.assert_lru_invariant();
+        }
+        assert_eq!(memo.len(), 2);
+        // key 1 or 0 was re-touched on every round; both kinds of touch
+        // must have kept the hottest keys resident at the end
+        assert!(memo.get(0).is_some() || memo.get(1).is_some());
+        let s = memo.stats();
+        assert_eq!(s.lookups, s.hits + s.misses);
+    }
+
+    #[test]
+    fn lru_same_key_traffic_never_evicts() {
+        let memo: ShardedMemo<u64> = ShardedMemo::new(2);
+        for round in 0..100u64 {
+            memo.insert(7, round);
+            memo.get(7);
+        }
+        let s = memo.stats();
+        assert_eq!(s.evictions, 0, "one resident key can never evict");
+        assert_eq!(memo.len(), 1);
+        assert_eq!(memo.get(7), Some(99));
+        memo.assert_lru_invariant();
     }
 
     #[test]

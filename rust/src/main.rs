@@ -11,9 +11,10 @@
 
 use anyhow::{bail, Context, Result};
 use qimeng_mtmc::dataset::{generate, save_trajectories, DatasetCfg};
+use qimeng_mtmc::env::{flush_edge_memo, warm_start_edge_memo, EdgeMemo};
 use qimeng_mtmc::eval::{
     evaluate, roster_sweep, table3_methods, table4_methods, table6_variants,
-    BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind, Method,
+    BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind, Method, SuiteResult,
 };
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::kir::{lower_naive, render, TargetLang};
@@ -57,17 +58,23 @@ COMMANDS:
   specs                      simulated GPU specs (paper Table 2)
   tasks [--suite kb1|kb2|kb3|tbg|tbt|corpus]
   dataset --out data/trees.bin [--tasks 200] [--per-task 64] [--seed N]
+          [--memo-store F]
   train [--iters 60] [--tasks 40] [--out data/policy.bin] [--gpu A100]
+        [--memo-store F]
   optimize --task kb2_000_gemm_bias_act [--gpu A100] [--show-code]
+           [--memo-store F]
   eval --suite kb2 [--gpu A100] [--method mtmc|greedy|<profile>] [--limit N]
-       [--threads N] [--jsonl out.jsonl]
+       [--threads N] [--jsonl out.jsonl] [--memo-store F]
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              (runs through the BatchRunner; pricing,
                               program analysis and transitions go through
                               the sweep's CostCache / AnalysisCache /
                               EdgeMemo unless the matching --no-* flag is
-                              given; hit/miss/eviction stats on stderr)
-  table 3|4|6 [--limit N] [--threads N] [--jsonl F]
+                              given; hit/miss/eviction stats on stderr;
+                              --memo-store persists the EdgeMemo across
+                              runs: warm-started at startup, flushed at
+                              exit, corrupt/missing files = cold start)
+  table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--memo-store F]
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              batched table sweep
   table 5|7                  pointer to the bench binaries
@@ -145,6 +152,13 @@ fn cmd_tasks(args: &Args) -> Result<()> {
 fn cmd_dataset(args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "data/trees.bin"));
     let n_tasks = args.usize_or("tasks", 200);
+    // --memo-store: persist one shared EdgeMemo across generation runs
+    // (the default, without the flag, stays per-tree tables)
+    let shared = memo_store_path(args).map(|p| {
+        let m = std::sync::Arc::new(EdgeMemo::new());
+        warm_start_edge_memo(&m, &p);
+        (m, p)
+    });
     let cfg = DatasetCfg {
         per_task: args.usize_or("per-task", 64),
         seed: args.u64_or("seed", 0xDA7A),
@@ -152,6 +166,7 @@ fn cmd_dataset(args: &Args) -> Result<()> {
             "threads",
             qimeng_mtmc::util::parallel::default_threads(),
         ),
+        shared_edges: shared.as_ref().map(|(m, _)| std::sync::Arc::clone(m)),
         ..Default::default()
     };
     let tasks = training_corpus(n_tasks);
@@ -162,6 +177,10 @@ fn cmd_dataset(args: &Args) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     let (trajs, stats) = generate(&tasks, &spec, ProfileId::GeminiFlash25, &cfg);
+    if let Some((m, p)) = &shared {
+        print_memo_stats("edge-memo", &m.stats());
+        flush_edge_memo(m, p);
+    }
     save_trajectories(&trajs, &out)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
@@ -186,14 +205,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         .context("load artifacts (run `make artifacts`)")?;
     let tasks = training_corpus(args.usize_or("tasks", 40));
     let spec = gpu(args)?;
+    // --memo-store: persist one shared EdgeMemo across training runs (the
+    // default, without the flag, stays per-tree tables)
+    let shared = memo_store_path(args).map(|p| {
+        let m = std::sync::Arc::new(EdgeMemo::new());
+        warm_start_edge_memo(&m, &p);
+        (m, p)
+    });
     let cfg = PpoCfg {
         iterations: args.usize_or("iters", 60),
         seed: args.u64_or("seed", 0x9902),
+        shared_edges: shared.as_ref().map(|(m, _)| std::sync::Arc::clone(m)),
         ..Default::default()
     };
     let params = ParamSet::init(&rt.meta.raw, cfg.seed ^ 0x11)?;
     let mut state = TrainState::new(params);
     let logs = train_ppo(&rt, &mut state, &tasks, &spec, &cfg)?;
+    if let Some((m, p)) = &shared {
+        print_memo_stats("edge-memo", &m.stats());
+        flush_edge_memo(m, p);
+    }
     let default_out = paths::default_policy_path();
     let out = std::path::PathBuf::from(
         args.get_or("out", default_out.to_str().unwrap()),
@@ -235,6 +266,10 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let cost_cache = qimeng_mtmc::gpusim::CostCache::new();
     let analysis_cache = qimeng_mtmc::transform::AnalysisCache::new();
     let edge_memo = std::sync::Arc::new(qimeng_mtmc::env::EdgeMemo::new());
+    let store = memo_store_path(args);
+    if let Some(p) = &store {
+        warm_start_edge_memo(&edge_memo, p);
+    }
     let caches = qimeng_mtmc::env::EnvCaches {
         cost: (!args.has("no-cost-cache")).then_some(&cost_cache),
         analysis: (!args.has("no-analysis-cache")).then_some(&analysis_cache),
@@ -281,6 +316,9 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     print_cache_stats(&cost_cache);
     print_memo_stats("analysis-cache", &analysis_cache.stats());
     print_memo_stats("edge-memo", &edge_memo.stats());
+    if let Some(p) = &store {
+        flush_edge_memo(&edge_memo, p);
+    }
     if args.has("show-code") {
         let lang = if args.get_or("lang", "triton") == "cuda" {
             TargetLang::Cuda
@@ -310,6 +348,32 @@ fn batch_runner(args: &Args) -> Result<BatchRunner> {
     })
 }
 
+/// The `--memo-store <path>` persistence tier, if requested. Persisting
+/// only makes sense when the memo is in use, so `--no-edge-memo` disables
+/// the store along with the memo itself.
+fn memo_store_path(args: &Args) -> Option<std::path::PathBuf> {
+    if args.has("no-edge-memo") {
+        return None;
+    }
+    args.get("memo-store").map(std::path::PathBuf::from)
+}
+
+/// Run a sweep with the optional `--memo-store` tier wrapped around it:
+/// warm-start the runner's shared EdgeMemo from disk before the jobs,
+/// flush it back after. Missing/corrupt stores degrade to a cold memo.
+fn run_with_store(args: &Args, runner: &BatchRunner, jobs: &[BatchJob])
+                  -> Vec<SuiteResult> {
+    let store = memo_store_path(args);
+    if let Some(p) = &store {
+        runner.warm_edge_store(p);
+    }
+    let results = runner.run(jobs);
+    if let Some(p) = &store {
+        runner.flush_edge_store(p);
+    }
+    results
+}
+
 /// Honor the `--no-*-cache` escape hatches on every job of a sweep.
 fn apply_cache_flag(args: &Args, jobs: &mut [BatchJob]) {
     for j in jobs.iter_mut() {
@@ -326,10 +390,17 @@ fn apply_cache_flag(args: &Args, jobs: &mut [BatchJob]) {
 }
 
 /// One memo's hit/miss/eviction summary line (silent when untouched).
+/// Memos warm-started from a `--memo-store` file also report how many
+/// hits were served by disk-loaded entries.
 fn print_memo_stats(name: &str, s: &qimeng_mtmc::gpusim::MemoStats) {
     if s.lookups > 0 {
+        let disk = if s.disk_hits > 0 {
+            format!(", {} disk hits", s.disk_hits)
+        } else {
+            String::new()
+        };
         eprintln!(
-            "{name}: {} hits / {} misses ({:.1}% hit rate, {} evictions)",
+            "{name}: {} hits / {} misses ({:.1}% hit rate, {} evictions{disk})",
             s.hits, s.misses, 100.0 * s.hit_rate(), s.evictions
         );
     }
@@ -393,11 +464,25 @@ fn cmd_eval(args: &Args) -> Result<()> {
             "(trained params + artifacts present: sequential evaluate() \
              path — learned policy if the runtime loads, greedy otherwise)"
         );
-        evaluate(&method, &tasks, &spec, &cfg)
+        let store = memo_store_path(args);
+        let shared = std::sync::Arc::new(EdgeMemo::new());
+        if let Some(p) = &store {
+            warm_start_edge_memo(&shared, p);
+        }
+        let cfg = EvalCfg {
+            shared_edges: Some(std::sync::Arc::clone(&shared)),
+            ..cfg
+        };
+        let r = evaluate(&method, &tasks, &spec, &cfg);
+        print_memo_stats("edge-memo", &shared.stats());
+        if let Some(p) = &store {
+            flush_edge_memo(&shared, p);
+        }
+        r
     } else {
         let runner = batch_runner(args)?;
-        let results =
-            runner.run(&[BatchJob { method, gpu: spec, tasks: tasks.into(), cfg }]);
+        let jobs = [BatchJob { method, gpu: spec, tasks: tasks.into(), cfg }];
+        let results = run_with_store(args, &runner, &jobs);
         print_runner_stats(&runner);
         anyhow::ensure!(
             !runner.sink_failed(),
@@ -457,7 +542,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 .collect();
             let mut jobs = roster_sweep(&methods, &blocks);
             apply_cache_flag(args, &mut jobs);
-            let results = runner.run(&jobs);
+            let results = run_with_store(args, &runner, &jobs);
             for (li, level) in (1..=3usize).enumerate() {
                 let mut t = Table::new(
                     &format!(
@@ -498,7 +583,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 .collect();
             let mut jobs = roster_sweep(&methods, &blocks);
             apply_cache_flag(args, &mut jobs);
-            let results = runner.run(&jobs);
+            let results = run_with_store(args, &runner, &jobs);
             for (si, (name, _)) in suites.iter().enumerate() {
                 let mut t = Table::new(
                     &format!(
@@ -533,7 +618,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
             }
             apply_cache_flag(args, &mut jobs);
-            let results = runner.run(&jobs);
+            let results = run_with_store(args, &runner, &jobs);
             let mut t = Table::new(
                 &format!(
                     "Table 6 — multi-step vs single-pass on A100 \

@@ -2,7 +2,7 @@
 //! artifact → repeat.
 
 use super::gae::{compute_gae, normalize};
-use crate::env::{EnvCaches, EnvConfig, TreeEnv};
+use crate::env::{EdgeMemo, EnvCaches, EnvConfig, TreeEnv};
 use crate::gpusim::{CostCache, GpuSpec};
 use crate::microcode::{LlmProfile, ProfileId};
 use crate::runtime::{PjrtRuntime, TrainState};
@@ -30,6 +30,12 @@ pub struct PpoCfg {
     /// artifact (§Perf L3 optimization: amortizes PJRT dispatch, ~0.25 ms
     /// per call, across `eval_batch` steps).
     pub batched_rollouts: bool,
+    /// Share one [`EdgeMemo`] across every task tree instead of the
+    /// default per-tree tables — the `--memo-store` persistence hook: the
+    /// caller warm-starts it from disk before training and flushes it
+    /// after, so replayed edges skip micro-coding across runs. Replay is
+    /// bit-identical either way.
+    pub shared_edges: Option<std::sync::Arc<EdgeMemo>>,
 }
 
 impl Default for PpoCfg {
@@ -44,6 +50,7 @@ impl Default for PpoCfg {
             profile: ProfileId::GeminiFlash25,
             log_every: 5,
             batched_rollouts: true,
+            shared_edges: None,
         }
     }
 }
@@ -120,7 +127,8 @@ pub fn train_ppo(
                 EnvCaches {
                     cost: Some(&cost_cache),
                     analysis: Some(&analysis_cache),
-                    edges: None, // each tree owns its replay table
+                    // None: each tree owns its replay table
+                    edges: cfg.shared_edges.clone(),
                 },
             )
         })

@@ -61,8 +61,16 @@ impl AnalysisCache {
     /// [`graph_fingerprint`].
     pub fn regions(&self, ctx: u64, p: &Program, g: &Graph)
                    -> Arc<Vec<Region>> {
-        self.regions_keyed(combine(ctx, program_fingerprint(p), REGIONS_SALT),
-                           p, g)
+        self.regions_for_fp(ctx, program_fingerprint(p), p, g)
+    }
+
+    /// [`Self::regions`] with the [`program_fingerprint`] precomputed by
+    /// the caller — the env caches it on its state
+    /// ([`crate::env::EnvState::program_fp`]), so the mask and region
+    /// lookups of one step share a single fingerprint hash.
+    pub fn regions_for_fp(&self, ctx: u64, pfp: u64, p: &Program, g: &Graph)
+                          -> Arc<Vec<Region>> {
+        self.regions_keyed(combine(ctx, pfp, REGIONS_SALT), p, g)
     }
 
     /// Region lookup with the key precomputed — lets [`Self::action_mask`]
@@ -84,7 +92,15 @@ impl AnalysisCache {
     pub fn action_mask(&self, ctx: u64, p: &Program, g: &Graph,
                        shapes: &[Vec<usize>], spec: &GpuSpec)
                        -> Arc<Vec<bool>> {
-        let pfp = program_fingerprint(p);
+        self.action_mask_for_fp(ctx, program_fingerprint(p), p, g, shapes,
+                                spec)
+    }
+
+    /// [`Self::action_mask`] with the [`program_fingerprint`] precomputed
+    /// by the caller (see [`Self::regions_for_fp`]).
+    pub fn action_mask_for_fp(&self, ctx: u64, pfp: u64, p: &Program,
+                              g: &Graph, shapes: &[Vec<usize>],
+                              spec: &GpuSpec) -> Arc<Vec<bool>> {
         let key = combine(ctx, pfp, spec_tag(spec));
         if let Some(hit) = self.masks.get(key) {
             return hit;
@@ -153,11 +169,34 @@ impl<'a> Analyzer<'a> {
         }
     }
 
+    /// [`Self::regions`] with the program fingerprint precomputed by the
+    /// caller; the uncached path ignores it (direct analysis needs no
+    /// key). Must be the [`program_fingerprint`] of `p`, or cached and
+    /// uncached paths diverge.
+    pub fn regions_fp(&self, pfp: u64, p: &Program, g: &Graph)
+                      -> Arc<Vec<Region>> {
+        match self.cache {
+            Some(c) => c.regions_for_fp(self.ctx, pfp, p, g),
+            None => Arc::new(analyze_regions(p, g)),
+        }
+    }
+
     /// Validity mask of the current program (memoized when caching).
     pub fn mask(&self, p: &Program, g: &Graph, shapes: &[Vec<usize>],
                 spec: &GpuSpec) -> Arc<Vec<bool>> {
         match self.cache {
             Some(c) => c.action_mask(self.ctx, p, g, shapes, spec),
+            None => Arc::new(action_mask(p, g, shapes, spec)),
+        }
+    }
+
+    /// [`Self::mask`] with the program fingerprint precomputed by the
+    /// caller (see [`Self::regions_fp`]).
+    pub fn mask_fp(&self, pfp: u64, p: &Program, g: &Graph,
+                   shapes: &[Vec<usize>], spec: &GpuSpec) -> Arc<Vec<bool>> {
+        match self.cache {
+            Some(c) => c.action_mask_for_fp(self.ctx, pfp, p, g, shapes,
+                                            spec),
             None => Arc::new(action_mask(p, g, shapes, spec)),
         }
     }
@@ -210,6 +249,25 @@ mod tests {
         assert_eq!(*az.mask(&p, &g, &shapes, &spec),
                    action_mask(&p, &g, &shapes, &spec));
         assert_eq!(*az.regions(&p, &g), analyze_regions(&p, &g));
+    }
+
+    #[test]
+    fn fp_variants_share_keys_with_plain_lookups() {
+        let (g, shapes) = demo();
+        let spec = GpuSpec::a100();
+        let p = lower_naive(&g);
+        let cache = AnalysisCache::new();
+        let az = Analyzer::new(Some(&cache), &g, &shapes);
+        let pfp = program_fingerprint(&p);
+        assert_eq!(*az.mask_fp(pfp, &p, &g, &shapes, &spec),
+                   *az.mask(&p, &g, &shapes, &spec));
+        assert_eq!(*az.regions_fp(pfp, &p, &g), *az.regions(&p, &g));
+        assert!(cache.stats().hits > 0,
+                "fp and plain variants must share memo keys");
+        let plain = Analyzer::new(None, &g, &shapes);
+        assert_eq!(*plain.mask_fp(pfp, &p, &g, &shapes, &spec),
+                   *plain.mask(&p, &g, &shapes, &spec));
+        assert_eq!(*plain.regions_fp(pfp, &p, &g), *plain.regions(&p, &g));
     }
 
     #[test]

@@ -287,6 +287,7 @@ fn edge_memo_stats_sane_and_evictions_monotone() {
         program: None,
         signal: StepSignal::Rejected,
         speedup: 1.0,
+        from_disk: false,
     };
     let mut last_evictions = 0;
     for k in 0..10u64 {

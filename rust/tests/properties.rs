@@ -7,7 +7,8 @@ use std::sync::Arc;
 
 use qimeng_mtmc::dataset::{load_trajectories, save_trajectories, TrajStep,
                            Trajectory};
-use qimeng_mtmc::env::{EdgeMemo, EnvCaches, EnvConfig, OptimEnv};
+use qimeng_mtmc::env::{load_edge_memo, save_edge_memo, warm_start_edge_memo,
+                       EdgeMemo, EnvCaches, EnvConfig, OptimEnv};
 use qimeng_mtmc::gpusim::{graph_fingerprint, kernel_time_us,
                           program_time_us, CostCache, GpuSpec};
 use qimeng_mtmc::graph::infer_shapes;
@@ -512,6 +513,71 @@ fn prop_edge_memo_episode_bitwise_identical() {
                 "eviction pressure changed the episode outcome"
             );
         }
+        Ok(())
+    });
+}
+
+/// Persistence differential (the `--memo-store` tier): replaying an
+/// episode from a memo that round-tripped through disk (save, then load
+/// into a fresh memo) must be bit-identical to the cold episode, the
+/// loaded memo must account for its disk state, and a corrupted store
+/// must degrade to a cold start without panicking.
+#[test]
+fn prop_edge_memo_persistence_roundtrip() {
+    let dir = std::env::temp_dir().join("qimeng_prop_memo_store");
+    std::fs::create_dir_all(&dir).unwrap();
+    let case_no = std::sync::atomic::AtomicUsize::new(0);
+    check(3333, 24, gen_episode_case, |case: &EpisodeCase| {
+        let task = case.recipe.task();
+        let baseline = run_episode(&task, case, EnvCaches::none());
+        // warm a memo with one episode, then persist it
+        let warm = Arc::new(EdgeMemo::new());
+        run_episode(&task, case, EnvCaches {
+            edges: Some(Arc::clone(&warm)),
+            ..EnvCaches::none()
+        });
+        let path = dir.join(format!(
+            "roundtrip_{}.bin",
+            case_no.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let saved = save_edge_memo(&warm, &path).map_err(|e| e.to_string())?;
+        prop_assert!(saved == warm.len(), "save must cover every entry");
+        // load into a fresh memo and replay: bit-identical episode
+        let restored = Arc::new(EdgeMemo::new());
+        let loaded =
+            load_edge_memo(&restored, &path).map_err(|e| e.to_string())?;
+        prop_assert!(loaded == saved,
+                     "load restored {loaded} of {saved} entries");
+        prop_assert!(restored.disk_loaded() == loaded,
+                     "disk_loaded must count the warm-started entries");
+        let got = run_episode(&task, case, EnvCaches {
+            edges: Some(Arc::clone(&restored)),
+            ..EnvCaches::none()
+        });
+        prop_assert!(
+            got == baseline,
+            "disk-replayed episode diverged from cold episode:\n  got \
+             {:?}\n  want {:?}",
+            got.signals, baseline.signals
+        );
+        // Stop steps bypass the memo, so only a real transition
+        // guarantees the replay was served from disk entries
+        let has_transition =
+            baseline.signals.iter().any(|s| !s.starts_with("Stop"));
+        prop_assert!(
+            !has_transition || restored.stats().disk_hits > 0,
+            "replay from a loaded store must report disk hits"
+        );
+        // corrupt the store (drop the last byte): cold start, no panic
+        let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        std::fs::write(&path, &bytes[..bytes.len() - 1])
+            .map_err(|e| e.to_string())?;
+        let fresh = Arc::new(EdgeMemo::new());
+        let n = warm_start_edge_memo(&fresh, &path);
+        prop_assert!(
+            n == 0 && fresh.is_empty() && fresh.disk_loaded() == 0,
+            "corrupted store must degrade to a cold memo"
+        );
         Ok(())
     });
 }
