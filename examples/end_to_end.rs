@@ -20,6 +20,7 @@
 
 use anyhow::{Context, Result};
 use qimeng_mtmc::dataset::{generate, DatasetCfg};
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::microcode::ProfileId;
@@ -38,12 +39,16 @@ fn main() -> Result<()> {
     let n_eval = envnum("E2E_EVAL", 20);
     let spec = GpuSpec::a100();
 
+    // one session for the whole driver: dataset generation and PPO
+    // rollouts pool transitions in the same memo trio
+    let session = Session::default();
+
     println!("== [1/3] offline dataset over the training corpus ==");
     let corpus = training_corpus(n_tasks);
     let ds_cfg = DatasetCfg { per_task: 16, ..Default::default() };
     let t0 = std::time::Instant::now();
     let (_trajs, stats) =
-        generate(&corpus, &spec, ProfileId::GeminiFlash25, &ds_cfg);
+        generate(&corpus, &spec, ProfileId::GeminiFlash25, &ds_cfg, &session);
     println!(
         "{} trajectories / {} steps in {:.1}s ({:.0} steps/s); \
          correct-step rate {:.0}%, mean final speedup {:.2}x\n",
@@ -66,7 +71,7 @@ fn main() -> Result<()> {
     let mut state = TrainState::new(params);
     let cfg = PpoCfg { iterations: iters, ..Default::default() };
     let t0 = std::time::Instant::now();
-    let logs = train_ppo(&rt, &mut state, &corpus, &spec, &cfg)?;
+    let logs = train_ppo(&rt, &mut state, &corpus, &spec, &cfg, &session)?;
     println!("\nreward curve (iteration, mean episode reward, speedup):");
     for l in logs.iter().step_by((logs.len() / 10).max(1)) {
         println!("  iter {:>3}  reward {:+.3}  final speedup {:.2}x  \

@@ -3,14 +3,15 @@
 //! Runs a table3-shaped slice — the pricing-heavy methods (greedy
 //! lookahead MTMC and the greedy-plan ablation) plus one baseline over
 //! KernelBench levels 1-3 — twice through the [`BatchRunner`]: once with
-//! pricing routed through the per-sweep `CostCache` and once priced cold
-//! (`use_cost_cache = false`). Per-task outcomes must be byte-identical;
-//! only wall-clock may differ. Prints both timings, the speedup, and the
-//! cache hit rate.
+//! pricing routed through the session's `CostCache` and once priced cold
+//! (a session built with `cost_cache(false)`). Per-task outcomes must be
+//! byte-identical; only wall-clock may differ. Prints both timings, the
+//! speedup, and the cache hit rate.
 //!
 //! Env knobs: QIMENG_LIMIT (tasks per level, default 8), QIMENG_THREADS,
 //! QIMENG_REPS (timed repetitions per mode, default 3; best time wins).
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{
     roster_sweep, BatchCfg, BatchRunner, MacroKind, Method, SuiteResult,
 };
@@ -21,15 +22,14 @@ use qimeng_mtmc::tasks::{kernelbench_level, Task};
 fn sweep_results(use_cache: bool, threads: usize,
                  blocks: &[(GpuSpec, Vec<Task>)], methods: &[Method])
                  -> (Vec<SuiteResult>, f64, (usize, usize)) {
-    let runner = BatchRunner::new(BatchCfg { threads, sink: None })
+    let session = Session::builder().cost_cache(use_cache).build();
+    let runner = BatchRunner::new(BatchCfg { threads, sink: None }, &session)
         .expect("batch runner");
-    let mut jobs = roster_sweep(methods, blocks);
-    for j in &mut jobs {
-        j.cfg.use_cost_cache = use_cache;
-    }
+    let jobs = roster_sweep(methods, blocks);
     let t0 = std::time::Instant::now();
     let results = runner.run(&jobs);
-    (results, t0.elapsed().as_secs_f64(), runner.cache().stats())
+    let stats = session.cost().map_or((0, 0), |c| c.stats());
+    (results, t0.elapsed().as_secs_f64(), stats)
 }
 
 fn main() {

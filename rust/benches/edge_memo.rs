@@ -5,12 +5,13 @@
 //! real) plus a baseline over KernelBench levels 1-3 — through the
 //! [`BatchRunner`] in two regimes:
 //!
-//! - **cold**: edge memo disabled (`use_edge_memo = false`), re-timed on
-//!   an already-run runner so the cost/analysis caches are warm — the
+//! - **cold**: a session built with `edge_memo(false)`, re-timed on an
+//!   already-run runner so the cost/analysis caches are warm — the
 //!   delta isolates the transition memo itself;
-//! - **warm**: edge memo enabled, second sweep over the same runner — every
-//!   episode transition replays from the shared transposition table
-//!   instead of re-running micro-coding + verification + pricing.
+//! - **warm**: a default session, second sweep over the same runner —
+//!   every episode transition replays from the session-shared
+//!   transposition table instead of re-running micro-coding +
+//!   verification + pricing.
 //!
 //! Per-task outcomes are asserted byte-identical across *all* runs (both
 //! regimes, both repetitions), and the warm shared-memo sweep must be
@@ -20,21 +21,13 @@
 //! Env knobs: QIMENG_LIMIT (tasks per level, default 8), QIMENG_THREADS,
 //! QIMENG_REPS (timed repetitions per mode, default 3; best time wins).
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{
     roster_sweep, BatchCfg, BatchRunner, MacroKind, Method, SuiteResult,
 };
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::microcode::ProfileId;
 use qimeng_mtmc::tasks::{kernelbench_level, Task};
-
-fn jobs(use_edge_memo: bool, blocks: &[(GpuSpec, Vec<Task>)],
-        methods: &[Method]) -> Vec<qimeng_mtmc::eval::BatchJob> {
-    let mut jobs = roster_sweep(methods, blocks);
-    for j in &mut jobs {
-        j.cfg.use_edge_memo = use_edge_memo;
-    }
-    jobs
-}
 
 fn main() {
     let limit: usize = std::env::var("QIMENG_LIMIT")
@@ -83,45 +76,49 @@ fn main() {
          {threads} threads, best of {reps} =="
     );
 
-    // one runner per regime; in both, sweep 0 warms the cost/analysis
-    // caches so the timed sweeps differ only in transition replay
-    let cold_runner = BatchRunner::new(BatchCfg { threads, sink: None })
-        .expect("batch runner");
-    let warm_runner = BatchRunner::new(BatchCfg { threads, sink: None })
-        .expect("batch runner");
-    let cold_jobs = jobs(false, &blocks, &methods);
-    let warm_jobs = jobs(true, &blocks, &methods);
+    // one session + runner per regime; in both, sweep 0 warms the
+    // cost/analysis caches so the timed sweeps differ only in
+    // transition replay
+    let cold_session = Session::builder().edge_memo(false).build();
+    let warm_session = Session::default();
+    let cold_runner =
+        BatchRunner::new(BatchCfg { threads, sink: None }, &cold_session)
+            .expect("batch runner");
+    let warm_runner =
+        BatchRunner::new(BatchCfg { threads, sink: None }, &warm_session)
+            .expect("batch runner");
+    let sweep_jobs = roster_sweep(&methods, &blocks);
     let mut reference: Option<Vec<SuiteResult>> = None;
     let mut check = |results: Vec<SuiteResult>| match &reference {
         None => reference = Some(results),
         Some(base) => assert_outcomes_identical(base, &results),
     };
-    check(cold_runner.run(&cold_jobs)); // warm the cost/analysis caches
-    check(warm_runner.run(&warm_jobs)); // populate the edge memo
+    check(cold_runner.run(&sweep_jobs)); // warm the cost/analysis caches
+    check(warm_runner.run(&sweep_jobs)); // populate the edge memo
 
     let mut cold_best = f64::INFINITY;
     let mut warm_best = f64::INFINITY;
     for rep in 0..reps {
         let t0 = std::time::Instant::now();
-        check(cold_runner.run(&cold_jobs));
+        check(cold_runner.run(&sweep_jobs));
         let cold = t0.elapsed().as_secs_f64();
         cold_best = cold_best.min(cold);
         let t0 = std::time::Instant::now();
-        check(warm_runner.run(&warm_jobs));
+        check(warm_runner.run(&sweep_jobs));
         let warm = t0.elapsed().as_secs_f64();
         warm_best = warm_best.min(warm);
         println!("rep {rep}: cold {cold:.3}s, warm shared-memo {warm:.3}s");
     }
-    let s = warm_runner.edge_memo().stats();
+    let s = warm_session.edges().expect("warm session has a memo").stats();
     println!(
         "cold {cold_best:.3}s, warm {warm_best:.3}s -> {:.2}x faster; \
          edge-memo {} hits / {} misses ({:.1}% hit rate, {} evictions)",
         cold_best / warm_best,
         s.hits, s.misses, 100.0 * s.hit_rate(), s.evictions
     );
-    assert_eq!(
-        cold_runner.edge_memo().stats().lookups, 0,
-        "cold regime must never touch the transition memo"
+    assert!(
+        cold_session.edges().is_none(),
+        "cold regime must not even build a transition memo"
     );
     assert!(s.hits > 0, "warm regime must replay transitions");
     assert!(

@@ -4,6 +4,7 @@
 //! LLM, (c) domain-finetuned LLM, (d) MTMC. The LLM paradigms run as one
 //! [`BatchRunner`] sweep.
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{BatchCfg, BatchJob, BatchRunner, MacroKind, Method};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::microcode::ProfileId;
@@ -13,7 +14,9 @@ use qimeng_mtmc::tasks::kernelbench_level;
 fn main() {
     let t0 = std::time::Instant::now();
     let spec = GpuSpec::a100();
-    let runner = BatchRunner::new(BatchCfg::default()).expect("batch runner");
+    let session = Session::default();
+    let runner = BatchRunner::new(BatchCfg::default(), &session)
+        .expect("batch runner");
     let paradigms: Vec<(&str, Option<Method>)> = vec![
         ("(a) expert libraries (Eager)", None),
         ("(b) general-purpose LLM (Claude-4)",

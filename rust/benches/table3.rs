@@ -10,6 +10,7 @@
 //! level), QIMENG_THREADS=N, QIMENG_JSONL=path (stream per-task records,
 //! enriched with cached eager baselines).
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{roster_sweep, table3_methods, BatchCfg, BatchRunner};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::paths;
@@ -36,7 +37,8 @@ fn main() {
     if let Ok(path) = std::env::var("QIMENG_JSONL") {
         batch_cfg.sink = Some(std::path::PathBuf::from(path));
     }
-    let runner = BatchRunner::new(batch_cfg).expect("batch runner");
+    let session = Session::default();
+    let runner = BatchRunner::new(batch_cfg, &session).expect("batch runner");
     let params = Some(paths::default_policy_path());
     let methods = table3_methods(params);
 
@@ -80,7 +82,8 @@ fn main() {
         t0.elapsed().as_secs_f64(),
         jobs.iter().map(|j| j.tasks.len()).sum::<usize>()
     );
-    let (hits, misses) = runner.cache().stats();
+    let (hits, misses) =
+        session.cost().map_or((0, 0), |c| c.stats());
     if hits + misses > 0 {
         println!("cost-cache: {hits} hits / {misses} misses");
     }

@@ -4,6 +4,7 @@
 //!
 //! Env knobs: QIMENG_LIMIT, QIMENG_THREADS.
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{roster_sweep, table4_methods, BatchCfg, BatchRunner};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::paths;
@@ -23,7 +24,8 @@ fn main() {
     if let Ok(path) = std::env::var("QIMENG_JSONL") {
         batch_cfg.sink = Some(std::path::PathBuf::from(path));
     }
-    let runner = BatchRunner::new(batch_cfg).expect("batch runner");
+    let session = Session::default();
+    let runner = BatchRunner::new(batch_cfg, &session).expect("batch runner");
     let spec = GpuSpec::a100();
     let methods = table4_methods(Some(paths::default_policy_path()));
 
@@ -62,7 +64,8 @@ fn main() {
          KernelLLM collapses to 1-4% exec acc on both."
     );
     println!("table4 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
-    let (hits, misses) = runner.cache().stats();
+    let (hits, misses) =
+        session.cost().map_or((0, 0), |c| c.stats());
     if hits + misses > 0 {
         println!("cost-cache: {hits} hits / {misses} misses");
     }

@@ -3,6 +3,7 @@
 //! ("w/o Hier") for Gemini-2.5-Flash and DeepSeek-V3 micro-coders.
 //! The variant × level sweep runs through one [`BatchRunner`] queue.
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{table6_variants, BatchCfg, BatchJob, BatchRunner};
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::report::{append_report, Table};
@@ -22,7 +23,8 @@ fn main() {
     if let Ok(path) = std::env::var("QIMENG_JSONL") {
         batch_cfg.sink = Some(std::path::PathBuf::from(path));
     }
-    let runner = BatchRunner::new(batch_cfg).expect("batch runner");
+    let session = Session::default();
+    let runner = BatchRunner::new(batch_cfg, &session).expect("batch runner");
 
     let variants = table6_variants();
 

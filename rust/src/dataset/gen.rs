@@ -2,15 +2,16 @@
 //! parallel across tasks.
 
 use super::store::{TrajStep, Trajectory};
-use crate::env::{EdgeMemo, EnvCaches, EnvConfig, StepSignal, TreeEnv};
-use crate::gpusim::{CostCache, GpuSpec};
+use crate::engine::Session;
+use crate::env::{EnvConfig, StepSignal, TreeEnv};
+use crate::gpusim::GpuSpec;
 use crate::microcode::{LlmProfile, ProfileId};
 use crate::policy::{HeuristicPolicy, Policy, RandomPolicy};
 use crate::tasks::Task;
-use crate::transform::AnalysisCache;
 use crate::util::{parallel::par_map, Rng};
 
-/// Generation configuration.
+/// Generation configuration. Memo policy and `--memo-store` persistence
+/// live on the [`Session`] handed to [`generate`], not here.
 #[derive(Clone, Debug)]
 pub struct DatasetCfg {
     /// Episodes per task.
@@ -21,12 +22,6 @@ pub struct DatasetCfg {
     /// Fraction of episodes rolled out by the heuristic ladder (rest are
     /// random exploration).
     pub heuristic_frac: f64,
-    /// Share one [`EdgeMemo`] across every task tree instead of the
-    /// default per-tree tables — the `--memo-store` persistence hook: the
-    /// caller warm-starts it from disk before generation and flushes it
-    /// after, so replayed edges skip micro-coding across runs. Replay is
-    /// bit-identical either way.
-    pub shared_edges: Option<std::sync::Arc<EdgeMemo>>,
 }
 
 impl Default for DatasetCfg {
@@ -37,7 +32,6 @@ impl Default for DatasetCfg {
             seed: 0xDA7A,
             threads: crate::util::parallel::default_threads(),
             heuristic_frac: 0.3,
-            shared_edges: None,
         }
     }
 }
@@ -84,31 +78,26 @@ pub fn signal_code(s: &StepSignal) -> u8 {
 }
 
 /// Generate trajectories over `tasks` (normally the training corpus) on
-/// `spec` with the given micro-coding profile.
+/// `spec` with the given micro-coding profile. The [`Session`]'s
+/// thread-safe memo trio is shared across every worker: masks/pricing run
+/// through one analysis + cost cache, and transitions pool in one edge
+/// memo — warm-startable across runs via `--memo-store` (bit-identical
+/// either way; determinism is guarded by rust/tests/pipeline.rs).
 pub fn generate(tasks: &[Task], spec: &GpuSpec, profile_id: ProfileId,
-                cfg: &DatasetCfg) -> (Vec<Trajectory>, DatasetStats) {
-    // thread-safe memos shared across every worker: masks/pricing for the
-    // whole corpus run through one analysis + cost cache (bit-identical
-    // either way; determinism is guarded by rust/tests/pipeline.rs)
-    let analysis_cache = AnalysisCache::new();
-    let cost_cache = CostCache::new();
+                cfg: &DatasetCfg, session: &Session)
+                -> (Vec<Trajectory>, DatasetStats) {
     let per_task_results = par_map(tasks, cfg.threads, |ti, task| {
         let mut out = Vec::with_capacity(cfg.per_task);
         let mut master = Rng::new(cfg.seed ^ (ti as u64) << 20);
         // one tree (one base seed) per task: episodes share the cache
         let tree_seed = master.next_u64();
-        let mut env = TreeEnv::with_caches(
+        let mut env = TreeEnv::with_session(
             task,
             spec.clone(),
             LlmProfile::get(profile_id),
             cfg.env.clone(),
             tree_seed,
-            EnvCaches {
-                cost: Some(&cost_cache),
-                analysis: Some(&analysis_cache),
-                // None: each task's tree owns its replay table
-                edges: cfg.shared_edges.clone(),
-            },
+            session,
         );
         for ep in 0..cfg.per_task {
             env.reset();
@@ -158,7 +147,8 @@ mod tests {
         let tasks = crate::tasks::training_corpus(4);
         let cfg = DatasetCfg { per_task: 5, threads: 2, ..Default::default() };
         let (trajs, st) = generate(&tasks, &GpuSpec::a100(),
-                                   ProfileId::GeminiFlash25, &cfg);
+                                   ProfileId::GeminiFlash25, &cfg,
+                                   &Session::default());
         assert_eq!(trajs.len(), 20);
         assert_eq!(st.trajectories, 20);
         assert!(st.steps >= 20, "every episode has at least the stop step");
@@ -169,10 +159,13 @@ mod tests {
     fn generation_deterministic() {
         let tasks = crate::tasks::training_corpus(2);
         let cfg = DatasetCfg { per_task: 3, threads: 1, ..Default::default() };
+        // distinct sessions: a warm memo must not change trajectories
         let (a, _) = generate(&tasks, &GpuSpec::v100(),
-                              ProfileId::GeminiFlash25, &cfg);
+                              ProfileId::GeminiFlash25, &cfg,
+                              &Session::default());
         let (b, _) = generate(&tasks, &GpuSpec::v100(),
-                              ProfileId::GeminiFlash25, &cfg);
+                              ProfileId::GeminiFlash25, &cfg,
+                              &Session::default());
         assert_eq!(a, b);
     }
 
@@ -181,7 +174,8 @@ mod tests {
         let tasks = crate::tasks::training_corpus(2);
         let cfg = DatasetCfg { per_task: 4, threads: 1, ..Default::default() };
         let (trajs, _) = generate(&tasks, &GpuSpec::h100(),
-                                  ProfileId::GeminiPro25, &cfg);
+                                  ProfileId::GeminiPro25, &cfg,
+                                  &Session::default());
         for t in &trajs {
             assert_eq!(t.steps.last().unwrap().signal_code, 4,
                        "episode must end in Stop/truncation");

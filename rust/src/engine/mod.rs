@@ -1,0 +1,14 @@
+//! The search engine's shared-state layer.
+//!
+//! Scaling the MTMC pipeline hinges on a clean separation between the
+//! search itself (envs, eval harness, PPO loop) and the evaluation state
+//! those searches share (memo tiers, disk persistence, stats). This
+//! module owns that state: [`Session`] is the one context object built
+//! from CLI flags and passed by reference down every layer —
+//! `main.rs` command handlers → `BatchRunner`/`evaluate_in`/
+//! `evaluate_task` → `OptimEnv`/`TreeEnv` → `train_ppo`/
+//! `dataset::generate`.
+
+mod session;
+
+pub use session::{Session, SessionBuilder, StatsRegistry, StoreReport};

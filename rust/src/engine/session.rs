@@ -1,0 +1,515 @@
+//! [`Session`]: one context object for the memo trio, the cache-policy
+//! flags, the `--memo-store` persistence tier, and a unified stats
+//! registry.
+//!
+//! Before the Session existed, the three memo tiers ([`CostCache`],
+//! [`AnalysisCache`], [`EdgeMemo`]) plus the disk store were threaded
+//! through dozens of ad-hoc touch points: `Option<&CostCache>` params on
+//! eval entry points, `EnvCaches`/`with_caches` constructor variants,
+//! `shared_edges` fields duplicated across `EvalCfg`/`PpoCfg`/
+//! `DatasetCfg`, and warm-start/flush logic copy-pasted into five CLI
+//! commands. A Session consolidates all of it:
+//!
+//! - **Ownership**: the Session owns whichever memos its policy flags
+//!   enable. Presence *is* policy — `cost()` returning `None` means the
+//!   cost tier is off, and every consumer falls through to the direct
+//!   (cold) computation bit-identically.
+//! - **Persistence**: `memo_store(path)` warm-starts the edge memo from
+//!   disk at [`SessionBuilder::build`] and flushes it back on
+//!   [`Session::finish`] (or on drop, as a safety net). The flush is a
+//!   **compaction pass**: only live (non-evicted) entries are written,
+//!   so a store can never grow past the memo's capacity.
+//! - **Stats**: [`Session::stats`] snapshots every memo into one
+//!   [`StatsRegistry`] — printable in the classic per-memo stderr format
+//!   and serializable as one JSON object (`--stats-json`).
+//!
+//! Every memoized computation is pure or edge-deterministic, so outcomes
+//! are bit-identical across all 8 on/off combinations (guarded by the
+//! generative differential suite in `rust/tests/properties.rs`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::env::{flush_edge_memo, warm_start_edge_memo, EdgeMemo};
+use crate::gpusim::{CostCache, MemoStats};
+use crate::transform::AnalysisCache;
+use crate::util::json::Json;
+
+/// Environment override for the edge memo's entry capacity (useful to
+/// exercise eviction + store compaction from CI without a dedicated
+/// flag). An explicit [`SessionBuilder::edge_capacity`] wins over it.
+pub const MEMO_CAPACITY_ENV: &str = "QIMENG_MEMO_CAPACITY";
+
+/// Shared evaluation state for one run: the memo trio, the cache-policy
+/// flags (encoded as presence), the optional disk persistence tier, and
+/// the stats registry. Build one from CLI flags via [`Session::builder`]
+/// and pass it by reference down the stack; `&Session` is `Sync`, so a
+/// whole batched sweep shares one through its work queue.
+pub struct Session {
+    cost: Option<CostCache>,
+    analysis: Option<AnalysisCache>,
+    edges: Option<Arc<EdgeMemo>>,
+    store: Option<PathBuf>,
+    warm_loaded: usize,
+    persisted: AtomicUsize,
+    finished: AtomicBool,
+}
+
+impl Session {
+    /// Start configuring a Session (all three memo tiers default to on,
+    /// no persistence).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// The pricing memo, when the cost tier is enabled.
+    pub fn cost(&self) -> Option<&CostCache> {
+        self.cost.as_ref()
+    }
+
+    /// The region-analysis / action-mask memo, when enabled.
+    pub fn analysis(&self) -> Option<&AnalysisCache> {
+        self.analysis.as_ref()
+    }
+
+    /// The transition transposition table, when enabled (`Arc`-shared so
+    /// envs can hold it beyond the borrow).
+    pub fn edges(&self) -> Option<&Arc<EdgeMemo>> {
+        self.edges.as_ref()
+    }
+
+    /// The persistence-tier path, when configured (requires the edge
+    /// memo: a store without a memo to fill has nothing to persist).
+    pub fn store(&self) -> Option<&Path> {
+        self.store.as_deref()
+    }
+
+    /// Edges warm-started from the store at construction.
+    pub fn warm_loaded(&self) -> usize {
+        self.warm_loaded
+    }
+
+    /// Flush the edge memo back to the configured store. Idempotent (the
+    /// first call wins; `Drop` re-invokes it as a safety net) and a
+    /// no-op without a store. Returns the entry count persisted.
+    ///
+    /// This is the store-compaction pass: the memo's LRU keeps at most
+    /// `capacity()` entries live, and the flush serializes exactly those
+    /// — evicted entries are dropped from the store instead of
+    /// accumulating across runs, so `persisted <= capacity` always.
+    pub fn finish(&self) -> usize {
+        if self.finished.swap(true, Ordering::SeqCst) {
+            return self.persisted.load(Ordering::SeqCst);
+        }
+        let n = match (&self.edges, &self.store) {
+            (Some(memo), Some(path)) => flush_edge_memo(memo, path),
+            _ => 0,
+        };
+        self.persisted.store(n, Ordering::SeqCst);
+        n
+    }
+
+    /// Snapshot every memo's counters into one registry.
+    pub fn stats(&self) -> StatsRegistry {
+        StatsRegistry {
+            cost: self.cost.as_ref().map(|c| c.full_stats()),
+            analysis: self.analysis.as_ref().map(|a| a.stats()),
+            edges: self.edges.as_ref().map(|e| e.stats()),
+            edge_len: self.edges.as_ref().map_or(0, |e| e.len()),
+            edge_capacity: self.edges.as_ref().map_or(0, |e| e.capacity()),
+            edge_disk_loaded: self
+                .edges
+                .as_ref()
+                .map_or(0, |e| e.disk_loaded()),
+            store: self.store.as_ref().map(|p| StoreReport {
+                path: p.clone(),
+                warm_loaded: self.warm_loaded,
+                persisted: self
+                    .finished
+                    .load(Ordering::SeqCst)
+                    .then(|| self.persisted.load(Ordering::SeqCst)),
+            }),
+        }
+    }
+}
+
+impl Default for Session {
+    /// All three memo tiers on, no persistence — the configuration every
+    /// pre-Session caller defaulted to.
+    fn default() -> Self {
+        Session::builder().build()
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // safety net: a handler that returns early (or `?`s out) still
+        // persists what the run computed; finish() is idempotent
+        self.finish();
+    }
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("cost", &self.cost.is_some())
+            .field("analysis", &self.analysis.is_some())
+            .field("edges", &self.edges.is_some())
+            .field("store", &self.store)
+            .finish()
+    }
+}
+
+/// Builder for [`Session`]. Flags map 1:1 to the CLI escape hatches
+/// (`--no-cost-cache` / `--no-analysis-cache` / `--no-edge-memo` /
+/// `--memo-store`).
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    cost: bool,
+    analysis: bool,
+    edges: bool,
+    store: Option<PathBuf>,
+    edge_capacity: Option<usize>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            cost: true,
+            analysis: true,
+            edges: true,
+            store: None,
+            edge_capacity: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Enable/disable the pricing memo ([`CostCache`]).
+    pub fn cost_cache(mut self, on: bool) -> Self {
+        self.cost = on;
+        self
+    }
+
+    /// Enable/disable the region-analysis memo ([`AnalysisCache`]).
+    pub fn analysis_cache(mut self, on: bool) -> Self {
+        self.analysis = on;
+        self
+    }
+
+    /// Enable/disable the transition memo ([`EdgeMemo`]).
+    pub fn edge_memo(mut self, on: bool) -> Self {
+        self.edges = on;
+        self
+    }
+
+    /// Persist the edge memo across runs: warm-start from `path` at
+    /// build (missing store = silent cold start, corrupt = logged cold
+    /// start), flush back on [`Session::finish`]. Ignored when the edge
+    /// memo is disabled.
+    pub fn memo_store(mut self, path: Option<PathBuf>) -> Self {
+        self.store = path;
+        self
+    }
+
+    /// Bound the edge memo to `max_entries` (default 200k). Tiny
+    /// capacities are legitimate — the differential tests run under
+    /// eviction pressure to prove outcomes never depend on residency.
+    pub fn edge_capacity(mut self, max_entries: usize) -> Self {
+        self.edge_capacity = Some(max_entries);
+        self
+    }
+
+    /// Build the Session: construct the enabled memos and warm-start the
+    /// edge memo from the store (when both are configured).
+    pub fn build(self) -> Session {
+        let edges = self.edges.then(|| {
+            let cap = self.edge_capacity.or_else(|| {
+                std::env::var(MEMO_CAPACITY_ENV).ok()?.parse().ok()
+            });
+            Arc::new(match cap {
+                Some(c) => EdgeMemo::with_capacity(c),
+                None => EdgeMemo::new(),
+            })
+        });
+        let store = if edges.is_some() { self.store } else { None };
+        let warm_loaded = match (&edges, &store) {
+            (Some(memo), Some(path)) => warm_start_edge_memo(memo, path),
+            _ => 0,
+        };
+        Session {
+            cost: self.cost.then(CostCache::new),
+            analysis: self.analysis.then(AnalysisCache::new),
+            edges,
+            store,
+            warm_loaded,
+            persisted: AtomicUsize::new(0),
+            finished: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Where a persisted store stands for one Session.
+#[derive(Clone, Debug)]
+pub struct StoreReport {
+    pub path: PathBuf,
+    /// Edges warm-started from the store at construction.
+    pub warm_loaded: usize,
+    /// Edges written by [`Session::finish`]; `None` until it has run.
+    pub persisted: Option<usize>,
+}
+
+/// One snapshot of every memo's traffic, taken via [`Session::stats`].
+/// Disabled memos report `None` — physically absent, necessarily silent.
+#[derive(Clone, Debug)]
+pub struct StatsRegistry {
+    pub cost: Option<MemoStats>,
+    pub analysis: Option<MemoStats>,
+    pub edges: Option<MemoStats>,
+    /// Live entry count of the edge memo (0 when disabled).
+    pub edge_len: usize,
+    /// Residency bound of the edge memo (0 when disabled) — the most a
+    /// compacting flush can ever persist.
+    pub edge_capacity: usize,
+    /// Edges warm-started from a persisted store.
+    pub edge_disk_loaded: usize,
+    pub store: Option<StoreReport>,
+}
+
+impl StatsRegistry {
+    /// The classic per-memo stderr report (one line per *touched* memo,
+    /// in the format the CLI has always printed — CI greps for the
+    /// `disk hits` suffix).
+    pub fn print(&self) {
+        print_memo_line("cost-cache", &self.cost);
+        print_memo_line("analysis-cache", &self.analysis);
+        print_memo_line("edge-memo", &self.edges);
+    }
+
+    /// The whole registry as one JSON object (the `--stats-json`
+    /// payload): per-memo lookups/hits/misses/evictions/disk hits, plus
+    /// edge-memo residency and persistence-tier info.
+    pub fn to_json(&self) -> Json {
+        let mut edge = memo_json(&self.edges);
+        if let Json::Obj(m) = &mut edge {
+            m.insert("len".into(), Json::from(self.edge_len));
+            m.insert("capacity".into(), Json::from(self.edge_capacity));
+            m.insert("disk_loaded".into(), Json::from(self.edge_disk_loaded));
+        }
+        let store = match &self.store {
+            None => Json::Null,
+            Some(s) => Json::obj(vec![
+                ("path", Json::from(s.path.display().to_string())),
+                ("warm_loaded", Json::from(s.warm_loaded)),
+                ("persisted", match s.persisted {
+                    Some(n) => Json::from(n),
+                    None => Json::Null,
+                }),
+            ]),
+        };
+        Json::obj(vec![
+            ("cost_cache", memo_json(&self.cost)),
+            ("analysis_cache", memo_json(&self.analysis)),
+            ("edge_memo", edge),
+            ("store", store),
+        ])
+    }
+}
+
+fn print_memo_line(name: &str, stats: &Option<MemoStats>) {
+    let Some(s) = stats else { return };
+    if s.lookups == 0 {
+        return;
+    }
+    let disk = if s.disk_hits > 0 {
+        format!(", {} disk hits", s.disk_hits)
+    } else {
+        String::new()
+    };
+    eprintln!(
+        "{name}: {} hits / {} misses ({:.1}% hit rate, {} evictions{disk})",
+        s.hits,
+        s.misses,
+        100.0 * s.hit_rate(),
+        s.evictions
+    );
+}
+
+fn memo_json(stats: &Option<MemoStats>) -> Json {
+    match stats {
+        None => Json::obj(vec![("enabled", Json::from(false))]),
+        Some(s) => Json::obj(vec![
+            ("enabled", Json::from(true)),
+            ("lookups", Json::from(s.lookups)),
+            ("hits", Json::from(s.hits)),
+            ("misses", Json::from(s.misses)),
+            ("evictions", Json::from(s.evictions)),
+            ("disk_hits", Json::from(s.disk_hits)),
+            ("hit_rate", Json::from(s.hit_rate())),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{load_edge_memo, CachedEdge, StepSignal};
+
+    fn edge() -> CachedEdge {
+        CachedEdge {
+            program: None,
+            signal: StepSignal::Rejected,
+            speedup: 1.0,
+            from_disk: false,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("qimeng_session_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// All 8 on/off combinations construct exactly the requested memo
+    /// set (presence encodes policy).
+    #[test]
+    fn builder_constructs_every_flag_combination() {
+        for combo in 0..8u8 {
+            let (c, a, e) = (combo & 1 != 0, combo & 2 != 0, combo & 4 != 0);
+            let s = Session::builder()
+                .cost_cache(c)
+                .analysis_cache(a)
+                .edge_memo(e)
+                .build();
+            assert_eq!(s.cost().is_some(), c, "combo {combo}: cost tier");
+            assert_eq!(s.analysis().is_some(), a, "combo {combo}: analysis");
+            assert_eq!(s.edges().is_some(), e, "combo {combo}: edge memo");
+            let reg = s.stats();
+            assert_eq!(reg.cost.is_some(), c);
+            assert_eq!(reg.analysis.is_some(), a);
+            assert_eq!(reg.edges.is_some(), e);
+            assert_eq!(reg.edge_capacity > 0, e);
+        }
+    }
+
+    #[test]
+    fn default_session_is_fully_cached_and_storeless() {
+        let s = Session::default();
+        assert!(s.cost().is_some());
+        assert!(s.analysis().is_some());
+        assert!(s.edges().is_some());
+        assert!(s.store().is_none());
+        assert_eq!(s.finish(), 0, "no store: nothing to persist");
+    }
+
+    /// `--memo-store` without the edge memo has nothing to persist: the
+    /// builder drops the store rather than warm-starting into a memo
+    /// that will never be consulted.
+    #[test]
+    fn store_requires_edge_memo() {
+        let s = Session::builder()
+            .edge_memo(false)
+            .memo_store(Some(tmp("ignored.bin")))
+            .build();
+        assert!(s.store().is_none());
+        assert_eq!(s.finish(), 0);
+        assert!(!tmp("ignored.bin").exists(), "no store file may appear");
+    }
+
+    /// The regression guard for the compaction pass: fill a tiny-capacity
+    /// memo far past its bound, flush, and the store must contain only
+    /// the live (non-evicted) entries — never more than capacity.
+    #[test]
+    fn flush_after_eviction_writes_only_live_entries() {
+        let path = tmp("compaction.bin");
+        let _ = std::fs::remove_file(&path);
+        let s = Session::builder()
+            .edge_capacity(2)
+            .memo_store(Some(path.clone()))
+            .build();
+        let memo = s.edges().unwrap();
+        // keys 0..32 share the zero high bits => one shard => hard
+        // eviction pressure against the per-shard bound
+        for k in 0..32u64 {
+            memo.insert(k, edge());
+        }
+        assert!(memo.stats().evictions > 0, "pressure must evict");
+        let mut live: Vec<u64> =
+            memo.entries().iter().map(|(k, _)| *k).collect();
+        live.sort_unstable();
+        assert!(live.len() <= memo.capacity());
+        let persisted = s.finish();
+        assert_eq!(persisted, live.len(), "flush writes exactly the live set");
+        assert!(persisted < 32, "store must drop the evicted entries");
+
+        let reloaded = EdgeMemo::new();
+        let n = load_edge_memo(&reloaded, &path).unwrap();
+        assert_eq!(n, persisted);
+        let mut reloaded_keys: Vec<u64> =
+            reloaded.entries().iter().map(|(k, _)| *k).collect();
+        reloaded_keys.sort_unstable();
+        assert_eq!(reloaded_keys, live,
+                   "store holds the live set, nothing evicted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// `finish` is idempotent and `Drop` re-runs it safely.
+    #[test]
+    fn finish_is_idempotent() {
+        let path = tmp("idempotent.bin");
+        let _ = std::fs::remove_file(&path);
+        let s = Session::builder().memo_store(Some(path.clone())).build();
+        s.edges().unwrap().insert(7, edge());
+        let first = s.finish();
+        assert_eq!(first, 1);
+        assert_eq!(s.finish(), first, "second finish reports, not rewrites");
+        assert_eq!(s.stats().store.unwrap().persisted, Some(1));
+        drop(s); // Drop must not double-flush or panic
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// A second Session over the same store warm-starts what the first
+    /// one persisted (the cross-run handshake the CLI relies on).
+    #[test]
+    fn store_round_trips_across_sessions() {
+        let path = tmp("roundtrip.bin");
+        let _ = std::fs::remove_file(&path);
+        let a = Session::builder().memo_store(Some(path.clone())).build();
+        assert_eq!(a.warm_loaded(), 0, "missing store = silent cold start");
+        for k in 0..5u64 {
+            a.edges().unwrap().insert(k << 48, edge()); // spread shards
+        }
+        assert_eq!(a.finish(), 5);
+        let b = Session::builder().memo_store(Some(path.clone())).build();
+        assert_eq!(b.warm_loaded(), 5);
+        assert_eq!(b.edges().unwrap().disk_loaded(), 5);
+        assert_eq!(b.stats().store.unwrap().warm_loaded, 5);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let s = Session::builder().analysis_cache(false).build();
+        s.edges().unwrap().insert(1, edge());
+        s.edges().unwrap().get(1);
+        s.edges().unwrap().get(2);
+        let j = s.stats().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("cost_cache").unwrap().get("enabled"),
+            Some(&Json::Bool(true))
+        );
+        assert_eq!(
+            parsed.get("analysis_cache").unwrap().get("enabled"),
+            Some(&Json::Bool(false))
+        );
+        let em = parsed.get("edge_memo").unwrap();
+        assert_eq!(em.get("lookups").unwrap().as_usize(), Some(2));
+        assert_eq!(em.get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(em.get("misses").unwrap().as_usize(), Some(1));
+        assert_eq!(em.get("len").unwrap().as_usize(), Some(1));
+        assert!(em.get("capacity").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(parsed.get("store"), Some(&Json::Null));
+    }
+}

@@ -115,6 +115,12 @@ impl EdgeMemo {
         self.edges.is_empty()
     }
 
+    /// Residency bound: the most edges the memo keeps live, and so the
+    /// most a flush can persist (see [`ShardedMemo::capacity`]).
+    pub fn capacity(&self) -> usize {
+        self.edges.capacity()
+    }
+
     /// Snapshot every resident `(key, edge)` pair (see
     /// [`ShardedMemo::entries`]); the persistence tier serializes this.
     pub fn entries(&self) -> Vec<(u64, CachedEdge)> {

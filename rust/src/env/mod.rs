@@ -23,5 +23,5 @@ pub use memo_store::{
 };
 pub use obs::{featurize, OBS_DIM};
 pub use reward::{shape_reward, RewardCfg, StepSignal};
-pub use stepper::{EnvCaches, EnvConfig, EnvState, OptimEnv, StepResult};
+pub use stepper::{EnvConfig, EnvState, OptimEnv, StepResult};
 pub use tree::TreeEnv;

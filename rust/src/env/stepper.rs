@@ -16,6 +16,7 @@ use std::sync::Arc;
 use super::memo::{self, CachedEdge, EdgeMemo};
 use super::obs::featurize;
 use super::reward::{shape_reward, RewardCfg, StepSignal};
+use crate::engine::Session;
 use crate::gpusim::{graph_fingerprint, program_fingerprint, CostCache,
                     GpuSpec, Pricer};
 use crate::graph::infer_shapes;
@@ -45,28 +46,6 @@ impl Default for EnvConfig {
             cuda: false,
             reward: RewardCfg::default(),
         }
-    }
-}
-
-/// The memo subsystems an env (or a whole sweep) routes through. All
-/// three are optional and independent, and none of them changes outcomes
-/// — only wall-clock:
-/// - `cost`: kernel/eager pricing memo ([`CostCache`]);
-/// - `analysis`: region/action-mask memo ([`AnalysisCache`]);
-/// - `edges`: whole-transition memo ([`EdgeMemo`], `Arc`-shared so a
-///   [`super::TreeEnv`] can own its table and the [`crate::eval::BatchRunner`]
-///   can share one across workers).
-#[derive(Clone, Debug, Default)]
-pub struct EnvCaches<'a> {
-    pub cost: Option<&'a CostCache>,
-    pub analysis: Option<&'a AnalysisCache>,
-    pub edges: Option<Arc<EdgeMemo>>,
-}
-
-impl<'a> EnvCaches<'a> {
-    /// No caching anywhere — the bit-identical cold reference.
-    pub fn none() -> EnvCaches<'a> {
-        EnvCaches::default()
     }
 }
 
@@ -129,30 +108,34 @@ fn mix(a: u64, b: u64) -> u64 {
 }
 
 impl<'a> OptimEnv<'a> {
+    /// A cacheless env — the bit-identical cold reference.
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> OptimEnv<'a> {
-        Self::with_caches(task, spec, profile, cfg, seed, EnvCaches::none())
+        Self::with_parts(task, spec, profile, cfg, seed, None, None, None)
     }
 
-    /// Like [`OptimEnv::new`], pricing through a shared [`CostCache`]
-    /// (compatibility constructor predating [`OptimEnv::with_caches`]).
-    pub fn with_cache(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
-                      cfg: EnvConfig, seed: u64,
-                      cache: Option<&'a CostCache>) -> OptimEnv<'a> {
-        Self::with_caches(task, spec, profile, cfg, seed,
-                          EnvCaches { cost: cache, ..EnvCaches::none() })
+    /// Build an env wired into a [`Session`]'s memo subsystems. Outcomes
+    /// are bit-identical for every cache combination (all three memoize
+    /// pure or edge-deterministic computations); only wall-clock differs.
+    pub fn with_session(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+                        cfg: EnvConfig, seed: u64,
+                        session: &'a Session) -> OptimEnv<'a> {
+        Self::with_parts(task, spec, profile, cfg, seed, session.cost(),
+                         session.analysis(), session.edges().cloned())
     }
 
-    /// Build an env wired into a sweep's memo subsystems. Outcomes are
-    /// bit-identical for every cache combination (all three memoize pure
-    /// or edge-deterministic computations); only wall-clock differs.
-    pub fn with_caches(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
-                       cfg: EnvConfig, seed: u64,
-                       caches: EnvCaches<'a>) -> OptimEnv<'a> {
+    /// The constructor every variant funnels into, taking the memo trio
+    /// piecewise (how [`super::TreeEnv`] rebuilds an env over the same
+    /// task with its own private edge table).
+    pub(crate) fn with_parts(task: &'a Task, spec: GpuSpec,
+                             profile: LlmProfile, cfg: EnvConfig, seed: u64,
+                             cost: Option<&'a CostCache>,
+                             analysis: Option<&'a AnalysisCache>,
+                             edges: Option<Arc<EdgeMemo>>) -> OptimEnv<'a> {
         let shapes = infer_shapes(&task.graph);
         let graph_ctx = graph_fingerprint(&task.graph, &shapes);
-        let pricer = Pricer::from_ctx(caches.cost, graph_ctx);
-        let analyzer = Analyzer::from_ctx(caches.analysis, graph_ctx);
+        let pricer = Pricer::from_ctx(cost, graph_ctx);
+        let analyzer = Analyzer::from_ctx(analysis, graph_ctx);
         let edge_ctx = memo::edge_context(task, graph_ctx, &spec, &profile,
                                           &cfg, seed);
         let affinity = crate::gpusim::library_affinity(&task.id);
@@ -173,18 +156,16 @@ impl<'a> OptimEnv<'a> {
             done: false,
         };
         OptimEnv { task, spec, profile, cfg, shapes, eager_us, state,
-                   pricer, analyzer, memo: caches.edges, edge_ctx,
+                   pricer, analyzer, memo: edges, edge_ctx,
                    base_seed: seed }
     }
 
-    /// The memo subsystems this env routes through (used to rebuild an
-    /// env over the same task, e.g. [`super::TreeEnv::reset`]).
-    pub fn caches(&self) -> EnvCaches<'a> {
-        EnvCaches {
-            cost: self.pricer.cache(),
-            analysis: self.analyzer.cache(),
-            edges: self.memo.clone(),
-        }
+    /// The memo trio this env routes through (used to rebuild an env over
+    /// the same task, e.g. [`super::TreeEnv::reset`]).
+    pub(crate) fn parts(&self) -> (Option<&'a CostCache>,
+                                   Option<&'a AnalysisCache>,
+                                   Option<Arc<EdgeMemo>>) {
+        (self.pricer.cache(), self.analyzer.cache(), self.memo.clone())
     }
 
     /// The shared transition memo, if one is attached.
@@ -433,16 +414,20 @@ mod tests {
     #[test]
     fn cached_env_matches_uncached_bitwise() {
         let (tasks, _) = env(8);
-        let cache = crate::gpusim::CostCache::new();
+        let session = Session::builder()
+            .analysis_cache(false)
+            .edge_memo(false)
+            .build();
         let mut plain = mk(&tasks, 11);
-        let mut cached = OptimEnv::with_cache(
+        let mut cached = OptimEnv::with_session(
             &tasks[0],
             GpuSpec::a100(),
             LlmProfile::get(ProfileId::GeminiPro25),
             EnvConfig::default(),
             11,
-            Some(&cache),
+            &session,
         );
+        assert!(session.cost().is_some() && session.edges().is_none());
         assert_eq!(plain.eager_us.to_bits(), cached.eager_us.to_bits());
         while !plain.state.done {
             let mask = plain.mask();
@@ -463,22 +448,16 @@ mod tests {
         // all three memo subsystems attached at once, and a second
         // episode replayed over the warm edge memo
         let (tasks, _) = env(12);
-        let cost = crate::gpusim::CostCache::new();
-        let analysis = AnalysisCache::new();
-        let edges = Arc::new(EdgeMemo::new());
+        let session = Session::default();
         for pass in 0..2 {
             let mut plain = mk(&tasks, 21);
-            let mut cached = OptimEnv::with_caches(
+            let mut cached = OptimEnv::with_session(
                 &tasks[0],
                 GpuSpec::a100(),
                 LlmProfile::get(ProfileId::GeminiPro25),
                 EnvConfig::default(),
                 21,
-                EnvCaches {
-                    cost: Some(&cost),
-                    analysis: Some(&analysis),
-                    edges: Some(Arc::clone(&edges)),
-                },
+                &session,
             );
             while !plain.state.done {
                 let mask = plain.mask();
@@ -494,7 +473,7 @@ mod tests {
             assert!(cached.state.done);
             assert_eq!(plain.state.best_program, cached.state.best_program);
             if pass == 1 {
-                let s = edges.stats();
+                let s = session.edges().unwrap().stats();
                 assert!(s.hits > 0, "second episode must replay from memo");
             }
         }
@@ -506,16 +485,18 @@ mod tests {
         // one step used to each re-fingerprint the program; the cached
         // fingerprint must stay in sync through live steps AND replays
         let (tasks, _) = env(9);
-        let edges = Arc::new(EdgeMemo::new());
+        let session = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .build();
         for _ in 0..2 {
-            let mut e = OptimEnv::with_caches(
+            let mut e = OptimEnv::with_session(
                 &tasks[0],
                 GpuSpec::a100(),
                 LlmProfile::get(ProfileId::GeminiPro25),
                 EnvConfig::default(),
                 13,
-                EnvCaches { edges: Some(Arc::clone(&edges)),
-                            ..EnvCaches::none() },
+                &session,
             );
             assert_eq!(e.state.program_fp,
                        program_fingerprint(&e.state.program));
@@ -528,7 +509,8 @@ mod tests {
                            "fingerprint cache went stale");
             }
         }
-        assert!(edges.stats().hits > 0, "second pass must exercise replay");
+        assert!(session.edges().unwrap().stats().hits > 0,
+                "second pass must exercise replay");
     }
 
     #[test]

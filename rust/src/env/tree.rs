@@ -18,8 +18,9 @@
 use std::sync::Arc;
 
 use super::memo::EdgeMemo;
-use super::stepper::{EnvCaches, EnvConfig, OptimEnv, StepResult};
-use crate::gpusim::{CostCache, GpuSpec, MemoStats};
+use super::stepper::{EnvConfig, OptimEnv, StepResult};
+use crate::engine::Session;
+use crate::gpusim::{GpuSpec, MemoStats};
 use crate::microcode::LlmProfile;
 use crate::tasks::Task;
 
@@ -29,33 +30,33 @@ pub struct TreeEnv<'a> {
 }
 
 impl<'a> TreeEnv<'a> {
+    /// A self-contained tree: no pricing/analysis memos, one fresh
+    /// private transition table (the classic TreeEnv behavior).
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> TreeEnv<'a> {
-        Self::with_caches(task, spec, profile, cfg, seed, EnvCaches::none())
-    }
-
-    /// Like [`TreeEnv::new`], pricing the wrapped env through a shared
-    /// [`CostCache`] (complementary caches: the edge memo here replays
-    /// whole transitions, the cost cache de-duplicates kernel pricing).
-    pub fn with_cache(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
-                      cfg: EnvConfig, seed: u64,
-                      cost_cache: Option<&'a CostCache>) -> TreeEnv<'a> {
-        Self::with_caches(task, spec, profile, cfg, seed,
-                          EnvCaches { cost: cost_cache, ..EnvCaches::none() })
-    }
-
-    /// Fully wired constructor. When `caches.edges` is `None` the tree
-    /// owns a fresh private table (the classic TreeEnv behavior); passing
-    /// a shared [`EdgeMemo`] lets several trees — or a whole batched
-    /// sweep — pool their transitions.
-    pub fn with_caches(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
-                       cfg: EnvConfig, seed: u64,
-                       mut caches: EnvCaches<'a>) -> TreeEnv<'a> {
-        if caches.edges.is_none() {
-            caches.edges = Some(Arc::new(EdgeMemo::new()));
-        }
         TreeEnv {
-            env: OptimEnv::with_caches(task, spec, profile, cfg, seed, caches),
+            env: OptimEnv::with_parts(task, spec, profile, cfg, seed, None,
+                                      None, Some(Arc::new(EdgeMemo::new()))),
+        }
+    }
+
+    /// A tree wired into a [`Session`]'s memo subsystems. The wrapped env
+    /// routes pricing/analysis through the session's caches, and every
+    /// tree built over the session pools transitions in its shared
+    /// [`EdgeMemo`]; when the session runs with the edge memo disabled,
+    /// the tree falls back to a fresh private table (a TreeEnv is
+    /// memoizing by definition).
+    pub fn with_session(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
+                        cfg: EnvConfig, seed: u64,
+                        session: &'a Session) -> TreeEnv<'a> {
+        let edges = session
+            .edges()
+            .cloned()
+            .unwrap_or_else(|| Arc::new(EdgeMemo::new()));
+        TreeEnv {
+            env: OptimEnv::with_parts(task, spec, profile, cfg, seed,
+                                      session.cost(), session.analysis(),
+                                      Some(edges)),
         }
     }
 
@@ -67,9 +68,9 @@ impl<'a> TreeEnv<'a> {
         let profile = self.env.profile.clone();
         let cfg = self.env.cfg.clone();
         let base = self.env.base_seed;
-        let caches = self.env.caches();
-        self.env = OptimEnv::with_caches(task, spec, profile, cfg, base,
-                                         caches);
+        let (cost, analysis, edges) = self.env.parts();
+        self.env = OptimEnv::with_parts(task, spec, profile, cfg, base,
+                                        cost, analysis, edges);
     }
 
     /// Step with memoization (delegates to the memo-wired env).
@@ -163,18 +164,21 @@ mod tests {
         // same (task, spec, profile, seed): the second tree replays the
         // first tree's episode entirely from the shared table
         let tasks = crate::tasks::kernelbench_level(2)[..1].to_vec();
-        let shared = Arc::new(EdgeMemo::new());
-        let mk = || TreeEnv::with_caches(
+        let session = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .build();
+        let mk = || TreeEnv::with_session(
             &tasks[0],
             GpuSpec::a100(),
             LlmProfile::get(ProfileId::GeminiFlash25),
             EnvConfig::default(),
             31,
-            EnvCaches { edges: Some(Arc::clone(&shared)),
-                        ..EnvCaches::none() },
+            &session,
         );
         let mut first = mk();
         let (r1, s1) = run_episode(&mut first, 3);
+        let shared = session.edges().unwrap();
         let misses_after_first = shared.stats().misses;
         let mut second = mk();
         let (r2, s2) = run_episode(&mut second, 3);

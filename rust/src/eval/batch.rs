@@ -12,18 +12,17 @@
 //! - per-task outcomes stream to a JSON-lines sink ([`JsonlSink`], built
 //!   on [`crate::util::json`]) as units complete, so a long sweep is
 //!   observable and resumable downstream;
-//! - one thread-safe memo trio per runner carries the sweep's redundant
-//!   work: the [`CostCache`] is the pricing engine (env steps,
+//! - the sweep's redundant work rides the [`Session`]'s thread-safe memo
+//!   trio: the `CostCache` is the pricing engine (env steps,
 //!   greedy-lookahead candidate pricing, eager baselines — (task, gpu)
 //!   pairs repeat across methods and lookahead siblings share kernels),
-//!   the [`AnalysisCache`] de-duplicates region analysis / action masks
-//!   per program state, and the [`EdgeMemo`] transposition table replays
+//!   the `AnalysisCache` de-duplicates region analysis / action masks
+//!   per program state, and the `EdgeMemo` transposition table replays
 //!   whole env transitions across methods, repeated sweeps and threads
 //!   (methods that walk the same trees — e.g. the greedy surrogate under
-//!   several labels — pay for each micro-coding transition once). Each is
-//!   opt-out per job via `cfg.use_cost_cache` / `use_analysis_cache` /
-//!   `use_edge_memo`; sink records are enriched with the memoized eager
-//!   baseline.
+//!   several labels — pay for each micro-coding transition once). Cache
+//!   policy, `--memo-store` persistence and stats all live on the
+//!   Session; sink records are enriched with the memoized eager baseline.
 //!
 //! Determinism: unit seeds derive from (job seed, task index) exactly as
 //! in [`super::evaluate`], never from thread identity — and every memo
@@ -38,11 +37,10 @@ use std::sync::{Arc, Mutex};
 use super::harness::{evaluate_task, EvalCfg, SuiteResult};
 use super::metrics::{aggregate, TaskOutcome};
 use super::methods::{MacroKind, Method};
-use crate::env::{EdgeMemo, EnvCaches};
-use crate::gpusim::{library_affinity, CostCache, GpuSpec, Pricer};
+use crate::engine::Session;
+use crate::gpusim::{library_affinity, GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::tasks::Task;
-use crate::transform::AnalysisCache;
 use crate::util::json::Json;
 use crate::util::parallel::{default_threads, par_map};
 
@@ -141,66 +139,36 @@ impl JsonlSink {
     }
 }
 
-/// The batched evaluation engine. Construct once per sweep; the memo trio
-/// (cost cache, analysis cache, edge memo) persists across
-/// [`BatchRunner::run`] calls, so repeated sweeps replay from warm tables.
-pub struct BatchRunner {
+/// The batched evaluation engine. Construct once per sweep over a
+/// [`Session`]: the session's memo trio persists across
+/// [`BatchRunner::run`] calls (and across runners), so repeated sweeps
+/// replay from warm tables; cache policy, `--memo-store` warm-start/flush
+/// and the stats registry are the session's job, not the runner's.
+pub struct BatchRunner<'s> {
     threads: usize,
-    cache: CostCache,
-    analysis: AnalysisCache,
-    edges: Arc<EdgeMemo>,
+    session: &'s Session,
     sink: Option<JsonlSink>,
 }
 
-impl BatchRunner {
-    pub fn new(cfg: BatchCfg) -> anyhow::Result<BatchRunner> {
+impl<'s> BatchRunner<'s> {
+    pub fn new(cfg: BatchCfg, session: &'s Session)
+               -> anyhow::Result<BatchRunner<'s>> {
         let sink = match &cfg.sink {
             Some(path) => Some(JsonlSink::create(path)?),
             None => None,
         };
-        Ok(BatchRunner {
-            threads: cfg.threads.max(1),
-            cache: CostCache::new(),
-            analysis: AnalysisCache::new(),
-            edges: Arc::new(EdgeMemo::new()),
-            sink,
-        })
+        Ok(BatchRunner { threads: cfg.threads.max(1), session, sink })
     }
 
-    /// The shared cost-model memo cache (hit/miss stats for reporting).
-    pub fn cache(&self) -> &CostCache {
-        &self.cache
-    }
-
-    /// The shared region-analysis / action-mask memo.
-    pub fn analysis(&self) -> &AnalysisCache {
-        &self.analysis
-    }
-
-    /// The shared transition transposition table.
-    pub fn edge_memo(&self) -> &EdgeMemo {
-        &self.edges
+    /// The session whose memo trio this runner sweeps through.
+    pub fn session(&self) -> &'s Session {
+        self.session
     }
 
     /// True if a configured JSONL sink dropped any record (I/O error).
     /// Callers that script on exit codes should fail the run when set.
     pub fn sink_failed(&self) -> bool {
         self.sink.as_ref().is_some_and(|s| s.failed())
-    }
-
-    /// Warm the sweep's edge memo from a persisted `--memo-store` file
-    /// (see [`crate::env::warm_start_edge_memo`]): returns the edge count
-    /// loaded; a missing store is a silent cold start and a corrupt /
-    /// version-mismatched one logs and cold-starts — never aborts.
-    pub fn warm_edge_store(&self, path: &Path) -> usize {
-        crate::env::warm_start_edge_memo(&self.edges, path)
-    }
-
-    /// Persist the sweep's edge memo to a `--memo-store` file (see
-    /// [`crate::env::flush_edge_memo`]): returns the edge count written;
-    /// I/O failures log instead of failing the run.
-    pub fn flush_edge_store(&self, path: &Path) -> usize {
-        crate::env::flush_edge_memo(&self.edges, path)
     }
 
     /// Run a sweep: every job's tasks become units on one work queue.
@@ -231,27 +199,20 @@ impl BatchRunner {
             par_map(&units, self.threads, |_, &(ji, ti)| {
                 let job = &jobs[ji];
                 let task = &job.tasks[ti];
-                // the runner's memo trio serves the whole unit (env
+                // the session's memo trio serves the whole unit (env
                 // steps, greedy lookahead, eager baselines, transition
-                // replays) unless the job opts out of a layer — outcomes
+                // replays) — whichever tiers its policy enables; outcomes
                 // are bit-identical for every combination
-                let caches = EnvCaches {
-                    cost: job.cfg.use_cost_cache.then_some(&self.cache),
-                    analysis: job.cfg.use_analysis_cache
-                        .then_some(&self.analysis),
-                    edges: job.cfg.use_edge_memo
-                        .then(|| Arc::clone(&self.edges)),
-                };
                 let outcome = evaluate_task(&job.method, task, ti as u64,
-                                            &job.gpu, &job.cfg, &caches);
+                                            &job.gpu, &job.cfg, self.session);
                 if let Some(sink) = &self.sink {
                     // enrich the streamed record with the task's eager
                     // baseline — (task, gpu) pairs repeat across every
                     // method of a sweep, so this is almost always a cache
                     // hit; skipped entirely when nothing consumes it
                     let shapes = infer_shapes(&task.graph);
-                    let eager_us = Pricer::new(caches.cost, &task.graph,
-                                               &shapes)
+                    let eager_us = Pricer::new(self.session.cost(),
+                                               &task.graph, &shapes)
                         .eager_time_us(&task.graph, &shapes, &job.gpu,
                                        library_affinity(&task.id));
                     sink.write(&unit_record(ji, job, task, &outcome, eager_us));
@@ -342,7 +303,10 @@ mod tests {
     #[test]
     fn matches_unbatched_evaluate() {
         let jobs = jobs_small();
-        let runner = BatchRunner::new(BatchCfg { threads: 4, sink: None }).unwrap();
+        let session = Session::default();
+        let runner =
+            BatchRunner::new(BatchCfg { threads: 4, sink: None }, &session)
+                .unwrap();
         let batched = runner.run(&jobs);
         for (job, got) in jobs.iter().zip(&batched) {
             let direct = evaluate(&job.method, &job.tasks, &job.gpu, &job.cfg);
@@ -360,10 +324,11 @@ mod tests {
         let path = dir.join("records.jsonl");
         let jobs = jobs_small();
         let n_units: usize = jobs.iter().map(|j| j.tasks.len()).sum();
-        let runner = BatchRunner::new(BatchCfg {
-            threads: 3,
-            sink: Some(path.clone()),
-        })
+        let session = Session::default();
+        let runner = BatchRunner::new(
+            BatchCfg { threads: 3, sink: Some(path.clone()) },
+            &session,
+        )
         .unwrap();
         runner.run(&jobs);
         let text = std::fs::read_to_string(&path).unwrap();
@@ -383,20 +348,21 @@ mod tests {
         let dir = std::env::temp_dir().join("qimeng_batch_test");
         std::fs::create_dir_all(&dir).unwrap();
         let jobs = jobs_small();
-        let runner = BatchRunner::new(BatchCfg {
-            threads: 2,
-            sink: Some(dir.join("cache_hits.jsonl")),
-        })
+        let session = Session::default();
+        let runner = BatchRunner::new(
+            BatchCfg { threads: 2, sink: Some(dir.join("cache_hits.jsonl")) },
+            &session,
+        )
         .unwrap();
         runner.run(&jobs);
-        let (h1, m1) = runner.cache().stats();
+        let (h1, m1) = session.cost().unwrap().stats();
         // greedy-lookahead pricing alone guarantees warm traffic within
         // the first sweep (the current program is re-priced every step)
         assert!(h1 > 0, "no cache hits in a greedy-lookahead sweep");
         // both jobs share the same 6 tasks but differ in GPU, so the
         // second sweep re-prices only cached (task, gpu) pairs
         runner.run(&jobs);
-        let (h2, m2) = runner.cache().stats();
+        let (h2, m2) = session.cost().unwrap().stats();
         assert_eq!(m2, m1, "second sweep must be all hits");
         assert!(h2 >= jobs.iter().map(|j| j.tasks.len()).sum::<usize>());
     }

@@ -1,11 +1,10 @@
 //! The evaluation harness: method × suite × GPU -> metrics.
 
-use std::sync::Arc;
-
 use super::metrics::{aggregate, Metrics, TaskOutcome};
 use super::methods::{MacroKind, Method};
-use crate::env::{EdgeMemo, EnvCaches, EnvConfig, OptimEnv};
-use crate::gpusim::{CostCache, GpuSpec, Pricer};
+use crate::engine::Session;
+use crate::env::{EnvConfig, OptimEnv};
+use crate::gpusim::{GpuSpec, Pricer};
 use crate::microcode::{
     check_correct, single_pass_generate, CheckOutcome, LlmProfile, ProfileId,
     SinglePassMode, SinglePassOutcome,
@@ -15,11 +14,13 @@ use crate::policy::{FreeformPolicy, HeuristicPolicy, Policy, PjrtPolicy,
 use crate::runtime::{load_params, PjrtRuntime};
 use crate::tasks::{Suite, Task};
 use crate::transform::{
-    apply_action_with, decode_action, AnalysisCache, Analyzer, STOP_ACTION,
+    apply_action_with, decode_action, Analyzer, STOP_ACTION,
 };
 use crate::util::{parallel::par_map, Rng};
 
-/// Harness configuration.
+/// Harness configuration. Cache policy and persistence no longer live
+/// here: all shared evaluation state (the memo trio, the `--memo-store`
+/// tier, stats) flows through the [`Session`] handed to [`evaluate_in`].
 #[derive(Clone, Debug)]
 pub struct EvalCfg {
     pub seed: u64,
@@ -27,27 +28,6 @@ pub struct EvalCfg {
     pub env: EnvConfig,
     /// Target language is CUDA (Table 5).
     pub cuda: bool,
-    /// Route all cost-model pricing (env steps, greedy lookahead, eager
-    /// baselines) through a per-sweep [`CostCache`]. Outcomes are
-    /// bit-identical either way; `false` (`--no-cost-cache`) is the
-    /// escape hatch for benchmarking the cold path or ruling the cache
-    /// out while debugging.
-    pub use_cost_cache: bool,
-    /// Route region analysis / action masks through a per-sweep
-    /// [`AnalysisCache`]. Bit-identical either way; `false`
-    /// (`--no-analysis-cache`) is the escape hatch.
-    pub use_analysis_cache: bool,
-    /// Replay env transitions through a per-sweep [`EdgeMemo`]
-    /// transposition table. Bit-identical either way; `false`
-    /// (`--no-edge-memo`) is the escape hatch.
-    pub use_edge_memo: bool,
-    /// Use this caller-owned [`EdgeMemo`] instead of a fresh per-call one
-    /// — the hook for the persistence tier (`--memo-store`): the caller
-    /// warm-starts the memo from disk before the sweep and flushes it
-    /// after. Ignored when `use_edge_memo` is `false`. A disk-loaded edge
-    /// replays bit-identically to a recomputed one, so results are
-    /// unchanged either way.
-    pub shared_edges: Option<Arc<EdgeMemo>>,
 }
 
 impl Default for EvalCfg {
@@ -57,10 +37,6 @@ impl Default for EvalCfg {
             threads: crate::util::parallel::default_threads(),
             env: EnvConfig::default(),
             cuda: false,
-            use_cost_cache: true,
-            use_analysis_cache: true,
-            use_edge_memo: true,
-            shared_edges: None,
         }
     }
 }
@@ -156,26 +132,22 @@ fn assembly_error_prob(profile: &LlmProfile, op_count: usize,
     (suite_assembly_base(suite) + size_risk).min(0.80)
 }
 
-/// Evaluate one method over a task set. Pricing, program analysis and
-/// transitions go through one [`CostCache`] / [`AnalysisCache`] /
-/// [`EdgeMemo`] trio for the whole call (per the `cfg.use_*` flags); for
-/// caches shared across many calls, drive [`crate::eval::BatchRunner`]
-/// instead.
+/// Evaluate one method over a task set with a private, fully-cached
+/// [`Session`] (the default configuration). Convenience over
+/// [`evaluate_in`] for one-shot calls; for caches shared across many
+/// calls — or any cache policy / persistence at all — build a Session
+/// and use [`evaluate_in`] or drive [`crate::eval::BatchRunner`].
 pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                 cfg: &EvalCfg) -> SuiteResult {
-    let cost = if cfg.use_cost_cache { Some(CostCache::new()) } else { None };
-    let analysis =
-        if cfg.use_analysis_cache { Some(AnalysisCache::new()) } else { None };
-    let caches = EnvCaches {
-        cost: cost.as_ref(),
-        analysis: analysis.as_ref(),
-        edges: if cfg.use_edge_memo {
-            Some(cfg.shared_edges.clone()
-                     .unwrap_or_else(|| Arc::new(EdgeMemo::new())))
-        } else {
-            None
-        },
-    };
+    evaluate_in(method, tasks, spec, cfg, &Session::default())
+}
+
+/// Evaluate one method over a task set. Pricing, program analysis and
+/// transitions route through the [`Session`]'s memo trio (whichever
+/// tiers its policy enables); outcomes are bit-identical for every cache
+/// combination.
+pub fn evaluate_in(method: &Method, tasks: &[Task], spec: &GpuSpec,
+                   cfg: &EvalCfg, session: &Session) -> SuiteResult {
     let outcomes: Vec<TaskOutcome> = match method {
         // The learned-policy path needs the (non-Sync) PJRT runtime: run
         // it sequentially; every other method parallelises over tasks
@@ -198,16 +170,16 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
                     .map(|(ti, task)| {
                         let mut policy = PjrtPolicy::new(&rt, params.clone(), false);
                         mtmc_task(&mut MacroRunner::ObsPolicy(&mut policy),
-                                  *micro, task, spec, cfg, ti as u64, &caches)
+                                  *micro, task, spec, cfg, ti as u64, session)
                     })
                     .collect(),
                 None => par_map(tasks, cfg.threads, |ti, task| {
-                    evaluate_task(method, task, ti as u64, spec, cfg, &caches)
+                    evaluate_task(method, task, ti as u64, spec, cfg, session)
                 }),
             }
         }
         _ => par_map(tasks, cfg.threads, |ti, task| {
-            evaluate_task(method, task, ti as u64, spec, cfg, &caches)
+            evaluate_task(method, task, ti as u64, spec, cfg, session)
         }),
     };
     SuiteResult {
@@ -223,9 +195,10 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
 /// work item. `ti` is the task's index within its suite: it seeds the
 /// per-task RNG streams, so calling this with suite-order indices
 /// reproduces [`evaluate`] outcome-for-outcome regardless of thread count.
-/// `caches` is the sweep's shared memo trio — pricing, program analysis,
-/// and the transition transposition table ([`EnvCaches::none`] = run
-/// everything cold; the outcome is bit-identical either way).
+/// `session` carries the sweep's shared memo trio — pricing, program
+/// analysis, and the transition transposition table (a session with all
+/// tiers disabled runs everything cold; the outcome is bit-identical
+/// either way).
 ///
 /// The one divergence: `MacroKind::LearnedOrGreedy` always uses the greedy
 /// cost-model surrogate here (the PJRT runtime is not `Sync`, so the
@@ -233,37 +206,37 @@ pub fn evaluate(method: &Method, tasks: &[Task], spec: &GpuSpec,
 /// lookahead is the objective the policy converges to — see
 /// EXPERIMENTS.md).
 pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
-                     cfg: &EvalCfg, caches: &EnvCaches) -> TaskOutcome {
+                     cfg: &EvalCfg, session: &Session) -> TaskOutcome {
     match method {
         Method::Baseline { profile } => {
-            baseline_task(*profile, task, spec, cfg, ti, caches)
+            baseline_task(*profile, task, spec, cfg, ti, session)
         }
         Method::MtmcNoHier { micro } => {
-            no_hier_task(*micro, task, spec, cfg, ti, caches)
+            no_hier_task(*micro, task, spec, cfg, ti, session)
         }
         Method::Mtmc { macro_kind, micro } => match macro_kind {
             MacroKind::LearnedOrGreedy { .. } | MacroKind::GreedyLookahead => {
                 mtmc_task(&mut MacroRunner::Greedy, *micro, task, spec, cfg,
-                          ti, caches)
+                          ti, session)
             }
             MacroKind::Heuristic { label, mistake_rate } => {
                 let mut p = HeuristicPolicy::new(label, *mistake_rate, 4);
                 mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
-                          spec, cfg, ti, caches)
+                          spec, cfg, ti, session)
             }
             MacroKind::Freeform { label, wildness, mistake_rate } => {
                 let mut p = FreeformPolicy::new(label, *wildness, *mistake_rate);
                 mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut p), *micro,
-                                 task, spec, cfg, ti, 2.2, caches)
+                                 task, spec, cfg, ti, 2.2, session)
             }
             MacroKind::Random => {
                 let mut p = RandomPolicy;
                 mtmc_task(&mut MacroRunner::ObsPolicy(&mut p), *micro, task,
-                          spec, cfg, ti, caches)
+                          spec, cfg, ti, session)
             }
             MacroKind::Scripted(plan) => {
                 mtmc_task(&mut MacroRunner::Scripted(plan.clone()), *micro,
-                          task, spec, cfg, ti, caches)
+                          task, spec, cfg, ti, session)
             }
         },
     }
@@ -273,10 +246,10 @@ pub fn evaluate_task(method: &Method, task: &Task, ti: u64, spec: &GpuSpec,
 
 fn baseline_task(profile: ProfileId, task: &Task, spec: &GpuSpec,
                  cfg: &EvalCfg, ti: u64,
-                 caches: &EnvCaches) -> TaskOutcome {
+                 session: &Session) -> TaskOutcome {
     let prof = effective_profile(profile, task.suite);
     let shapes = crate::graph::infer_shapes(&task.graph);
-    let pricer = Pricer::new(caches.cost, &task.graph, &shapes);
+    let pricer = Pricer::new(session.cost(), &task.graph, &shapes);
     let mut rng = Rng::new(cfg.seed ^ (ti << 17) ^ 0xBA5E);
     // interface gate (TritonBench only): a mismatch is a call failure
     // with high probability regardless of the kernel body
@@ -323,11 +296,11 @@ fn score_program(p: &crate::kir::Program, task: &Task,
 /// Table 6: derive the greedy plan (what Macro Thinking would do), then
 /// hand ALL of it to the LLM in a single prompt.
 fn no_hier_task(micro: ProfileId, task: &Task, spec: &GpuSpec, cfg: &EvalCfg,
-                ti: u64, caches: &EnvCaches) -> TaskOutcome {
+                ti: u64, session: &Session) -> TaskOutcome {
     let prof = effective_profile(micro, task.suite);
     let shapes = crate::graph::infer_shapes(&task.graph);
-    let pricer = Pricer::new(caches.cost, &task.graph, &shapes);
-    let analyzer = Analyzer::new(caches.analysis, &task.graph, &shapes);
+    let pricer = Pricer::new(session.cost(), &task.graph, &shapes);
+    let analyzer = Analyzer::new(session.analysis(), &task.graph, &shapes);
     let plan = greedy_plan(task, &shapes, spec, cfg.env.max_steps, &pricer,
                            &analyzer);
     let mut rng = Rng::new(cfg.seed ^ (ti << 13) ^ 0x0441E4);
@@ -424,8 +397,8 @@ enum MacroRunner<'a> {
 /// Run one MTMC episode on a task, then the final-assembly check.
 fn mtmc_task(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
              spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
-             caches: &EnvCaches) -> TaskOutcome {
-    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0, caches)
+             session: &Session) -> TaskOutcome {
+    mtmc_task_scaled(runner, micro, task, spec, cfg, ti, 1.0, session)
 }
 
 /// `micro_err_mult` > 1 models macro proposals arriving *without* the
@@ -435,12 +408,12 @@ fn mtmc_task(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
 fn mtmc_task_scaled(runner: &mut MacroRunner, micro: ProfileId, task: &Task,
                     spec: &GpuSpec, cfg: &EvalCfg, ti: u64,
                     micro_err_mult: f64,
-                    caches: &EnvCaches) -> TaskOutcome {
+                    session: &Session) -> TaskOutcome {
     let prof = effective_profile(micro, task.suite).scaled(micro_err_mult);
-    let mut env = OptimEnv::with_caches(
+    let mut env = OptimEnv::with_session(
         task, spec.clone(), prof.clone(),
         EnvConfig { cuda: cfg.cuda, ..cfg.env.clone() },
-        cfg.seed ^ (ti << 21) ^ 0x47C0, caches.clone());
+        cfg.seed ^ (ti << 21) ^ 0x47C0, session);
     let mut rng = Rng::new(cfg.seed ^ (ti << 9) ^ 0x9097);
     let mut scripted_idx = 0usize;
     // failed edges at the *current* tree node (cleared when state moves)
@@ -574,9 +547,14 @@ mod tests {
                 continue; // edge succeeded at this seed; try another
             }
             let mut probe = ProbePolicy { plan: vec![a], masks: Vec::new() };
+            let cold = Session::builder()
+                .cost_cache(false)
+                .analysis_cache(false)
+                .edge_memo(false)
+                .build();
             mtmc_task_scaled(&mut MacroRunner::ObsPolicy(&mut probe),
                              ProfileId::Gpt4o, task, &spec, &cfg, 0, mult,
-                             &EnvCaches::none());
+                             &cold);
             assert!(probe.masks.len() >= 2, "episode ended after one step");
             assert!(probe.masks[0][a], "first offer must include the edge");
             assert!(!probe.masks[1][a],

@@ -9,8 +9,9 @@ mod harness;
 mod batch;
 
 pub use batch::{roster_sweep, BatchCfg, BatchJob, BatchRunner, JsonlSink};
-pub use harness::{evaluate, evaluate_task, greedy_best_action_excluding,
-                  EvalCfg, SuiteResult, TaskResult};
+pub use harness::{evaluate, evaluate_in, evaluate_task,
+                  greedy_best_action_excluding, EvalCfg, SuiteResult,
+                  TaskResult};
 pub use methods::{
     table3_methods, table4_methods, table6_variants, MacroKind, Method,
 };

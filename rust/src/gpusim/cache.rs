@@ -365,6 +365,13 @@ impl<V: Clone> ShardedMemo<V> {
         self.len() == 0
     }
 
+    /// Total residency bound (`max_per_shard × SHARDS`): the most entries
+    /// the memo can keep live, and therefore the most a
+    /// flush-after-eviction compaction pass can ever persist.
+    pub fn capacity(&self) -> usize {
+        self.max_per_shard * SHARDS
+    }
+
     /// Snapshot every resident `(key, value)` pair, locking one shard at
     /// a time. For persistence and diagnostics — not a hot path, and not
     /// an atomic view across shards (racing inserts may or may not be

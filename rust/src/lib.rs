@@ -31,6 +31,7 @@ pub mod transform;
 pub mod gpusim;
 pub mod microcode;
 pub mod env;
+pub mod engine;
 pub mod dataset;
 pub mod runtime;
 pub mod policy;

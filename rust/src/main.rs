@@ -8,13 +8,18 @@
 //!   optimize --task ID [...]      optimize one task, show the schedule story
 //!   eval --suite S [...]          evaluate a method over a suite
 //!   table N                       regenerate paper table N (3,4,5,6,7)
+//!
+//! Every optimizing command builds one [`Session`] from the shared
+//! cache/persistence flags and threads it down the stack; the memo trio,
+//! the `--memo-store` tier, and the stats report all live there.
 
 use anyhow::{bail, Context, Result};
 use qimeng_mtmc::dataset::{generate, save_trajectories, DatasetCfg};
-use qimeng_mtmc::env::{flush_edge_memo, warm_start_edge_memo, EdgeMemo};
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::eval::{
-    evaluate, roster_sweep, table3_methods, table4_methods, table6_variants,
-    BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind, Method, SuiteResult,
+    evaluate_in, roster_sweep, table3_methods, table4_methods,
+    table6_variants, BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind,
+    Method,
 };
 use qimeng_mtmc::gpusim::GpuSpec;
 use qimeng_mtmc::kir::{lower_naive, render, TargetLang};
@@ -62,19 +67,25 @@ COMMANDS:
   train [--iters 60] [--tasks 40] [--out data/policy.bin] [--gpu A100]
         [--memo-store F]
   optimize --task kb2_000_gemm_bias_act [--gpu A100] [--show-code]
-           [--memo-store F]
+           [--memo-store F] [--stats-json F]
   eval --suite kb2 [--gpu A100] [--method mtmc|greedy|<profile>] [--limit N]
-       [--threads N] [--jsonl out.jsonl] [--memo-store F]
+       [--threads N] [--jsonl out.jsonl] [--memo-store F] [--stats-json F]
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              (runs through the BatchRunner; pricing,
                               program analysis and transitions go through
-                              the sweep's CostCache / AnalysisCache /
-                              EdgeMemo unless the matching --no-* flag is
-                              given; hit/miss/eviction stats on stderr;
+                              the run's Session — one CostCache /
+                              AnalysisCache / EdgeMemo trio shared by the
+                              whole sweep unless the matching --no-* flag
+                              is given; hit/miss/eviction stats on stderr,
+                              or as one JSON object via --stats-json;
                               --memo-store persists the EdgeMemo across
-                              runs: warm-started at startup, flushed at
-                              exit, corrupt/missing files = cold start)
+                              runs: warm-started at startup, compacted to
+                              the live entries and flushed at exit,
+                              corrupt/missing files = cold start; the
+                              QIMENG_MEMO_CAPACITY env var bounds the
+                              memo's entry count)
   table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--memo-store F]
+       [--stats-json F]
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              batched table sweep
   table 5|7                  pointer to the bench binaries
@@ -96,6 +107,50 @@ fn suite_tasks(name: &str) -> Result<Vec<Task>> {
         "corpus" => training_corpus(200),
         other => bail!("unknown suite `{other}`"),
     })
+}
+
+/// Build the run's [`Session`] from the shared cache/persistence flags:
+/// the `--no-*` escape hatches disable individual memo tiers and
+/// `--memo-store <path>` adds the disk persistence tier (ignored under
+/// `--no-edge-memo`, which leaves nothing to persist).
+fn session_from_args(args: &Args) -> Session {
+    Session::builder()
+        .cost_cache(!args.has("no-cost-cache"))
+        .analysis_cache(!args.has("no-analysis-cache"))
+        .edge_memo(!args.has("no-edge-memo"))
+        .memo_store(args.get("memo-store").map(std::path::PathBuf::from))
+        .build()
+}
+
+/// End-of-run bookkeeping shared by every command: flush the memo store
+/// (a compacting pass — only live entries are written), print the
+/// per-memo stderr report, and honor `--stats-json <path>` by writing
+/// the full registry as one JSON object.
+fn finish_session(args: &Args, session: &Session) -> Result<()> {
+    session.finish();
+    let stats = session.stats();
+    stats.print();
+    if let Some(path) = args.get("stats-json") {
+        std::fs::write(path, format!("{}\n", stats.to_json()))
+            .with_context(|| format!("write --stats-json {path}"))?;
+    }
+    Ok(())
+}
+
+/// BatchRunner configuration shared by `eval` and `table`, borrowing the
+/// run's session for the whole sweep.
+fn batch_runner<'s>(args: &Args, session: &'s Session)
+                    -> Result<BatchRunner<'s>> {
+    BatchRunner::new(
+        BatchCfg {
+            threads: args.usize_or(
+                "threads",
+                qimeng_mtmc::util::parallel::default_threads(),
+            ),
+            sink: args.get("jsonl").map(std::path::PathBuf::from),
+        },
+        session,
+    )
 }
 
 fn cmd_specs() -> Result<()> {
@@ -152,13 +207,7 @@ fn cmd_tasks(args: &Args) -> Result<()> {
 fn cmd_dataset(args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "data/trees.bin"));
     let n_tasks = args.usize_or("tasks", 200);
-    // --memo-store: persist one shared EdgeMemo across generation runs
-    // (the default, without the flag, stays per-tree tables)
-    let shared = memo_store_path(args).map(|p| {
-        let m = std::sync::Arc::new(EdgeMemo::new());
-        warm_start_edge_memo(&m, &p);
-        (m, p)
-    });
+    let session = session_from_args(args);
     let cfg = DatasetCfg {
         per_task: args.usize_or("per-task", 64),
         seed: args.u64_or("seed", 0xDA7A),
@@ -166,7 +215,6 @@ fn cmd_dataset(args: &Args) -> Result<()> {
             "threads",
             qimeng_mtmc::util::parallel::default_threads(),
         ),
-        shared_edges: shared.as_ref().map(|(m, _)| std::sync::Arc::clone(m)),
         ..Default::default()
     };
     let tasks = training_corpus(n_tasks);
@@ -176,11 +224,9 @@ fn cmd_dataset(args: &Args) -> Result<()> {
         n_tasks, cfg.per_task, spec.name
     );
     let t0 = std::time::Instant::now();
-    let (trajs, stats) = generate(&tasks, &spec, ProfileId::GeminiFlash25, &cfg);
-    if let Some((m, p)) = &shared {
-        print_memo_stats("edge-memo", &m.stats());
-        flush_edge_memo(m, p);
-    }
+    let (trajs, stats) =
+        generate(&tasks, &spec, ProfileId::GeminiFlash25, &cfg, &session);
+    finish_session(args, &session)?;
     save_trajectories(&trajs, &out)?;
     let dt = t0.elapsed().as_secs_f64();
     println!(
@@ -205,26 +251,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         .context("load artifacts (run `make artifacts`)")?;
     let tasks = training_corpus(args.usize_or("tasks", 40));
     let spec = gpu(args)?;
-    // --memo-store: persist one shared EdgeMemo across training runs (the
-    // default, without the flag, stays per-tree tables)
-    let shared = memo_store_path(args).map(|p| {
-        let m = std::sync::Arc::new(EdgeMemo::new());
-        warm_start_edge_memo(&m, &p);
-        (m, p)
-    });
+    let session = session_from_args(args);
     let cfg = PpoCfg {
         iterations: args.usize_or("iters", 60),
         seed: args.u64_or("seed", 0x9902),
-        shared_edges: shared.as_ref().map(|(m, _)| std::sync::Arc::clone(m)),
         ..Default::default()
     };
     let params = ParamSet::init(&rt.meta.raw, cfg.seed ^ 0x11)?;
     let mut state = TrainState::new(params);
-    let logs = train_ppo(&rt, &mut state, &tasks, &spec, &cfg)?;
-    if let Some((m, p)) = &shared {
-        print_memo_stats("edge-memo", &m.stats());
-        flush_edge_memo(m, p);
-    }
+    let logs = train_ppo(&rt, &mut state, &tasks, &spec, &cfg, &session)?;
+    finish_session(args, &session)?;
     let default_out = paths::default_policy_path();
     let out = std::path::PathBuf::from(
         args.get_or("out", default_out.to_str().unwrap()),
@@ -263,26 +299,14 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     // one-task session: the lookahead below re-prices sibling candidates
     // and re-analyzes the state every step, so even here the memo trio
     // pays for itself
-    let cost_cache = qimeng_mtmc::gpusim::CostCache::new();
-    let analysis_cache = qimeng_mtmc::transform::AnalysisCache::new();
-    let edge_memo = std::sync::Arc::new(qimeng_mtmc::env::EdgeMemo::new());
-    let store = memo_store_path(args);
-    if let Some(p) = &store {
-        warm_start_edge_memo(&edge_memo, p);
-    }
-    let caches = qimeng_mtmc::env::EnvCaches {
-        cost: (!args.has("no-cost-cache")).then_some(&cost_cache),
-        analysis: (!args.has("no-analysis-cache")).then_some(&analysis_cache),
-        edges: (!args.has("no-edge-memo"))
-            .then(|| std::sync::Arc::clone(&edge_memo)),
-    };
-    let mut env = qimeng_mtmc::env::OptimEnv::with_caches(
+    let session = session_from_args(args);
+    let mut env = qimeng_mtmc::env::OptimEnv::with_session(
         task,
         spec.clone(),
         qimeng_mtmc::microcode::LlmProfile::get(ProfileId::GeminiPro25),
         cfg.env.clone(),
         cfg.seed,
-        caches,
+        &session,
     );
     println!("task {} on {} | eager {:.1}us", task.id, spec.name, env.eager_us);
     println!("step  0: naive lowering, speedup {:.2}x", env.state.speedup);
@@ -313,12 +337,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         step += 1;
     }
     println!("best speedup {:.2}x over eager", env.state.best_speedup);
-    print_cache_stats(&cost_cache);
-    print_memo_stats("analysis-cache", &analysis_cache.stats());
-    print_memo_stats("edge-memo", &edge_memo.stats());
-    if let Some(p) = &store {
-        flush_edge_memo(&edge_memo, p);
-    }
+    finish_session(args, &session)?;
     if args.has("show-code") {
         let lang = if args.get_or("lang", "triton") == "cuda" {
             TargetLang::Cuda
@@ -337,98 +356,15 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// BatchRunner configuration shared by `eval` and `table`.
-fn batch_runner(args: &Args) -> Result<BatchRunner> {
-    BatchRunner::new(BatchCfg {
-        threads: args.usize_or(
-            "threads",
-            qimeng_mtmc::util::parallel::default_threads(),
-        ),
-        sink: args.get("jsonl").map(std::path::PathBuf::from),
-    })
-}
-
-/// The `--memo-store <path>` persistence tier, if requested. Persisting
-/// only makes sense when the memo is in use, so `--no-edge-memo` disables
-/// the store along with the memo itself.
-fn memo_store_path(args: &Args) -> Option<std::path::PathBuf> {
-    if args.has("no-edge-memo") {
-        return None;
-    }
-    args.get("memo-store").map(std::path::PathBuf::from)
-}
-
-/// Run a sweep with the optional `--memo-store` tier wrapped around it:
-/// warm-start the runner's shared EdgeMemo from disk before the jobs,
-/// flush it back after. Missing/corrupt stores degrade to a cold memo.
-fn run_with_store(args: &Args, runner: &BatchRunner, jobs: &[BatchJob])
-                  -> Vec<SuiteResult> {
-    let store = memo_store_path(args);
-    if let Some(p) = &store {
-        runner.warm_edge_store(p);
-    }
-    let results = runner.run(jobs);
-    if let Some(p) = &store {
-        runner.flush_edge_store(p);
-    }
-    results
-}
-
-/// Honor the `--no-*-cache` escape hatches on every job of a sweep.
-fn apply_cache_flag(args: &Args, jobs: &mut [BatchJob]) {
-    for j in jobs.iter_mut() {
-        if args.has("no-cost-cache") {
-            j.cfg.use_cost_cache = false;
-        }
-        if args.has("no-analysis-cache") {
-            j.cfg.use_analysis_cache = false;
-        }
-        if args.has("no-edge-memo") {
-            j.cfg.use_edge_memo = false;
-        }
-    }
-}
-
-/// One memo's hit/miss/eviction summary line (silent when untouched).
-/// Memos warm-started from a `--memo-store` file also report how many
-/// hits were served by disk-loaded entries.
-fn print_memo_stats(name: &str, s: &qimeng_mtmc::gpusim::MemoStats) {
-    if s.lookups > 0 {
-        let disk = if s.disk_hits > 0 {
-            format!(", {} disk hits", s.disk_hits)
-        } else {
-            String::new()
-        };
-        eprintln!(
-            "{name}: {} hits / {} misses ({:.1}% hit rate, {} evictions{disk})",
-            s.hits, s.misses, 100.0 * s.hit_rate(), s.evictions
-        );
-    }
-}
-
-/// Pricing-cache hit/miss summary for a finished session.
-fn print_cache_stats(cache: &qimeng_mtmc::gpusim::CostCache) {
-    print_memo_stats("cost-cache", &cache.full_stats());
-}
-
-/// All three memo summaries for a finished BatchRunner sweep.
-fn print_runner_stats(runner: &BatchRunner) {
-    print_cache_stats(runner.cache());
-    print_memo_stats("analysis-cache", &runner.analysis().stats());
-    print_memo_stats("edge-memo", &runner.edge_memo().stats());
-}
-
 fn cmd_eval(args: &Args) -> Result<()> {
     let mut tasks = suite_tasks(args.get_or("suite", "kb2"))?;
     if let Some(limit) = args.get("limit") {
         tasks.truncate(limit.parse()?);
     }
     let spec = gpu(args)?;
+    let session = session_from_args(args);
     let cfg = EvalCfg {
         seed: args.u64_or("seed", 0xE7A1),
-        use_cost_cache: !args.has("no-cost-cache"),
-        use_analysis_cache: !args.has("no-analysis-cache"),
-        use_edge_memo: !args.has("no-edge-memo"),
         ..Default::default()
     };
     let method = match args.get_or("method", "mtmc") {
@@ -446,11 +382,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
     };
     // The learned policy (pjrt builds with trained params + artifacts) is
     // not Sync and cannot ride the sharded unit queue: route exactly that
-    // case through the sequential `evaluate` path so "mtmc" still means
-    // the learned policy when one exists. The probe stays cheap (params
-    // parse + meta.json existence) — evaluate() itself performs the real
-    // artifact compilation, and falls back to the same greedy surrogate
-    // if that load fails. Stub builds always take the BatchRunner arm.
+    // case through the sequential `evaluate_in` path so "mtmc" still
+    // means the learned policy when one exists. The probe stays cheap
+    // (params parse + meta.json existence) — evaluate_in() itself
+    // performs the real artifact compilation, and falls back to the same
+    // greedy surrogate if that load fails. Stub builds always take the
+    // BatchRunner arm. Both arms share the one session, so warm-start,
+    // flush, and stats behave identically either way.
     let learned_available = matches!(
         &method,
         Method::Mtmc {
@@ -464,32 +402,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
             "(trained params + artifacts present: sequential evaluate() \
              path — learned policy if the runtime loads, greedy otherwise)"
         );
-        let store = memo_store_path(args);
-        let shared = std::sync::Arc::new(EdgeMemo::new());
-        if let Some(p) = &store {
-            warm_start_edge_memo(&shared, p);
-        }
-        let cfg = EvalCfg {
-            shared_edges: Some(std::sync::Arc::clone(&shared)),
-            ..cfg
-        };
-        let r = evaluate(&method, &tasks, &spec, &cfg);
-        print_memo_stats("edge-memo", &shared.stats());
-        if let Some(p) = &store {
-            flush_edge_memo(&shared, p);
-        }
-        r
+        evaluate_in(&method, &tasks, &spec, &cfg, &session)
     } else {
-        let runner = batch_runner(args)?;
+        let runner = batch_runner(args, &session)?;
         let jobs = [BatchJob { method, gpu: spec, tasks: tasks.into(), cfg }];
-        let results = run_with_store(args, &runner, &jobs);
-        print_runner_stats(&runner);
+        let results = runner.run(&jobs);
         anyhow::ensure!(
             !runner.sink_failed(),
             "JSONL sink reported I/O failures; output is truncated"
         );
         results.into_iter().next().unwrap()
     };
+    finish_session(args, &session)?;
     let mut t = Table::new(
         &format!("{} on {} ({})", r.method, r.suite, r.gpu),
         &["Method", "CallAcc(%)", "ExecAcc(%)", "fast1/fast2(%)", "Mean Speedup"],
@@ -532,7 +456,8 @@ fn cmd_table(args: &Args) -> Result<()> {
         3 => {
             let methods = table3_methods(Some(paths::default_policy_path()));
             let spec = gpu(args)?;
-            let runner = batch_runner(args)?;
+            let session = session_from_args(args);
+            let runner = batch_runner(args, &session)?;
             let blocks: Vec<(GpuSpec, Vec<Task>)> = (1..=3usize)
                 .map(|level| {
                     let mut tasks = kernelbench_level(level);
@@ -540,9 +465,8 @@ fn cmd_table(args: &Args) -> Result<()> {
                     (spec.clone(), tasks)
                 })
                 .collect();
-            let mut jobs = roster_sweep(&methods, &blocks);
-            apply_cache_flag(args, &mut jobs);
-            let results = run_with_store(args, &runner, &jobs);
+            let jobs = roster_sweep(&methods, &blocks);
+            let results = runner.run(&jobs);
             for (li, level) in (1..=3usize).enumerate() {
                 let mut t = Table::new(
                     &format!(
@@ -559,16 +483,17 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
                 print!("{}", t.render());
             }
-            print_runner_stats(&runner);
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
             );
+            finish_session(args, &session)?;
         }
         4 => {
             let methods = table4_methods(Some(paths::default_policy_path()));
             let spec = GpuSpec::a100();
-            let runner = batch_runner(args)?;
+            let session = session_from_args(args);
+            let runner = batch_runner(args, &session)?;
             let suites = [
                 ("TRITONBENCH-G", tritonbench_g()),
                 ("TRITONBENCH-T", tritonbench_t()),
@@ -581,9 +506,8 @@ fn cmd_table(args: &Args) -> Result<()> {
                     (spec.clone(), tasks)
                 })
                 .collect();
-            let mut jobs = roster_sweep(&methods, &blocks);
-            apply_cache_flag(args, &mut jobs);
-            let results = run_with_store(args, &runner, &jobs);
+            let jobs = roster_sweep(&methods, &blocks);
+            let results = runner.run(&jobs);
             for (si, (name, _)) in suites.iter().enumerate() {
                 let mut t = Table::new(
                     &format!(
@@ -599,15 +523,16 @@ fn cmd_table(args: &Args) -> Result<()> {
                 }
                 print!("{}", t.render());
             }
-            print_runner_stats(&runner);
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
             );
+            finish_session(args, &session)?;
         }
         6 => {
             let spec = GpuSpec::a100();
-            let runner = batch_runner(args)?;
+            let session = session_from_args(args);
+            let runner = batch_runner(args, &session)?;
             let variants = table6_variants();
             let mut jobs = Vec::new();
             for (_, method) in &variants {
@@ -617,8 +542,7 @@ fn cmd_table(args: &Args) -> Result<()> {
                     jobs.push(BatchJob::new(method.clone(), spec.clone(), tasks));
                 }
             }
-            apply_cache_flag(args, &mut jobs);
-            let results = run_with_store(args, &runner, &jobs);
+            let results = runner.run(&jobs);
             let mut t = Table::new(
                 &format!(
                     "Table 6 — multi-step vs single-pass on A100 \
@@ -639,11 +563,11 @@ fn cmd_table(args: &Args) -> Result<()> {
                 t.row(cells);
             }
             print!("{}", t.render());
-            print_runner_stats(&runner);
             anyhow::ensure!(
                 !runner.sink_failed(),
                 "JSONL sink reported I/O failures; output is truncated"
             );
+            finish_session(args, &session)?;
         }
         5 | 7 => println!(
             "table {n} is regenerated by `cargo bench --bench table{n}` \

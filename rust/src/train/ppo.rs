@@ -2,13 +2,14 @@
 //! artifact → repeat.
 
 use super::gae::{compute_gae, normalize};
-use crate::env::{EdgeMemo, EnvCaches, EnvConfig, TreeEnv};
-use crate::gpusim::{CostCache, GpuSpec};
+use crate::engine::Session;
+use crate::env::{EnvConfig, TreeEnv};
+use crate::gpusim::GpuSpec;
 use crate::microcode::{LlmProfile, ProfileId};
 use crate::runtime::{PjrtRuntime, TrainState};
 use crate::runtime::TrainBatch;
 use crate::tasks::Task;
-use crate::transform::{AnalysisCache, ACTION_DIM};
+use crate::transform::ACTION_DIM;
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -30,12 +31,6 @@ pub struct PpoCfg {
     /// artifact (§Perf L3 optimization: amortizes PJRT dispatch, ~0.25 ms
     /// per call, across `eval_batch` steps).
     pub batched_rollouts: bool,
-    /// Share one [`EdgeMemo`] across every task tree instead of the
-    /// default per-tree tables — the `--memo-store` persistence hook: the
-    /// caller warm-starts it from disk before training and flushes it
-    /// after, so replayed edges skip micro-coding across runs. Replay is
-    /// bit-identical either way.
-    pub shared_edges: Option<std::sync::Arc<EdgeMemo>>,
 }
 
 impl Default for PpoCfg {
@@ -50,7 +45,6 @@ impl Default for PpoCfg {
             profile: ProfileId::GeminiFlash25,
             log_every: 5,
             batched_rollouts: true,
-            shared_edges: None,
         }
     }
 }
@@ -94,13 +88,18 @@ impl Buffer {
 
 /// Train the policy in `state` over `tasks`; returns the per-iteration
 /// log. Rollouts use sampled decoding through the B=1 artifact; updates
-/// run the fused train_step at the artifact's fixed batch size.
+/// run the fused train_step at the artifact's fixed batch size. The
+/// [`Session`] carries the run's memo trio — analysis/cost caches shared
+/// by every tree, and (when enabled) one shared [`crate::env::EdgeMemo`]
+/// pooling transitions across trees and, via `--memo-store`, across runs.
+/// Edge replay is bit-identical to live stepping either way.
 pub fn train_ppo(
     rt: &PjrtRuntime,
     state: &mut TrainState,
     tasks: &[Task],
     spec: &GpuSpec,
     cfg: &PpoCfg,
+    session: &Session,
 ) -> Result<Vec<IterLog>> {
     assert_eq!(rt.meta.act_dim, ACTION_DIM, "artifact/action-space mismatch");
     let batch_size = rt.meta.train_batch;
@@ -109,27 +108,20 @@ pub fn train_ppo(
     let mut logs = Vec::new();
 
     // one warm tree per task, reused across iterations; the trees share
-    // one analysis/cost cache pair for the whole run, so replayed visits
-    // skip micro-coding (per-tree EdgeMemo) *and* masks/observations stop
+    // the session's analysis/cost caches for the whole run, so replayed
+    // visits skip micro-coding (EdgeMemo) *and* masks/observations stop
     // re-walking and re-pricing programs (bit-identical either way)
-    let analysis_cache = AnalysisCache::new();
-    let cost_cache = CostCache::new();
     let mut envs: Vec<TreeEnv> = tasks
         .iter()
         .enumerate()
         .map(|(i, t)| {
-            TreeEnv::with_caches(
+            TreeEnv::with_session(
                 t,
                 spec.clone(),
                 LlmProfile::get(cfg.profile),
                 cfg.env.clone(),
                 cfg.seed ^ ((i as u64) << 32),
-                EnvCaches {
-                    cost: Some(&cost_cache),
-                    analysis: Some(&analysis_cache),
-                    // None: each tree owns its replay table
-                    edges: cfg.shared_edges.clone(),
-                },
+                session,
             )
         })
         .collect();

@@ -1,7 +1,9 @@
 //! BatchRunner integration: thread-count determinism (the guard for the
 //! sharded-queue refactor of `par_map` + `BatchRunner`), equivalence with
-//! the one-shot `evaluate`, and the JSONL sink contract.
+//! the one-shot `evaluate`, and the JSONL sink contract. Cache policy
+//! lives on the [`Session`] each runner borrows.
 
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::env::{CachedEdge, EdgeMemo, StepSignal};
 use qimeng_mtmc::eval::{
     evaluate, BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind, Method,
@@ -61,10 +63,12 @@ fn batch_runner_threads_1_vs_8_byte_identical_metrics() {
         job.cfg = EvalCfg { seed, ..Default::default() };
         vec![job]
     };
-    let r1 = BatchRunner::new(BatchCfg { threads: 1, sink: None })
+    let s1 = Session::default();
+    let r1 = BatchRunner::new(BatchCfg { threads: 1, sink: None }, &s1)
         .unwrap()
         .run(&jobs(0xFEED));
-    let r8 = BatchRunner::new(BatchCfg { threads: 8, sink: None })
+    let s8 = Session::default();
+    let r8 = BatchRunner::new(BatchCfg { threads: 8, sink: None }, &s8)
         .unwrap()
         .run(&jobs(0xFEED));
     assert_eq!(r1[0].metrics, r8[0].metrics);
@@ -83,7 +87,10 @@ fn batch_sweep_matches_per_suite_evaluate() {
             kb2,
         ),
     ];
-    let runner = BatchRunner::new(BatchCfg { threads: 6, sink: None }).unwrap();
+    let session = Session::default();
+    let runner =
+        BatchRunner::new(BatchCfg { threads: 6, sink: None }, &session)
+            .unwrap();
     let batched = runner.run(&jobs);
     for (job, got) in jobs.iter().zip(&batched) {
         let direct = evaluate(&job.method, &job.tasks, &job.gpu, &job.cfg);
@@ -93,32 +100,31 @@ fn batch_sweep_matches_per_suite_evaluate() {
 
 /// The pricing cache must be invisible in results: a greedy-lookahead
 /// MTMC sweep (the cache's hottest consumer) produces byte-identical
-/// per-task outcomes with the cache on and off, at any thread count.
+/// per-task outcomes with the session's cost tier on and off, at any
+/// thread count.
 #[test]
 fn cost_cache_on_off_byte_identical_across_thread_counts() {
     let tasks = kernelbench_level(2)[..8].to_vec();
-    let mk_jobs = |use_cache: bool| -> Vec<BatchJob> {
+    let mk_jobs = || -> Vec<BatchJob> {
         let mut job = BatchJob::new(mtmc(), GpuSpec::a100(), tasks.clone());
-        job.cfg = EvalCfg {
-            seed: 0xCAFE,
-            use_cost_cache: use_cache,
-            ..Default::default()
-        };
+        job.cfg = EvalCfg { seed: 0xCAFE, ..Default::default() };
         vec![job]
     };
     let mut runs = Vec::new();
     for threads in [1, 8] {
         for use_cache in [true, false] {
+            let session = Session::builder().cost_cache(use_cache).build();
             let runner =
-                BatchRunner::new(BatchCfg { threads, sink: None }).unwrap();
-            let r = runner.run(&mk_jobs(use_cache));
-            let (hits, misses) = runner.cache().stats();
+                BatchRunner::new(BatchCfg { threads, sink: None }, &session)
+                    .unwrap();
+            let r = runner.run(&mk_jobs());
             if use_cache {
+                let (hits, _) = session.cost().unwrap().stats();
                 assert!(hits > 0,
                         "greedy lookahead must hit the pricing cache");
             } else {
-                assert_eq!((hits, misses), (0, 0),
-                           "--no-cost-cache must keep the cache silent");
+                assert!(session.cost().is_none(),
+                        "cost_cache(false) must not build the cache");
             }
             runs.push(r.into_iter().next().unwrap());
         }
@@ -143,10 +149,11 @@ fn jsonl_sink_records_are_parseable_and_complete() {
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("kb1.jsonl");
     let tasks = kernelbench_level(1)[..6].to_vec();
-    let runner = BatchRunner::new(BatchCfg {
-        threads: 4,
-        sink: Some(path.clone()),
-    })
+    let session = Session::default();
+    let runner = BatchRunner::new(
+        BatchCfg { threads: 4, sink: Some(path.clone()) },
+        &session,
+    )
     .unwrap();
     let results = runner.run(&[BatchJob::new(mtmc(), GpuSpec::a100(), tasks)]);
     let text = std::fs::read_to_string(&path).unwrap();
@@ -166,9 +173,10 @@ fn jsonl_sink_records_are_parseable_and_complete() {
 
 /// The tentpole guard at the BatchRunner level: a sweep whose methods
 /// walk identical episode trees (the greedy surrogate under two macro
-/// labels) through one shared [`EdgeMemo`] must stream byte-identical
-/// JSONL outcomes at every thread count — the memo is populated in
-/// whatever order the threads race, but replays are deterministic.
+/// labels) through one session-shared [`EdgeMemo`] must stream
+/// byte-identical JSONL outcomes at every thread count — the memo is
+/// populated in whatever order the threads race, but replays are
+/// deterministic.
 #[test]
 fn edge_memo_shared_across_threads_identical_jsonl() {
     let dir = std::env::temp_dir().join("qimeng_edge_memo_threads");
@@ -191,13 +199,14 @@ fn edge_memo_shared_across_threads_identical_jsonl() {
     let mut sorted_lines: Vec<Vec<String>> = Vec::new();
     for (i, threads) in [1usize, 2, 8].into_iter().enumerate() {
         let path = dir.join(format!("t{threads}.jsonl"));
-        let runner = BatchRunner::new(BatchCfg {
-            threads,
-            sink: Some(path.clone()),
-        })
+        let session = Session::default();
+        let runner = BatchRunner::new(
+            BatchCfg { threads, sink: Some(path.clone()) },
+            &session,
+        )
         .unwrap();
         runner.run(&jobs);
-        let stats = runner.edge_memo().stats();
+        let stats = session.edges().unwrap().stats();
         assert_eq!(stats.hits + stats.misses, stats.lookups,
                    "stats identity broken at {threads} threads");
         assert!(stats.hits > 0,
@@ -220,31 +229,31 @@ fn edge_memo_shared_across_threads_identical_jsonl() {
 #[test]
 fn edge_memo_and_analysis_cache_on_off_byte_identical() {
     let tasks = kernelbench_level(2)[..6].to_vec();
-    let mk_jobs = |edge: bool, analysis: bool| -> Vec<BatchJob> {
+    let mk_jobs = || -> Vec<BatchJob> {
         let mut job = BatchJob::new(mtmc(), GpuSpec::h100(), tasks.clone());
-        job.cfg = EvalCfg {
-            seed: 0xBEEF,
-            use_edge_memo: edge,
-            use_analysis_cache: analysis,
-            ..Default::default()
-        };
+        job.cfg = EvalCfg { seed: 0xBEEF, ..Default::default() };
         vec![job]
     };
     let mut runs = Vec::new();
     for (edge, analysis) in [(true, true), (true, false), (false, true),
                              (false, false)] {
-        let runner = BatchRunner::new(BatchCfg { threads: 4, sink: None })
-            .unwrap();
-        let r = runner.run(&mk_jobs(edge, analysis));
+        let session = Session::builder()
+            .edge_memo(edge)
+            .analysis_cache(analysis)
+            .build();
+        let runner =
+            BatchRunner::new(BatchCfg { threads: 4, sink: None }, &session)
+                .unwrap();
+        let r = runner.run(&mk_jobs());
         if !edge {
-            assert_eq!(runner.edge_memo().stats().lookups, 0,
-                       "--no-edge-memo must keep the table silent");
+            assert!(session.edges().is_none(),
+                    "edge_memo(false) must not build the table");
         }
         if !analysis {
-            assert_eq!(runner.analysis().stats().lookups, 0,
-                       "--no-analysis-cache must keep the cache silent");
+            assert!(session.analysis().is_none(),
+                    "analysis_cache(false) must not build the cache");
         } else {
-            assert!(runner.analysis().stats().hits > 0,
+            assert!(session.analysis().unwrap().stats().hits > 0,
                     "episodes revisit states; analysis must hit");
         }
         runs.push(r.into_iter().next().unwrap());
@@ -263,17 +272,20 @@ fn edge_memo_and_analysis_cache_on_off_byte_identical() {
 }
 
 /// Stats sanity: `hits + misses == lookups` always, and eviction counts
-/// are monotone across repeated sweeps over one runner.
+/// are monotone across repeated sweeps over one session.
 #[test]
 fn edge_memo_stats_sane_and_evictions_monotone() {
     let tasks = kernelbench_level(1)[..6].to_vec();
     let jobs = vec![BatchJob::new(mtmc(), GpuSpec::a100(), tasks)];
-    let runner = BatchRunner::new(BatchCfg { threads: 3, sink: None }).unwrap();
+    let session = Session::default();
+    let runner =
+        BatchRunner::new(BatchCfg { threads: 3, sink: None }, &session)
+            .unwrap();
     runner.run(&jobs);
-    let s1 = runner.edge_memo().stats();
+    let s1 = session.edges().unwrap().stats();
     assert_eq!(s1.hits + s1.misses, s1.lookups);
     runner.run(&jobs);
-    let s2 = runner.edge_memo().stats();
+    let s2 = session.edges().unwrap().stats();
     assert_eq!(s2.hits + s2.misses, s2.lookups);
     assert!(s2.lookups > s1.lookups, "second sweep must look edges up");
     assert_eq!(s2.misses, s1.misses,

@@ -4,6 +4,7 @@
 
 use qimeng_mtmc::dataset::{generate, load_trajectories, save_trajectories,
                            DatasetCfg};
+use qimeng_mtmc::engine::Session;
 use qimeng_mtmc::env::{EnvConfig, TreeEnv};
 use qimeng_mtmc::eval::{evaluate, EvalCfg, MacroKind, Method};
 use qimeng_mtmc::gpusim::GpuSpec;
@@ -16,7 +17,7 @@ fn dataset_roundtrips_and_replays_through_tree_env() {
     let cfg = DatasetCfg { per_task: 4, threads: 2, ..Default::default() };
     let spec = GpuSpec::a100();
     let (trajs, stats) = generate(&corpus, &spec, ProfileId::GeminiFlash25,
-                                  &cfg);
+                                  &cfg, &Session::default());
     assert_eq!(stats.trajectories, 12);
 
     let dir = std::env::temp_dir().join("qimeng_pipeline_test");

@@ -3,12 +3,10 @@
 //! model sanity, reward shaping, serialization round-trips, region
 //! analysis stability.
 
-use std::sync::Arc;
-
 use qimeng_mtmc::dataset::{load_trajectories, save_trajectories, TrajStep,
                            Trajectory};
-use qimeng_mtmc::env::{load_edge_memo, save_edge_memo, warm_start_edge_memo,
-                       EdgeMemo, EnvCaches, EnvConfig, OptimEnv};
+use qimeng_mtmc::engine::Session;
+use qimeng_mtmc::env::{EnvConfig, OptimEnv};
 use qimeng_mtmc::gpusim::{graph_fingerprint, kernel_time_us,
                           program_time_us, CostCache, GpuSpec};
 use qimeng_mtmc::graph::infer_shapes;
@@ -304,25 +302,33 @@ fn prop_cost_cache_hit_identical_to_cold_miss() {
 /// already-populated cache.
 #[test]
 fn prop_cached_episode_bitwise_identical_to_cold() {
-    fn mk<'a>(task: &'a Task, seed: u64, cache: Option<&'a CostCache>)
+    fn mk<'a>(task: &'a Task, seed: u64, session: &'a Session)
               -> OptimEnv<'a> {
-        OptimEnv::with_cache(
+        OptimEnv::with_session(
             task,
             GpuSpec::a100(),
             LlmProfile::get(ProfileId::GeminiFlash25),
             EnvConfig::default(),
             seed,
-            cache,
+            session,
         )
     }
     check(909, 24, gen_seq, |seq: &ActionSeq| {
         let task = &tasks()[seq.task_idx % tasks().len()];
-        let cache = CostCache::new();
-        // two warm passes: the second prices everything from the memo
+        let off = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .edge_memo(false)
+            .build();
+        let cached = Session::builder()
+            .analysis_cache(false)
+            .edge_memo(false)
+            .build();
+        // two warm passes: the second prices everything from the
+        // cached session's persistent CostCache
         for _pass in 0..2 {
-            let mut cold = mk(task, seq.quality_milli as u64, None);
-            let mut warm =
-                mk(task, seq.quality_milli as u64, Some(&cache));
+            let mut cold = mk(task, seq.quality_milli as u64, &off);
+            let mut warm = mk(task, seq.quality_milli as u64, &cached);
             prop_assert!(
                 cold.eager_us.to_bits() == warm.eager_us.to_bits(),
                 "{}: eager baseline diverged", task.id
@@ -417,15 +423,15 @@ struct EpisodeTrace {
     best_program: Program,
 }
 
-fn run_episode(task: &Task, case: &EpisodeCase, caches: EnvCaches)
+fn run_episode(task: &Task, case: &EpisodeCase, session: &Session)
                -> EpisodeTrace {
-    let mut env = OptimEnv::with_caches(
+    let mut env = OptimEnv::with_session(
         task,
         GpuSpec::a100(),
         LlmProfile::get(ProfileId::GeminiFlash25),
         case.env.to_cfg(),
         case.seed,
-        caches,
+        session,
     );
     let mut trace = EpisodeTrace {
         eager_bits: env.eager_us.to_bits(),
@@ -460,23 +466,27 @@ fn run_episode(task: &Task, case: &EpisodeCase, caches: EnvCaches)
 fn prop_edge_memo_episode_bitwise_identical() {
     check(2222, default_cases(), gen_episode_case, |case: &EpisodeCase| {
         let task = case.recipe.task();
-        let baseline = run_episode(&task, case, EnvCaches::none());
+        let cold = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .edge_memo(false)
+            .build();
+        let baseline = run_episode(&task, case, &cold);
         prop_assert!(
             !baseline.signals.is_empty(),
             "episode must take at least one step"
         );
         // every on/off combination of (cost, analysis, edges)
         for combo in 1..8u8 {
-            let cost = CostCache::new();
-            let analysis = AnalysisCache::new();
-            let caches = EnvCaches {
-                cost: (combo & 1 != 0).then_some(&cost),
-                analysis: (combo & 2 != 0).then_some(&analysis),
-                edges: (combo & 4 != 0).then(|| Arc::new(EdgeMemo::new())),
-            };
-            // two passes: the second replays from whatever warmed up
+            let session = Session::builder()
+                .cost_cache(combo & 1 != 0)
+                .analysis_cache(combo & 2 != 0)
+                .edge_memo(combo & 4 != 0)
+                .build();
+            // two passes through one session: the second replays from
+            // whatever warmed up
             for pass in 0..2 {
-                let got = run_episode(&task, case, caches.clone());
+                let got = run_episode(&task, case, &session);
                 prop_assert!(
                     got == baseline,
                     "combo {combo:#05b} pass {pass} diverged from cold \
@@ -485,7 +495,7 @@ fn prop_edge_memo_episode_bitwise_identical() {
                 );
             }
             if combo & 4 != 0 {
-                let s = caches.edges.as_ref().unwrap().stats();
+                let s = session.edges().unwrap().stats();
                 prop_assert!(s.hits + s.misses == s.lookups,
                              "edge-memo stats identity broken: {s:?}");
                 // Stop steps bypass the memo, so only a real transition
@@ -502,12 +512,13 @@ fn prop_edge_memo_episode_bitwise_identical() {
         }
         // eviction pressure: a 2-entry table thrashes constantly but must
         // never change outcomes (misses just recompute)
-        let tiny = Arc::new(EdgeMemo::with_capacity(2));
+        let tiny = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .edge_capacity(2)
+            .build();
         for _ in 0..2 {
-            let got = run_episode(&task, case, EnvCaches {
-                edges: Some(Arc::clone(&tiny)),
-                ..EnvCaches::none()
-            });
+            let got = run_episode(&task, case, &tiny);
             prop_assert!(
                 got == baseline,
                 "eviction pressure changed the episode outcome"
@@ -517,11 +528,12 @@ fn prop_edge_memo_episode_bitwise_identical() {
     });
 }
 
-/// Persistence differential (the `--memo-store` tier): replaying an
-/// episode from a memo that round-tripped through disk (save, then load
-/// into a fresh memo) must be bit-identical to the cold episode, the
-/// loaded memo must account for its disk state, and a corrupted store
-/// must degrade to a cold start without panicking.
+/// Persistence differential (the `--memo-store` tier, now owned by the
+/// [`Session`]): replaying an episode through a second session that
+/// warm-started from the store the first session flushed must be
+/// bit-identical to the cold episode, the restored session must account
+/// for its disk state, and a corrupted store must degrade to a cold
+/// start without panicking.
 #[test]
 fn prop_edge_memo_persistence_roundtrip() {
     let dir = std::env::temp_dir().join("qimeng_prop_memo_store");
@@ -529,31 +541,42 @@ fn prop_edge_memo_persistence_roundtrip() {
     let case_no = std::sync::atomic::AtomicUsize::new(0);
     check(3333, 24, gen_episode_case, |case: &EpisodeCase| {
         let task = case.recipe.task();
-        let baseline = run_episode(&task, case, EnvCaches::none());
-        // warm a memo with one episode, then persist it
-        let warm = Arc::new(EdgeMemo::new());
-        run_episode(&task, case, EnvCaches {
-            edges: Some(Arc::clone(&warm)),
-            ..EnvCaches::none()
-        });
+        let cold = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .edge_memo(false)
+            .build();
+        let baseline = run_episode(&task, case, &cold);
         let path = dir.join(format!(
             "roundtrip_{}.bin",
             case_no.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
         ));
-        let saved = save_edge_memo(&warm, &path).map_err(|e| e.to_string())?;
-        prop_assert!(saved == warm.len(), "save must cover every entry");
-        // load into a fresh memo and replay: bit-identical episode
-        let restored = Arc::new(EdgeMemo::new());
-        let loaded =
-            load_edge_memo(&restored, &path).map_err(|e| e.to_string())?;
-        prop_assert!(loaded == saved,
-                     "load restored {loaded} of {saved} entries");
-        prop_assert!(restored.disk_loaded() == loaded,
+        let _ = std::fs::remove_file(&path);
+        // warm a session's memo with one episode, then persist it
+        let warm = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .memo_store(Some(path.clone()))
+            .build();
+        prop_assert!(warm.warm_loaded() == 0,
+                     "missing store must cold-start silently");
+        run_episode(&task, case, &warm);
+        let saved = warm.finish();
+        prop_assert!(saved == warm.edges().unwrap().len(),
+                     "flush must cover every live entry");
+        // a second session warm-starts from the store and replays:
+        // bit-identical episode, hits attributed to disk entries
+        let restored = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .memo_store(Some(path.clone()))
+            .build();
+        prop_assert!(restored.warm_loaded() == saved,
+                     "load restored {} of {saved} entries",
+                     restored.warm_loaded());
+        prop_assert!(restored.edges().unwrap().disk_loaded() == saved,
                      "disk_loaded must count the warm-started entries");
-        let got = run_episode(&task, case, EnvCaches {
-            edges: Some(Arc::clone(&restored)),
-            ..EnvCaches::none()
-        });
+        let got = run_episode(&task, case, &restored);
         prop_assert!(
             got == baseline,
             "disk-replayed episode diverged from cold episode:\n  got \
@@ -565,17 +588,22 @@ fn prop_edge_memo_persistence_roundtrip() {
         let has_transition =
             baseline.signals.iter().any(|s| !s.starts_with("Stop"));
         prop_assert!(
-            !has_transition || restored.stats().disk_hits > 0,
+            !has_transition || restored.edges().unwrap().stats().disk_hits > 0,
             "replay from a loaded store must report disk hits"
         );
         // corrupt the store (drop the last byte): cold start, no panic
         let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
         std::fs::write(&path, &bytes[..bytes.len() - 1])
             .map_err(|e| e.to_string())?;
-        let fresh = Arc::new(EdgeMemo::new());
-        let n = warm_start_edge_memo(&fresh, &path);
+        let fresh = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .memo_store(Some(path.clone()))
+            .build();
         prop_assert!(
-            n == 0 && fresh.is_empty() && fresh.disk_loaded() == 0,
+            fresh.warm_loaded() == 0
+                && fresh.edges().unwrap().is_empty()
+                && fresh.edges().unwrap().disk_loaded() == 0,
             "corrupted store must degrade to a cold memo"
         );
         Ok(())
