@@ -18,7 +18,12 @@
 //!   disk at [`SessionBuilder::build`] and flushes it back on
 //!   [`Session::finish`] (or on drop, as a safety net). The flush is a
 //!   **compaction pass**: only live (non-evicted) entries are written,
-//!   so a store can never grow past the memo's capacity.
+//!   so a store can never grow past the memo's capacity. The store is a
+//!   directory of per-shard segment files, so the flush is also a
+//!   **dirty-skip pass** — clean shards are skipped untouched, and a
+//!   corrupt segment at warm start costs only its own shard (see
+//!   `env/memo_store.rs` and the per-segment counters in
+//!   [`StoreReport`]).
 //! - **Stats**: [`Session::stats`] snapshots every memo into one
 //!   [`StatsRegistry`] — printable in the classic per-memo stderr format
 //!   and serializable as one JSON object (`--stats-json`).
@@ -31,7 +36,9 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use crate::env::{flush_edge_memo, warm_start_edge_memo, EdgeMemo};
+use crate::env::{
+    flush_edge_memo, warm_start_edge_memo, EdgeMemo, FlushReport, WarmStartReport,
+};
 use crate::gpusim::{CostCache, MemoStats};
 use crate::transform::AnalysisCache;
 use crate::util::json::Json;
@@ -51,8 +58,10 @@ pub struct Session {
     analysis: Option<AnalysisCache>,
     edges: Option<Arc<EdgeMemo>>,
     store: Option<PathBuf>,
-    warm_loaded: usize,
+    warm: WarmStartReport,
     persisted: AtomicUsize,
+    seg_written: AtomicUsize,
+    seg_skipped: AtomicUsize,
     finished: AtomicBool,
 }
 
@@ -87,7 +96,13 @@ impl Session {
 
     /// Edges warm-started from the store at construction.
     pub fn warm_loaded(&self) -> usize {
-        self.warm_loaded
+        self.warm.edges
+    }
+
+    /// The full warm-start report: edges plus per-segment recovery
+    /// counters (how many segment files parsed, how many degraded).
+    pub fn warm_report(&self) -> WarmStartReport {
+        self.warm
     }
 
     /// Flush the edge memo back to the configured store. Idempotent (the
@@ -97,17 +112,22 @@ impl Session {
     /// This is the store-compaction pass: the memo's LRU keeps at most
     /// `capacity()` entries live, and the flush serializes exactly those
     /// — evicted entries are dropped from the store instead of
-    /// accumulating across runs, so `persisted <= capacity` always.
+    /// accumulating across runs, so `persisted <= capacity` always. With
+    /// the segmented store it is also the dirty-skip pass: only shards
+    /// whose entry set changed since the warm start are rewritten, so a
+    /// pure-replay run writes zero segments.
     pub fn finish(&self) -> usize {
         if self.finished.swap(true, Ordering::SeqCst) {
             return self.persisted.load(Ordering::SeqCst);
         }
-        let n = match (&self.edges, &self.store) {
+        let report = match (&self.edges, &self.store) {
             (Some(memo), Some(path)) => flush_edge_memo(memo, path),
-            _ => 0,
+            _ => FlushReport::default(),
         };
-        self.persisted.store(n, Ordering::SeqCst);
-        n
+        self.persisted.store(report.edges, Ordering::SeqCst);
+        self.seg_written.store(report.written_segments, Ordering::SeqCst);
+        self.seg_skipped.store(report.skipped_segments, Ordering::SeqCst);
+        report.edges
     }
 
     /// Snapshot every memo's counters into one registry.
@@ -122,13 +142,20 @@ impl Session {
                 .edges
                 .as_ref()
                 .map_or(0, |e| e.disk_loaded()),
-            store: self.store.as_ref().map(|p| StoreReport {
-                path: p.clone(),
-                warm_loaded: self.warm_loaded,
-                persisted: self
-                    .finished
-                    .load(Ordering::SeqCst)
-                    .then(|| self.persisted.load(Ordering::SeqCst)),
+            store: self.store.as_ref().map(|p| {
+                let done = self.finished.load(Ordering::SeqCst);
+                StoreReport {
+                    path: p.clone(),
+                    warm_loaded: self.warm.edges,
+                    recovered_segments: self.warm.recovered_segments,
+                    degraded_segments: self.warm.degraded_segments,
+                    persisted: done
+                        .then(|| self.persisted.load(Ordering::SeqCst)),
+                    written_segments: done
+                        .then(|| self.seg_written.load(Ordering::SeqCst)),
+                    skipped_segments: done
+                        .then(|| self.seg_skipped.load(Ordering::SeqCst)),
+                }
             }),
         }
     }
@@ -205,9 +232,10 @@ impl SessionBuilder {
     }
 
     /// Persist the edge memo across runs: warm-start from `path` at
-    /// build (missing store = silent cold start, corrupt = logged cold
-    /// start), flush back on [`Session::finish`]. Ignored when the edge
-    /// memo is disabled.
+    /// build (missing store = silent cold start; a corrupt segment = a
+    /// logged cold start of that shard only; a legacy single-file store
+    /// is migrated to the segmented layout), flush back on
+    /// [`Session::finish`]. Ignored when the edge memo is disabled.
     pub fn memo_store(mut self, path: Option<PathBuf>) -> Self {
         self.store = path;
         self
@@ -234,17 +262,19 @@ impl SessionBuilder {
             })
         });
         let store = if edges.is_some() { self.store } else { None };
-        let warm_loaded = match (&edges, &store) {
+        let warm = match (&edges, &store) {
             (Some(memo), Some(path)) => warm_start_edge_memo(memo, path),
-            _ => 0,
+            _ => WarmStartReport::default(),
         };
         Session {
             cost: self.cost.then(CostCache::new),
             analysis: self.analysis.then(AnalysisCache::new),
             edges,
             store,
-            warm_loaded,
+            warm,
             persisted: AtomicUsize::new(0),
+            seg_written: AtomicUsize::new(0),
+            seg_skipped: AtomicUsize::new(0),
             finished: AtomicBool::new(false),
         }
     }
@@ -256,8 +286,20 @@ pub struct StoreReport {
     pub path: PathBuf,
     /// Edges warm-started from the store at construction.
     pub warm_loaded: usize,
+    /// Segment files that parsed cleanly at warm start (a legacy
+    /// single-file store counts as 1).
+    pub recovered_segments: usize,
+    /// Segment files rejected as corrupt/truncated at warm start; each
+    /// cost only its own shard (the others still loaded).
+    pub degraded_segments: usize,
     /// Edges written by [`Session::finish`]; `None` until it has run.
     pub persisted: Option<usize>,
+    /// Segments rewritten by the flush (dirty shards only); `None`
+    /// until [`Session::finish`] has run.
+    pub written_segments: Option<usize>,
+    /// Segments the flush skipped as clean; `None` until
+    /// [`Session::finish`] has run.
+    pub skipped_segments: Option<usize>,
 }
 
 /// One snapshot of every memo's traffic, taken via [`Session::stats`].
@@ -302,10 +344,11 @@ impl StatsRegistry {
             Some(s) => Json::obj(vec![
                 ("path", Json::from(s.path.display().to_string())),
                 ("warm_loaded", Json::from(s.warm_loaded)),
-                ("persisted", match s.persisted {
-                    Some(n) => Json::from(n),
-                    None => Json::Null,
-                }),
+                ("recovered_segments", Json::from(s.recovered_segments)),
+                ("degraded_segments", Json::from(s.degraded_segments)),
+                ("persisted", opt_json(s.persisted)),
+                ("written_segments", opt_json(s.written_segments)),
+                ("skipped_segments", opt_json(s.skipped_segments)),
             ]),
         };
         Json::obj(vec![
@@ -314,6 +357,13 @@ impl StatsRegistry {
             ("edge_memo", edge),
             ("store", store),
         ])
+    }
+}
+
+fn opt_json(v: Option<usize>) -> Json {
+    match v {
+        Some(n) => Json::from(n),
+        None => Json::Null,
     }
 }
 
@@ -365,10 +415,19 @@ mod tests {
         }
     }
 
+    /// A fresh store path (the segmented store is a directory; tests
+    /// clear both shapes so reruns start cold).
     fn tmp(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("qimeng_session_test");
         std::fs::create_dir_all(&dir).unwrap();
-        dir.join(name)
+        let path = dir.join(name);
+        cleanup(&path);
+        path
+    }
+
+    fn cleanup(path: &PathBuf) {
+        let _ = std::fs::remove_dir_all(path);
+        let _ = std::fs::remove_file(path);
     }
 
     /// All 8 on/off combinations construct exactly the requested memo
@@ -408,13 +467,14 @@ mod tests {
     /// that will never be consulted.
     #[test]
     fn store_requires_edge_memo() {
+        let path = tmp("ignored.store");
         let s = Session::builder()
             .edge_memo(false)
-            .memo_store(Some(tmp("ignored.bin")))
+            .memo_store(Some(path.clone()))
             .build();
         assert!(s.store().is_none());
         assert_eq!(s.finish(), 0);
-        assert!(!tmp("ignored.bin").exists(), "no store file may appear");
+        assert!(!path.exists(), "no store may appear");
     }
 
     /// The regression guard for the compaction pass: fill a tiny-capacity
@@ -422,8 +482,7 @@ mod tests {
     /// the live (non-evicted) entries — never more than capacity.
     #[test]
     fn flush_after_eviction_writes_only_live_entries() {
-        let path = tmp("compaction.bin");
-        let _ = std::fs::remove_file(&path);
+        let path = tmp("compaction.store");
         let s = Session::builder()
             .edge_capacity(2)
             .memo_store(Some(path.clone()))
@@ -451,30 +510,31 @@ mod tests {
         reloaded_keys.sort_unstable();
         assert_eq!(reloaded_keys, live,
                    "store holds the live set, nothing evicted");
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
     }
 
     /// `finish` is idempotent and `Drop` re-runs it safely.
     #[test]
     fn finish_is_idempotent() {
-        let path = tmp("idempotent.bin");
-        let _ = std::fs::remove_file(&path);
+        let path = tmp("idempotent.store");
         let s = Session::builder().memo_store(Some(path.clone())).build();
         s.edges().unwrap().insert(7, edge());
         let first = s.finish();
         assert_eq!(first, 1);
         assert_eq!(s.finish(), first, "second finish reports, not rewrites");
-        assert_eq!(s.stats().store.unwrap().persisted, Some(1));
+        let store = s.stats().store.unwrap();
+        assert_eq!(store.persisted, Some(1));
+        assert_eq!(store.written_segments, Some(1), "one dirty shard");
+        assert_eq!(store.skipped_segments, Some(15), "the rest skipped clean");
         drop(s); // Drop must not double-flush or panic
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
     }
 
     /// A second Session over the same store warm-starts what the first
     /// one persisted (the cross-run handshake the CLI relies on).
     #[test]
     fn store_round_trips_across_sessions() {
-        let path = tmp("roundtrip.bin");
-        let _ = std::fs::remove_file(&path);
+        let path = tmp("roundtrip.store");
         let a = Session::builder().memo_store(Some(path.clone())).build();
         assert_eq!(a.warm_loaded(), 0, "missing store = silent cold start");
         for k in 0..5u64 {
@@ -484,8 +544,19 @@ mod tests {
         let b = Session::builder().memo_store(Some(path.clone())).build();
         assert_eq!(b.warm_loaded(), 5);
         assert_eq!(b.edges().unwrap().disk_loaded(), 5);
-        assert_eq!(b.stats().store.unwrap().warm_loaded, 5);
-        let _ = std::fs::remove_file(&path);
+        let report = b.warm_report();
+        assert_eq!(report.recovered_segments, 5, "one segment per shard hit");
+        assert_eq!(report.degraded_segments, 0);
+        let store = b.stats().store.unwrap();
+        assert_eq!(store.warm_loaded, 5);
+        assert_eq!(store.recovered_segments, 5);
+        // a pure-replay session dirtied nothing: its flush skips every
+        // segment (the dirty-skip fast path)
+        assert_eq!(b.finish(), 5);
+        let store = b.stats().store.unwrap();
+        assert_eq!(store.written_segments, Some(0));
+        assert_eq!(store.skipped_segments, Some(16));
+        cleanup(&path);
     }
 
     #[test]

@@ -127,6 +127,49 @@ impl EdgeMemo {
         self.edges.entries()
     }
 
+    /// Number of shards — one persisted segment file per shard (see
+    /// [`super::memo_store`]).
+    pub fn shard_count(&self) -> usize {
+        self.edges.shard_count()
+    }
+
+    /// Which shard/segment a key belongs to (stable across processes).
+    pub fn shard_of(key: u64) -> usize {
+        ShardedMemo::<CachedEdge>::shard_index(key)
+    }
+
+    /// Live entry count of one shard.
+    pub fn shard_len(&self, i: usize) -> usize {
+        self.edges.shard_len(i)
+    }
+
+    /// Snapshot one shard's resident `(key, edge)` pairs.
+    pub fn entries_of_shard(&self, i: usize) -> Vec<(u64, CachedEdge)> {
+        self.edges.entries_of_shard(i)
+    }
+
+    /// Whether shard `i`'s entry set changed since its last flush/load.
+    pub fn shard_dirty(&self, i: usize) -> bool {
+        self.edges.shard_dirty(i)
+    }
+
+    /// Flush handshake: clear shard `i`'s dirty flag and snapshot its
+    /// entries under one lock (see [`ShardedMemo::take_shard_for_flush`]).
+    pub fn take_shard_for_flush(&self, i: usize) -> Vec<(u64, CachedEdge)> {
+        self.edges.take_shard_for_flush(i)
+    }
+
+    /// Mark shard `i` clean (a warm start that restored the shard to
+    /// exactly its on-disk contents).
+    pub fn clear_shard_dirty(&self, i: usize) {
+        self.edges.clear_shard_dirty(i)
+    }
+
+    /// Re-mark shard `i` dirty (failed segment write: retry next flush).
+    pub fn mark_shard_dirty(&self, i: usize) {
+        self.edges.mark_shard_dirty(i)
+    }
+
     /// Number of edges warm-started from a persisted store.
     pub fn disk_loaded(&self) -> usize {
         self.disk_loaded.load(Ordering::Relaxed)

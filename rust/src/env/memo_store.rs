@@ -5,27 +5,51 @@
 //! experience store of optimization trajectories; an in-memory memo only
 //! amortizes within one process. This module serializes the memo's
 //! `(key → CachedEdge)` entries — including the `Arc<Program>` payloads —
-//! to a versioned, self-describing binary file, so a later `repro eval` /
-//! `train-ppo` run warm-starts from everything earlier runs computed
-//! (the `--memo-store <path>` flag).
+//! so a later `repro eval` / `train-ppo` run warm-starts from everything
+//! earlier runs computed (the `--memo-store <path>` flag).
+//!
+//! ## Layout (v2, `QMMCEDG2`)
+//!
+//! The store is a **directory**, one segment file per memo shard:
+//!
+//! ```text
+//! <store>/manifest.bin   magic + shard count + capacity
+//! <store>/seg_NN.bin     magic + shard index + entry count + records
+//! ```
+//!
+//! Keys are partitioned by [`EdgeMemo::shard_of`], so a shard whose
+//! entry set did not change since the last flush (its dirty flag is
+//! clear) can be **skipped** — a mostly-replay run rewrites nothing.
+//! Every file lands via write-to-temp-then-rename, so a crash at any
+//! point leaves each segment either old-complete or new-complete; the
+//! previous good store is never truncated in place. A corrupt /
+//! truncated / version-mismatched segment degrades only its own shard
+//! (logged; the others still warm-start), and the bad segment's shard is
+//! re-marked dirty so the next flush overwrites the damaged bytes.
 //!
 //! Framing is hand-rolled (the workspace allows no serialization deps):
-//! an 8-byte magic that doubles as the format version, a u64 entry
-//! count, then length-prefixed little-endian records. Floats travel as
-//! IEEE bits, so a loaded edge replays **bit-identically** to its
+//! an 8-byte magic that doubles as the format version, little-endian
+//! fixed-width integers, length-prefixed strings. Floats travel as IEEE
+//! bits, so a loaded edge replays **bit-identically** to its
 //! freshly-computed twin (guarded by the persistence property in
 //! `rust/tests/properties.rs`). Entries are written key-sorted so equal
-//! memo contents produce byte-identical files.
+//! memo contents produce byte-identical segments.
+//!
+//! Legacy single-file `QMMCEDG1` stores still load: a warm start from a
+//! file migrates it in place to the segmented layout (the original file
+//! is only removed after the full directory has been written and swapped
+//! into place).
 //!
 //! Loading is strict but the entry points are forgiving:
 //! [`load_edge_memo`] rejects bad magic (wrong version), truncation,
 //! implausible lengths, unknown tags and trailing bytes with an `Err`;
-//! [`warm_start_edge_memo`] turns any of those into a logged cold start,
-//! never a panic — a corrupt store costs recomputation, not the run.
+//! [`warm_start_edge_memo`] turns those into a logged per-segment
+//! degrade, never a panic — a corrupt segment costs one shard's
+//! recomputation, not the run.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -37,15 +61,50 @@ use crate::kir::{Kernel, LoopOrder, Program, Schedule};
 
 /// Format magic; the trailing digit is the version. Bump it on any layout
 /// change — old stores then fail the magic check and cold-start cleanly.
-const MAGIC: &[u8; 8] = b"QMMCEDG1";
+const MAGIC: &[u8; 8] = b"QMMCEDG2";
+
+/// The v1 single-file magic, still recognized for read + migration.
+const LEGACY_MAGIC: &[u8; 8] = b"QMMCEDG1";
+
+/// Manifest file name inside a segmented store directory.
+const MANIFEST: &str = "manifest.bin";
 
 /// Load-time sanity bounds: a corrupted length prefix must bail early,
 /// not drive a multi-gigabyte allocation.
 const MAX_ENTRIES: u64 = 10_000_000;
+const MAX_SHARDS: usize = 1_024;
 const MAX_KERNELS: u32 = 4_096;
 const MAX_NODES: u32 = 100_000;
 const MAX_MUTATIONS: u32 = 10_000;
 const MAX_NAME: u32 = 4_096;
+
+/// What a warm start recovered from disk (returned by
+/// [`warm_start_edge_memo`], surfaced in `--stats-json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WarmStartReport {
+    /// Edges loaded into the memo.
+    pub edges: usize,
+    /// Segment files that parsed cleanly (a legacy file counts as 1).
+    pub recovered_segments: usize,
+    /// Segment files rejected as corrupt/truncated/mismatched; their
+    /// shards cold-start and are re-marked dirty so the next flush heals
+    /// the store.
+    pub degraded_segments: usize,
+}
+
+/// What a flush wrote (returned by [`flush_edge_memo`], surfaced in
+/// `--stats-json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FlushReport {
+    /// Live edges the store represents after the flush (written shards'
+    /// entries plus the resident entries of skipped-clean shards).
+    pub edges: usize,
+    /// Segments rewritten because their shard was dirty.
+    pub written_segments: usize,
+    /// Segments skipped because their shard was clean since the last
+    /// flush/load — the dirty-skip fast path.
+    pub skipped_segments: usize,
+}
 
 // --- primitive framing -----------------------------------------------
 
@@ -311,38 +370,268 @@ fn read_edge(r: &mut impl Read) -> Result<CachedEdge> {
     Ok(CachedEdge { program, signal, speedup, from_disk: true })
 }
 
-// --- entry points ----------------------------------------------------
+// --- store layout ----------------------------------------------------
 
-/// Serialize every resident edge of `memo` to `path` (key-sorted, so
-/// equal contents yield byte-identical files). Returns the edge count.
-pub fn save_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
-    let mut entries = memo.entries();
-    entries.sort_by_key(|&(k, _)| k);
-    let file = File::create(path)
-        .with_context(|| format!("create edge-memo store {path:?}"))?;
-    let mut w = BufWriter::new(file);
+fn segment_name(i: usize) -> String {
+    format!("seg_{i:02}.bin")
+}
+
+fn segment_path(dir: &Path, i: usize) -> PathBuf {
+    dir.join(segment_name(i))
+}
+
+fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join(MANIFEST)
+}
+
+/// `<name><suffix>` next to `path` (temp files, migration staging).
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_default();
+    name.push(suffix);
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to a `.tmp` sibling, fsync, then rename into place:
+/// a crash at any point leaves `path` either old-complete or
+/// new-complete, never truncated or half-written.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = sibling(path, ".tmp");
+    let staged = (|| -> Result<()> {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("create temp file {tmp:?}"))?;
+        f.write_all(bytes)
+            .with_context(|| format!("write temp file {tmp:?}"))?;
+        f.sync_all()
+            .with_context(|| format!("sync temp file {tmp:?}"))?;
+        Ok(())
+    })();
+    let renamed = staged.and_then(|()| {
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {tmp:?} into place"))
+    });
+    if renamed.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    renamed
+}
+
+fn manifest_bytes(shards: usize, capacity: usize) -> Result<Vec<u8>> {
+    let mut w = Vec::with_capacity(20);
     w.write_all(MAGIC)?;
+    w_u32(&mut w, shards)?;
+    w_u64(&mut w, capacity as u64)?;
+    Ok(w)
+}
+
+/// Strict manifest parse: `(shard_count, capacity)`.
+fn read_manifest(path: &Path) -> Result<(usize, u64)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("read manifest {path:?}"))?;
+    let mut r = &bytes[..];
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("manifest too short")?;
+    if magic != *MAGIC {
+        bail!("{path:?}: not a v2 edge-memo manifest (magic {magic:02x?})");
+    }
+    let shards = r_u32(&mut r)? as usize;
+    if shards == 0 || shards > MAX_SHARDS {
+        bail!("{path:?}: implausible shard count {shards}");
+    }
+    let capacity = r_u64(&mut r)?;
+    if !r.is_empty() {
+        bail!("{path:?}: trailing bytes after manifest");
+    }
+    Ok((shards, capacity))
+}
+
+/// Serialize one shard's entries as a segment file body (key-sorted, so
+/// equal shard contents yield byte-identical segments).
+fn segment_bytes(index: usize, mut entries: Vec<(u64, CachedEdge)>) -> Result<Vec<u8>> {
+    entries.sort_by_key(|&(k, _)| k);
+    let mut w = Vec::new();
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, index)?;
     w_u64(&mut w, entries.len() as u64)?;
     for (key, edge) in &entries {
         w_u64(&mut w, *key)?;
         write_edge(&mut w, edge)?;
     }
-    w.flush()?;
-    Ok(entries.len())
+    Ok(w)
 }
 
-/// Load a store written by [`save_edge_memo`] into `memo`, marking every
-/// entry `from_disk`. Strict: bad magic (wrong version), truncation,
-/// implausible lengths, unknown tags and trailing bytes are all `Err`s,
-/// and on error the memo is left untouched (entries are parsed in full
-/// before any insert).
+/// Strict segment parse; `index` must match both the filename and the
+/// header, catching segments copied between slots.
+fn read_segment(path: &Path, index: usize) -> Result<Vec<(u64, CachedEdge)>> {
+    let file = File::open(path)
+        .with_context(|| format!("open segment {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)
+        .context("segment too short for header")?;
+    if magic != *MAGIC {
+        bail!("{path:?}: not a v2 edge-memo segment (magic {magic:02x?})");
+    }
+    let idx = r_u32(&mut r)? as usize;
+    if idx != index {
+        bail!("{path:?}: header claims shard {idx}, filename says {index}");
+    }
+    let n = r_u64(&mut r)?;
+    if n > MAX_ENTRIES {
+        bail!("{path:?}: implausible entry count {n}");
+    }
+    let mut entries = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let key = r_u64(&mut r)?;
+        entries.push((key, read_edge(&mut r)?));
+    }
+    let mut trail = [0u8; 1];
+    if r.read(&mut trail)? != 0 {
+        bail!("{path:?}: trailing bytes after {n} entries");
+    }
+    Ok(entries)
+}
+
+/// Rewrite the manifest only when absent or stale — a clean flush must
+/// not touch any file.
+fn ensure_manifest(memo: &EdgeMemo, dir: &Path) -> Result<()> {
+    let want = manifest_bytes(memo.shard_count(), memo.capacity())?;
+    let path = manifest_path(dir);
+    let fresh = matches!(std::fs::read(&path), Ok(have) if have == want);
+    if fresh {
+        return Ok(());
+    }
+    write_atomic(&path, &want)
+}
+
+/// Insert fully-parsed segments into the memo; a shard restored to
+/// exactly its on-disk contents is marked clean so the next flush can
+/// skip it, while eviction during load or misfiled keys leave the
+/// affected shards dirty (the next flush rewrites them compacted —
+/// self-healing). Returns the number of edges parsed from disk.
+fn install_segments(memo: &EdgeMemo, segments: Vec<(usize, Vec<(u64, CachedEdge)>)>) -> usize {
+    let mut total = 0;
+    for (i, entries) in segments {
+        let count = entries.len();
+        let mut all_in_shard = true;
+        for (key, edge) in entries {
+            all_in_shard &= EdgeMemo::shard_of(key) == i;
+            memo.insert(key, edge);
+        }
+        total += count;
+        if all_in_shard && memo.shard_len(i) == count {
+            memo.clear_shard_dirty(i);
+        }
+    }
+    memo.note_disk_loaded(total);
+    total
+}
+
+// --- entry points ----------------------------------------------------
+
+/// Write every shard — dirty or not — as a segment file under `path`,
+/// plus the manifest. Strict: the first failed write aborts with `Err`
+/// (the failed shard re-marked dirty); shards already renamed into place
+/// stay valid. Returns the edge count written.
+///
+/// If `path` is an existing legacy single file, the directory is staged
+/// next to it and atomically swapped in (see [`warm_start_edge_memo`]
+/// for the migration path).
+pub fn save_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+    if path.is_file() {
+        return replace_legacy_store(memo, path);
+    }
+    save_segments(memo, path)
+}
+
+fn save_segments(memo: &EdgeMemo, dir: &Path) -> Result<usize> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create edge-memo store {dir:?}"))?;
+    ensure_manifest(memo, dir)?;
+    let mut total = 0;
+    for i in 0..memo.shard_count() {
+        let entries = memo.take_shard_for_flush(i);
+        let count = entries.len();
+        let written = segment_bytes(i, entries)
+            .and_then(|bytes| write_atomic(&segment_path(dir, i), &bytes));
+        if let Err(e) = written {
+            memo.mark_shard_dirty(i);
+            return Err(e);
+        }
+        total += count;
+    }
+    Ok(total)
+}
+
+/// Replace a legacy single-file store at `path` with a segmented
+/// directory holding the memo's contents. The directory is fully staged
+/// at `<path>.migrate` first; only then is the old file moved aside and
+/// the directory renamed into place, so a failure at any step leaves the
+/// legacy file intact and loadable.
+fn replace_legacy_store(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+    let staging = sibling(path, ".migrate");
+    if staging.exists() {
+        std::fs::remove_dir_all(&staging)
+            .with_context(|| format!("clear stale staging dir {staging:?}"))?;
+    }
+    let total = match save_segments(memo, &staging) {
+        Ok(n) => n,
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&staging);
+            return Err(e);
+        }
+    };
+    let backup = sibling(path, ".legacy");
+    std::fs::rename(path, &backup)
+        .with_context(|| format!("move legacy store aside to {backup:?}"))?;
+    if let Err(e) = std::fs::rename(&staging, path) {
+        let _ = std::fs::rename(&backup, path);
+        let _ = std::fs::remove_dir_all(&staging);
+        return Err(e)
+            .with_context(|| format!("swap segmented store into {path:?}"));
+    }
+    let _ = std::fs::remove_file(&backup);
+    Ok(total)
+}
+
+/// Load a segmented store (or a legacy v1 file) into `memo`, marking
+/// every entry `from_disk`. Strict: bad magic (wrong version),
+/// truncation, implausible lengths, unknown tags, trailing bytes and a
+/// shard-count mismatch are all `Err`s, and on error the memo is left
+/// untouched (every segment is parsed in full before any insert).
+/// Missing segment files are empty shards, not errors.
 pub fn load_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+    if path.is_file() {
+        return load_legacy_file(memo, path);
+    }
+    let (shards, _capacity) = read_manifest(&manifest_path(path))?;
+    if shards != memo.shard_count() {
+        bail!(
+            "{path:?}: store has {shards} shards, this memo has {}",
+            memo.shard_count()
+        );
+    }
+    let mut segments = Vec::new();
+    for i in 0..shards {
+        let sp = segment_path(path, i);
+        if !sp.exists() {
+            continue;
+        }
+        segments.push((i, read_segment(&sp, i)?));
+    }
+    Ok(install_segments(memo, segments))
+}
+
+/// Strict v1 single-file load (the pre-segmentation format).
+fn load_legacy_file(memo: &EdgeMemo, path: &Path) -> Result<usize> {
     let file = File::open(path)
         .with_context(|| format!("open edge-memo store {path:?}"))?;
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("store too short for header")?;
-    if magic != *MAGIC {
+    if magic != *LEGACY_MAGIC {
         bail!("{path:?}: not a v1 edge-memo store (magic {magic:02x?})");
     }
     let n = r_u64(&mut r)?;
@@ -367,61 +656,225 @@ pub fn load_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
 }
 
 /// Best-effort warm start behind the `--memo-store` flag: a missing
-/// store is a silent cold start (the first run of a pair), a corrupt /
-/// truncated / version-mismatched one logs and cold-starts, a good one
-/// logs the edge count. Never panics, never fails the run.
-pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> usize {
+/// store is a silent cold start (the first run of a pair); a bad
+/// manifest logs and cold-starts; a corrupt / truncated /
+/// version-mismatched **segment** degrades only its own shard — the
+/// others still load, and the bad shard is re-marked dirty so the next
+/// flush overwrites the damaged file. A legacy v1 single file is loaded
+/// whole and migrated in place to the segmented layout. Never panics,
+/// never fails the run.
+pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
     if !path.exists() {
-        return 0;
+        return WarmStartReport::default();
     }
-    match load_edge_memo(memo, path) {
-        Ok(n) => {
+    if path.is_file() {
+        return warm_start_legacy(memo, path);
+    }
+    let (shards, _capacity) = match read_manifest(&manifest_path(path)) {
+        Ok(m) => m,
+        Err(e) => {
             eprintln!(
-                "edge-memo: warm-started {n} edges from {}",
+                "edge-memo: ignoring store {}: {e:#} (cold start)",
                 path.display()
             );
-            n
+            return WarmStartReport::default();
+        }
+    };
+    if shards != memo.shard_count() {
+        eprintln!(
+            "edge-memo: ignoring store {}: built for {shards} shards, \
+             this binary uses {} (cold start)",
+            path.display(),
+            memo.shard_count()
+        );
+        return WarmStartReport::default();
+    }
+    let mut report = WarmStartReport::default();
+    let mut good = Vec::new();
+    for i in 0..shards {
+        let sp = segment_path(path, i);
+        if !sp.exists() {
+            continue;
+        }
+        match read_segment(&sp, i) {
+            Ok(entries) => {
+                report.recovered_segments += 1;
+                good.push((i, entries));
+            }
+            Err(e) => {
+                report.degraded_segments += 1;
+                // so the next flush overwrites the damaged bytes
+                memo.mark_shard_dirty(i);
+                eprintln!(
+                    "edge-memo: segment {} degraded: {e:#} (shard cold)",
+                    sp.display()
+                );
+            }
+        }
+    }
+    report.edges = install_segments(memo, good);
+    let degraded = if report.degraded_segments > 0 {
+        format!(", {} degraded", report.degraded_segments)
+    } else {
+        String::new()
+    };
+    eprintln!(
+        "edge-memo: warm-started {} edges from {} ({} segments{degraded})",
+        report.edges,
+        path.display(),
+        report.recovered_segments
+    );
+    report
+}
+
+fn warm_start_legacy(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
+    match load_legacy_file(memo, path) {
+        Ok(n) => {
+            eprintln!(
+                "edge-memo: warm-started {n} edges from {} (legacy store)",
+                path.display()
+            );
+            match replace_legacy_store(memo, path) {
+                Ok(_) => eprintln!(
+                    "edge-memo: migrated legacy store {} to the segmented layout",
+                    path.display()
+                ),
+                Err(e) => eprintln!(
+                    "edge-memo: could not migrate legacy store {}: {e:#} \
+                     (will retry at flush)",
+                    path.display()
+                ),
+            }
+            WarmStartReport { edges: n, recovered_segments: 1, degraded_segments: 0 }
         }
         Err(e) => {
             eprintln!(
                 "edge-memo: ignoring store {}: {e:#} (cold start)",
                 path.display()
             );
-            0
+            WarmStartReport::default()
         }
     }
 }
 
-/// Best-effort flush behind the `--memo-store` flag: persists the memo,
-/// logging instead of failing on I/O errors (a full disk costs the next
-/// run its warm start, not this run its results).
-pub fn flush_edge_memo(memo: &EdgeMemo, path: &Path) -> usize {
-    match save_edge_memo(memo, path) {
-        Ok(n) => {
-            eprintln!("edge-memo: persisted {n} edges to {}", path.display());
-            n
+/// Best-effort flush behind the `--memo-store` flag: rewrites **only the
+/// dirty segments** (clean shards are skipped untouched — a pure-replay
+/// run writes nothing), each via temp-then-rename. A failed segment
+/// write logs, re-marks its shard dirty for the next flush, and leaves
+/// the prior segment bytes intact; it never fails the run. A `path`
+/// still holding a legacy single file gets one forced full segmented
+/// save (the deferred migration).
+pub fn flush_edge_memo(memo: &EdgeMemo, path: &Path) -> FlushReport {
+    if path.is_file() {
+        return match replace_legacy_store(memo, path) {
+            Ok(n) => {
+                let report = FlushReport {
+                    edges: n,
+                    written_segments: memo.shard_count(),
+                    skipped_segments: 0,
+                };
+                eprintln!(
+                    "edge-memo: persisted {n} edges to {} \
+                     ({} segments written, 0 clean; legacy store migrated)",
+                    path.display(),
+                    report.written_segments
+                );
+                report
+            }
+            Err(e) => {
+                eprintln!(
+                    "edge-memo: failed to persist to {}: {e:#}",
+                    path.display()
+                );
+                FlushReport::default()
+            }
+        };
+    }
+    if let Err(e) = std::fs::create_dir_all(path)
+        .with_context(|| format!("create edge-memo store {path:?}"))
+        .and_then(|()| ensure_manifest(memo, path))
+    {
+        eprintln!(
+            "edge-memo: failed to persist to {}: {e:#}",
+            path.display()
+        );
+        return FlushReport::default();
+    }
+    let mut report = FlushReport::default();
+    for i in 0..memo.shard_count() {
+        if !memo.shard_dirty(i) {
+            report.skipped_segments += 1;
+            report.edges += memo.shard_len(i);
+            continue;
         }
-        Err(e) => {
-            eprintln!(
-                "edge-memo: failed to persist to {}: {e:#}",
-                path.display()
-            );
-            0
+        let entries = memo.take_shard_for_flush(i);
+        let count = entries.len();
+        let sp = segment_path(path, i);
+        let written = segment_bytes(i, entries)
+            .and_then(|bytes| write_atomic(&sp, &bytes));
+        match written {
+            Ok(()) => {
+                report.written_segments += 1;
+                report.edges += count;
+            }
+            Err(e) => {
+                memo.mark_shard_dirty(i);
+                report.edges += memo.shard_len(i);
+                eprintln!(
+                    "edge-memo: failed to write segment {}: {e:#} \
+                     (prior segment kept, will retry next flush)",
+                    sp.display()
+                );
+            }
         }
     }
+    eprintln!(
+        "edge-memo: persisted {} edges to {} ({} segments written, {} clean)",
+        report.edges,
+        path.display(),
+        report.written_segments,
+        report.skipped_segments
+    );
+    report
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn tmp(name: &str) -> std::path::PathBuf {
-        let dir = std::env::temp_dir().join("qimeng_memo_store_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        dir.join(name)
+    /// Fresh store directory path (removed first, so every test starts
+    /// cold).
+    fn store(name: &str) -> PathBuf {
+        let root = std::env::temp_dir().join("qimeng_memo_store_test");
+        std::fs::create_dir_all(&root).unwrap();
+        let path = root.join(name);
+        let _ = std::fs::remove_dir_all(&path);
+        let _ = std::fs::remove_file(&path);
+        path
     }
 
-    /// One edge of every flavour the stepper produces.
+    fn cleanup(path: &Path) {
+        let _ = std::fs::remove_dir_all(path);
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// A key that lands in shard `shard` (the memo shards on the high
+    /// 16 bits).
+    fn key_in(shard: u64, low: u64) -> u64 {
+        (shard << 48) | low
+    }
+
+    fn small_edge(speedup: f64) -> CachedEdge {
+        CachedEdge {
+            program: None,
+            signal: StepSignal::Rejected,
+            speedup,
+            from_disk: false,
+        }
+    }
+
+    /// One edge of every flavour the stepper produces (all keys land in
+    /// shard 0).
     fn sample_edges() -> Vec<(u64, CachedEdge)> {
         let program = Program {
             kernels: vec![
@@ -495,17 +948,37 @@ mod tests {
         assert_eq!(a.speedup.to_bits(), b.speedup.to_bits());
     }
 
+    /// Hand-rolled v1 single-file writer: the migration fixture.
+    fn write_legacy_store(path: &Path, entries: &[(u64, CachedEdge)]) {
+        let mut sorted = entries.to_vec();
+        sorted.sort_by_key(|&(k, _)| k);
+        let mut w = Vec::new();
+        w.write_all(LEGACY_MAGIC).unwrap();
+        w_u64(&mut w, sorted.len() as u64).unwrap();
+        for (key, edge) in &sorted {
+            w_u64(&mut w, *key).unwrap();
+            write_edge(&mut w, edge).unwrap();
+        }
+        std::fs::write(path, &w).unwrap();
+    }
+
+    fn mtime(path: &Path) -> std::time::SystemTime {
+        std::fs::metadata(path).unwrap().modified().unwrap()
+    }
+
     #[test]
     fn roundtrip_preserves_every_edge_flavour() {
-        let path = tmp("roundtrip.bin");
-        let memo = EdgeMemo::with_capacity(64);
+        let path = store("roundtrip");
+        let memo = EdgeMemo::with_capacity(256);
         for (k, e) in sample_edges() {
             memo.insert(k, e);
         }
         let saved = save_edge_memo(&memo, &path).unwrap();
         assert_eq!(saved, 5);
+        assert!(manifest_path(&path).is_file());
+        assert!(segment_path(&path, 0).is_file());
 
-        let loaded_memo = EdgeMemo::with_capacity(64);
+        let loaded_memo = EdgeMemo::with_capacity(256);
         let loaded = load_edge_memo(&loaded_memo, &path).unwrap();
         assert_eq!(loaded, 5);
         assert_eq!(loaded_memo.disk_loaded(), 5);
@@ -515,112 +988,312 @@ mod tests {
             assert_same_edge(&got, &original);
         }
         assert!(loaded_memo.stats().disk_hits > 0);
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
     }
 
     #[test]
     fn save_is_deterministic_for_equal_contents() {
-        let (p1, p2) = (tmp("det1.bin"), tmp("det2.bin"));
-        let a = EdgeMemo::with_capacity(64);
-        let b = EdgeMemo::with_capacity(64);
+        let (p1, p2) = (store("det1"), store("det2"));
+        let a = EdgeMemo::with_capacity(256);
+        let b = EdgeMemo::with_capacity(256);
         for (k, e) in sample_edges() {
             a.insert(k, e);
         }
-        // reversed insertion order must not change the bytes
+        // reversed insertion order must not change any file's bytes
         for (k, e) in sample_edges().into_iter().rev() {
             b.insert(k, e);
         }
         save_edge_memo(&a, &p1).unwrap();
         save_edge_memo(&b, &p2).unwrap();
-        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
-        let _ = std::fs::remove_file(&p1);
-        let _ = std::fs::remove_file(&p2);
+        assert_eq!(
+            std::fs::read(manifest_path(&p1)).unwrap(),
+            std::fs::read(manifest_path(&p2)).unwrap()
+        );
+        for i in 0..a.shard_count() {
+            assert_eq!(
+                std::fs::read(segment_path(&p1, i)).unwrap(),
+                std::fs::read(segment_path(&p2, i)).unwrap(),
+                "segment {i} bytes diverged"
+            );
+        }
+        cleanup(&p1);
+        cleanup(&p2);
     }
 
     #[test]
     fn wrong_version_or_magic_degrades_to_cold() {
-        let path = tmp("wrong_magic.bin");
+        let path = store("wrong_magic");
+        std::fs::create_dir_all(&path).unwrap();
         let mut bytes = b"QMMCEDG9".to_vec(); // future version
+        bytes.extend_from_slice(&16u32.to_le_bytes());
         bytes.extend_from_slice(&0u64.to_le_bytes());
-        std::fs::write(&path, &bytes).unwrap();
-        let memo = EdgeMemo::with_capacity(8);
+        std::fs::write(manifest_path(&path), &bytes).unwrap();
+        let memo = EdgeMemo::with_capacity(64);
         assert!(load_edge_memo(&memo, &path).is_err());
-        assert_eq!(warm_start_edge_memo(&memo, &path), 0);
+        assert_eq!(warm_start_edge_memo(&memo, &path), WarmStartReport::default());
         assert!(memo.is_empty(), "rejected store must leave the memo cold");
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
     }
 
     #[test]
-    fn truncated_store_degrades_to_cold() {
-        let path = tmp("truncated.bin");
+    fn shard_count_mismatch_degrades_to_cold() {
+        let path = store("shard_mismatch");
+        std::fs::create_dir_all(&path).unwrap();
+        std::fs::write(manifest_path(&path), manifest_bytes(8, 64).unwrap()).unwrap();
         let memo = EdgeMemo::with_capacity(64);
-        for (k, e) in sample_edges() {
-            memo.insert(k, e);
+        assert!(load_edge_memo(&memo, &path).is_err());
+        assert_eq!(warm_start_edge_memo(&memo, &path), WarmStartReport::default());
+        assert!(memo.is_empty());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn truncated_segment_degrades_only_its_shard() {
+        let path = store("truncated_segment");
+        let memo = EdgeMemo::with_capacity(256);
+        for low in 1..=3 {
+            memo.insert(key_in(3, low), small_edge(low as f64));
+            memo.insert(key_in(7, low), small_edge(low as f64 + 0.5));
         }
         save_edge_memo(&memo, &path).unwrap();
-        let bytes = std::fs::read(&path).unwrap();
-        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
-        let cold = EdgeMemo::with_capacity(64);
-        assert!(load_edge_memo(&cold, &path).is_err());
-        assert_eq!(warm_start_edge_memo(&cold, &path), 0);
-        assert!(cold.is_empty());
-        let _ = std::fs::remove_file(&path);
+        let seg3 = segment_path(&path, 3);
+        let bytes = std::fs::read(&seg3).unwrap();
+        std::fs::write(&seg3, &bytes[..12]).unwrap();
+
+        // strict load rejects the whole store and leaves the memo untouched
+        let strict = EdgeMemo::with_capacity(256);
+        assert!(load_edge_memo(&strict, &path).is_err());
+        assert!(strict.is_empty());
+
+        // forgiving warm start degrades only shard 3
+        let warm = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&warm, &path);
+        assert_eq!(report.degraded_segments, 1);
+        assert_eq!(report.recovered_segments, 15);
+        assert_eq!(report.edges, 3);
+        for low in 1..=3 {
+            assert!(warm.get(key_in(3, low)).is_none(), "degraded shard is cold");
+            assert!(warm.get(key_in(7, low)).is_some(), "other shards warm");
+        }
+        // the degraded shard was re-marked dirty: the next flush heals it
+        assert!(warm.shard_dirty(3));
+        let healed = flush_edge_memo(&warm, &path);
+        assert_eq!(healed.written_segments, 1);
+        assert_eq!(healed.skipped_segments, 15);
+        let again = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&again, &path);
+        assert_eq!(report.degraded_segments, 0);
+        assert_eq!(report.recovered_segments, 16);
+        assert_eq!(report.edges, 3);
+        cleanup(&path);
     }
 
     #[test]
-    fn trailing_garbage_degrades_to_cold() {
-        let path = tmp("trailing.bin");
-        let memo = EdgeMemo::with_capacity(8);
-        memo.insert(1, CachedEdge {
-            program: None,
-            signal: StepSignal::Rejected,
-            speedup: 1.0,
-            from_disk: false,
-        });
+    fn trailing_garbage_in_segment_degrades_that_shard() {
+        let path = store("trailing_segment");
+        let memo = EdgeMemo::with_capacity(256);
+        memo.insert(key_in(3, 1), small_edge(1.0));
+        memo.insert(key_in(7, 1), small_edge(2.0));
         save_edge_memo(&memo, &path).unwrap();
-        let mut bytes = std::fs::read(&path).unwrap();
+        let seg7 = segment_path(&path, 7);
+        let mut bytes = std::fs::read(&seg7).unwrap();
         bytes.push(0xFF);
-        std::fs::write(&path, &bytes).unwrap();
-        let cold = EdgeMemo::with_capacity(8);
-        assert!(load_edge_memo(&cold, &path).is_err());
-        assert!(cold.is_empty());
-        let _ = std::fs::remove_file(&path);
-    }
-
-    #[test]
-    fn corrupt_count_degrades_to_cold() {
-        let path = tmp("bad_count.bin");
-        let mut bytes = MAGIC.to_vec();
-        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
-        std::fs::write(&path, &bytes).unwrap();
-        let memo = EdgeMemo::with_capacity(8);
-        assert!(load_edge_memo(&memo, &path).is_err());
-        assert_eq!(warm_start_edge_memo(&memo, &path), 0);
-        let _ = std::fs::remove_file(&path);
+        std::fs::write(&seg7, &bytes).unwrap();
+        let warm = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&warm, &path);
+        assert_eq!(report.degraded_segments, 1);
+        assert_eq!(report.edges, 1);
+        assert!(warm.get(key_in(3, 1)).is_some());
+        assert!(warm.get(key_in(7, 1)).is_none());
+        cleanup(&path);
     }
 
     #[test]
     fn missing_store_is_a_silent_cold_start() {
-        let path = tmp("never_written.bin");
-        let _ = std::fs::remove_file(&path);
-        let memo = EdgeMemo::with_capacity(8);
-        assert_eq!(warm_start_edge_memo(&memo, &path), 0);
+        let path = store("never_written");
+        let memo = EdgeMemo::with_capacity(64);
+        assert_eq!(warm_start_edge_memo(&memo, &path), WarmStartReport::default());
         assert!(memo.is_empty());
         assert_eq!(memo.disk_loaded(), 0);
     }
 
     #[test]
+    fn missing_segment_file_is_an_empty_shard() {
+        let path = store("missing_segment");
+        let memo = EdgeMemo::with_capacity(256);
+        memo.insert(key_in(3, 1), small_edge(1.0));
+        save_edge_memo(&memo, &path).unwrap();
+        std::fs::remove_file(segment_path(&path, 5)).unwrap();
+        let strict = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&strict, &path).unwrap(), 1);
+        let warm = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&warm, &path);
+        assert_eq!(report.recovered_segments, 15);
+        assert_eq!(report.degraded_segments, 0);
+        assert_eq!(report.edges, 1);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn dirty_skip_flush_rewrites_only_dirty_segments() {
+        let path = store("dirty_skip");
+        let memo = EdgeMemo::with_capacity(256);
+        for low in 1..=3 {
+            memo.insert(key_in(1, low), small_edge(low as f64));
+            memo.insert(key_in(2, low), small_edge(low as f64 + 0.5));
+        }
+        save_edge_memo(&memo, &path).unwrap();
+        let before: Vec<(PathBuf, Vec<u8>, std::time::SystemTime)> = (0..memo.shard_count())
+            .map(|i| segment_path(&path, i))
+            .chain([manifest_path(&path)])
+            .map(|p| (p.clone(), std::fs::read(&p).unwrap(), mtime(&p)))
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(25));
+
+        // flush over an untouched memo: zero segments written, zero files
+        // changed (bytes AND mtimes)
+        let clean = flush_edge_memo(&memo, &path);
+        assert_eq!(clean.written_segments, 0);
+        assert_eq!(clean.skipped_segments, memo.shard_count());
+        assert_eq!(clean.edges, 6);
+        for (p, bytes, stamp) in &before {
+            assert_eq!(&std::fs::read(p).unwrap(), bytes, "{p:?} bytes changed");
+            assert_eq!(&mtime(p), stamp, "{p:?} was rewritten");
+        }
+
+        // dirty exactly one shard: exactly one segment is rewritten
+        memo.insert(key_in(2, 99), small_edge(9.0));
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        let partial = flush_edge_memo(&memo, &path);
+        assert_eq!(partial.written_segments, 1);
+        assert_eq!(partial.skipped_segments, memo.shard_count() - 1);
+        assert_eq!(partial.edges, 7);
+        for (p, bytes, stamp) in &before {
+            if *p == segment_path(&path, 2) {
+                assert_ne!(&std::fs::read(p).unwrap(), bytes);
+            } else {
+                assert_eq!(&std::fs::read(p).unwrap(), bytes, "{p:?} bytes changed");
+                assert_eq!(&mtime(p), stamp, "{p:?} was rewritten");
+            }
+        }
+        let warm = EdgeMemo::with_capacity(256);
+        assert_eq!(warm_start_edge_memo(&warm, &path).edges, 7);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn failed_segment_write_leaves_prior_store_intact() {
+        let path = store("failed_flush");
+        let memo = EdgeMemo::with_capacity(256);
+        memo.insert(key_in(4, 1), small_edge(1.0));
+        save_edge_memo(&memo, &path).unwrap();
+        let seg4 = segment_path(&path, 4);
+        let before = std::fs::read(&seg4).unwrap();
+
+        // block the temp sibling with a directory: File::create fails, so
+        // the flush cannot stage the new bytes — the regression scenario
+        // where the old code would already have truncated the store
+        memo.insert(key_in(4, 2), small_edge(2.0));
+        std::fs::create_dir_all(sibling(&seg4, ".tmp")).unwrap();
+        let failed = flush_edge_memo(&memo, &path);
+        assert_eq!(failed.written_segments, 0);
+        assert!(memo.shard_dirty(4), "failed shard must stay dirty for retry");
+        assert_eq!(std::fs::read(&seg4).unwrap(), before, "prior segment lost");
+        let prior = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&prior, &path).unwrap(), 1);
+        assert!(prior.get(key_in(4, 1)).is_some());
+
+        // unblock: the retry persists both edges
+        std::fs::remove_dir_all(sibling(&seg4, ".tmp")).unwrap();
+        let retried = flush_edge_memo(&memo, &path);
+        assert_eq!(retried.written_segments, 1);
+        let warm = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&warm, &path).unwrap(), 2);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn legacy_v1_store_migrates_on_warm_start() {
+        let path = store("legacy_migrate");
+        write_legacy_store(&path, &sample_edges());
+        let memo = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&memo, &path);
+        assert_eq!(report.edges, 5);
+        assert_eq!(report.recovered_segments, 1);
+        assert_eq!(report.degraded_segments, 0);
+        assert!(path.is_dir(), "legacy file replaced by a segmented store");
+        assert!(manifest_path(&path).is_file());
+        assert!(!sibling(&path, ".legacy").exists());
+        for (k, original) in sample_edges() {
+            assert_same_edge(&memo.get(k).unwrap(), &original);
+        }
+        // migration already persisted everything: nothing left to flush
+        let clean = flush_edge_memo(&memo, &path);
+        assert_eq!(clean.written_segments, 0);
+        // and a second process warm-starts from the migrated layout
+        let warm = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&warm, &path);
+        assert_eq!(report.edges, 5);
+        assert!(report.recovered_segments > 1);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn corrupt_legacy_store_is_left_in_place_cold() {
+        let path = store("legacy_corrupt");
+        write_legacy_store(&path, &sample_edges());
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        std::fs::write(&path, &bytes).unwrap();
+        let memo = EdgeMemo::with_capacity(256);
+        assert_eq!(warm_start_edge_memo(&memo, &path), WarmStartReport::default());
+        assert!(memo.is_empty());
+        assert!(path.is_file(), "a bad legacy store is not destroyed");
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn failed_legacy_migration_keeps_file_byte_identical() {
+        let path = store("legacy_blocked");
+        write_legacy_store(&path, &sample_edges());
+        let original = std::fs::read(&path).unwrap();
+        // a non-empty directory at the backup path makes the move-aside
+        // rename fail mid-migration
+        let backup = sibling(&path, ".legacy");
+        std::fs::create_dir_all(backup.join("occupied")).unwrap();
+        let memo = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&memo, &path);
+        assert_eq!(report.edges, 5, "edges still load even if migration fails");
+        assert!(path.is_file(), "failed migration must not consume the store");
+        assert_eq!(std::fs::read(&path).unwrap(), original);
+        let reload = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&reload, &path).unwrap(), 5);
+        let _ = std::fs::remove_dir_all(&backup);
+        cleanup(&path);
+    }
+
+    #[test]
     fn flush_then_warm_start_counts_disk_state() {
-        let path = tmp("flush_warm.bin");
-        let memo = EdgeMemo::with_capacity(64);
+        let path = store("flush_warm");
+        let memo = EdgeMemo::with_capacity(256);
         for (k, e) in sample_edges() {
             memo.insert(k, e);
         }
-        assert_eq!(flush_edge_memo(&memo, &path), 5);
-        let warm = EdgeMemo::with_capacity(64);
-        assert_eq!(warm_start_edge_memo(&warm, &path), 5);
+        // a fresh store: only the one dirty shard (all sample keys land in
+        // shard 0) gets a segment file — clean-empty shards write nothing
+        let report = flush_edge_memo(&memo, &path);
+        assert_eq!(report.edges, 5);
+        assert_eq!(report.written_segments, 1);
+        assert_eq!(report.skipped_segments, 15);
+        assert!(segment_path(&path, 0).is_file());
+        assert!(!segment_path(&path, 1).exists());
+        let warm = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&warm, &path);
+        assert_eq!(report.edges, 5);
+        assert_eq!(report.recovered_segments, 1);
         assert_eq!(warm.len(), 5);
         assert_eq!(warm.disk_loaded(), 5);
-        let _ = std::fs::remove_file(&path);
+        cleanup(&path);
     }
 }

@@ -143,7 +143,10 @@ impl JsonlSink {
 /// [`Session`]: the session's memo trio persists across
 /// [`BatchRunner::run`] calls (and across runners), so repeated sweeps
 /// replay from warm tables; cache policy, `--memo-store` warm-start/flush
-/// and the stats registry are the session's job, not the runner's.
+/// and the stats registry are the session's job, not the runner's. A
+/// sweep replayed entirely from a warm store performs no inserts, so the
+/// session's end-of-run flush skips every segment (`written_segments: 0`
+/// in `--stats-json` — the dirty-skip fast path CI asserts on).
 pub struct BatchRunner<'s> {
     threads: usize,
     session: &'s Session,

@@ -242,11 +242,22 @@ struct MemoShard<V> {
     order: VecDeque<(u64, u64)>,
     /// Monotone stamp source for this shard.
     tick: u64,
+    /// Contents-dirty flag backing the persistence tier's dirty-skip
+    /// flushes: set whenever the shard's *entry set* changes (insert, and
+    /// the evictions an insert triggers), cleared by the flush that
+    /// serialized the shard. Get-hits and recency compaction touch only
+    /// LRU bookkeeping — nothing persisted — so they leave it alone.
+    dirty: bool,
 }
 
 impl<V> MemoShard<V> {
     fn new() -> MemoShard<V> {
-        MemoShard { map: HashMap::new(), order: VecDeque::new(), tick: 0 }
+        MemoShard {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            tick: 0,
+            dirty: false,
+        }
     }
 
     fn next_stamp(&mut self) -> u64 {
@@ -295,10 +306,18 @@ impl<V: Clone> ShardedMemo<V> {
         }
     }
 
+    /// Which shard (and so which persisted segment file) a key lives in.
+    /// Stable across processes — the segmented memo store relies on it to
+    /// partition entries into per-shard segment files.
+    #[inline]
+    pub fn shard_index(key: u64) -> usize {
+        // high bits: the low bits feed the HashMap's own bucketing
+        (key >> 48) as usize % SHARDS
+    }
+
     #[inline]
     fn shard(&self, key: u64) -> &Mutex<MemoShard<V>> {
-        // high bits: the low bits feed the HashMap's own bucketing
-        &self.shards[(key >> 48) as usize % SHARDS]
+        &self.shards[Self::shard_index(key)]
     }
 
     /// Look a key up, counting the hit or miss. A hit refreshes the
@@ -330,6 +349,7 @@ impl<V: Clone> ShardedMemo<V> {
         let mut guard = self.shard(key).lock().unwrap();
         let shard = &mut *guard;
         let stamp = shard.next_stamp();
+        shard.dirty = true;
         shard.map.insert(key, Slot { value, stamp });
         shard.order.push_back((key, stamp));
         while shard.map.len() > self.max_per_shard {
@@ -383,6 +403,53 @@ impl<V: Clone> ShardedMemo<V> {
             out.extend(s.map.iter().map(|(k, slot)| (*k, slot.value.clone())));
         }
         out
+    }
+
+    /// Number of shards (== persisted segment files); fixed at
+    /// construction.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Live entry count of one shard.
+    pub fn shard_len(&self, i: usize) -> usize {
+        self.shards[i].lock().unwrap().map.len()
+    }
+
+    /// Snapshot one shard's resident `(key, value)` pairs (the unit the
+    /// segmented memo store serializes). Counts no stats, bumps no
+    /// recency.
+    pub fn entries_of_shard(&self, i: usize) -> Vec<(u64, V)> {
+        let s = self.shards[i].lock().unwrap();
+        s.map.iter().map(|(k, slot)| (*k, slot.value.clone())).collect()
+    }
+
+    /// Whether shard `i`'s entry set changed since the last
+    /// [`Self::clear_shard_dirty`]. Freshly-constructed shards are clean.
+    pub fn shard_dirty(&self, i: usize) -> bool {
+        self.shards[i].lock().unwrap().dirty
+    }
+
+    /// Atomically clear shard `i`'s dirty flag and snapshot its entries —
+    /// the flush handshake. Clearing and snapshotting under one lock means
+    /// an insert racing with the flush either lands in the snapshot or
+    /// re-dirties the shard for the next flush; it can never be lost.
+    pub fn take_shard_for_flush(&self, i: usize) -> Vec<(u64, V)> {
+        let mut s = self.shards[i].lock().unwrap();
+        s.dirty = false;
+        s.map.iter().map(|(k, slot)| (*k, slot.value.clone())).collect()
+    }
+
+    /// Clear shard `i`'s dirty flag (used after a warm start that loaded
+    /// the shard to exactly its on-disk contents).
+    pub fn clear_shard_dirty(&self, i: usize) {
+        self.shards[i].lock().unwrap().dirty = false;
+    }
+
+    /// Re-mark shard `i` dirty (a flush that failed mid-write puts the
+    /// flag back so the next flush retries the segment).
+    pub fn mark_shard_dirty(&self, i: usize) {
+        self.shards[i].lock().unwrap().dirty = true;
     }
 
     /// Test hook: every map entry must own exactly one live recency pair,
@@ -749,6 +816,51 @@ mod tests {
         assert_eq!(memo.len(), 1);
         assert_eq!(memo.get(7), Some(99));
         memo.assert_lru_invariant();
+    }
+
+    #[test]
+    fn dirty_tracks_entry_set_changes_only() {
+        let memo: ShardedMemo<u64> = ShardedMemo::new(32);
+        let n = memo.shard_count();
+        assert!((0..n).all(|i| !memo.shard_dirty(i)),
+                "fresh shards must be clean");
+        memo.insert(0, 100); // key 0 -> shard 0
+        assert!(memo.shard_dirty(0), "insert must dirty its shard");
+        assert!((1..n).all(|i| !memo.shard_dirty(i)),
+                "insert must not dirty other shards");
+        assert_eq!(memo.take_shard_for_flush(0), vec![(0, 100)]);
+        assert!(!memo.shard_dirty(0), "flush snapshot must clear the flag");
+        // reads and recency traffic change nothing persisted
+        memo.get(0);
+        memo.get(999);
+        assert!(!memo.shard_dirty(0), "get must never dirty a shard");
+        // eviction pressure (cap 2 per shard) changes the entry set
+        memo.insert(1, 101);
+        memo.insert(2, 102);
+        memo.take_shard_for_flush(0);
+        memo.insert(3, 103); // evicts the coldest of {0,1,2}
+        assert!(memo.stats().evictions > 0);
+        assert!(memo.shard_dirty(0), "eviction-triggering insert dirties");
+        memo.clear_shard_dirty(0);
+        memo.mark_shard_dirty(0);
+        assert!(memo.shard_dirty(0), "mark/clear round-trips");
+    }
+
+    #[test]
+    fn shard_accessors_partition_entries() {
+        let memo: ShardedMemo<u64> = ShardedMemo::new(1024);
+        for k in 0..SHARDS as u64 {
+            memo.insert(k << 48, k); // one key per shard
+        }
+        assert_eq!(memo.shard_count(), SHARDS);
+        for i in 0..SHARDS {
+            assert_eq!(memo.shard_len(i), 1);
+            let entries = memo.entries_of_shard(i);
+            assert_eq!(entries.len(), 1);
+            assert_eq!(ShardedMemo::<u64>::shard_index(entries[0].0), i);
+        }
+        let total: usize = (0..SHARDS).map(|i| memo.shard_len(i)).sum();
+        assert_eq!(total, memo.len());
     }
 
     #[test]

@@ -79,9 +79,17 @@ COMMANDS:
                               is given; hit/miss/eviction stats on stderr,
                               or as one JSON object via --stats-json;
                               --memo-store persists the EdgeMemo across
-                              runs: warm-started at startup, compacted to
-                              the live entries and flushed at exit,
-                              corrupt/missing files = cold start; the
+                              runs as a directory of per-shard segment
+                              files: warm-started at startup, compacted
+                              to the live entries and flushed at exit
+                              with only the dirty segments rewritten
+                              (each via temp+rename, so a crash never
+                              corrupts the store); a corrupt segment
+                              cold-starts only its own shard, a missing
+                              store = cold start, and a legacy
+                              single-file store is migrated in place;
+                              per-segment recovered/degraded/written/
+                              skipped counters land in --stats-json; the
                               QIMENG_MEMO_CAPACITY env var bounds the
                               memo's entry count)
   table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--memo-store F]

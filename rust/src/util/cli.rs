@@ -1,7 +1,21 @@
 //! Tiny CLI argument parser (no clap offline): subcommand + `--flag value`
 //! pairs + `--switch` booleans.
+//!
+//! Boolean switches are recognized by a registry (the `--no-*` family
+//! plus [`KNOWN_SWITCHES`]) so they never consume a following bare token
+//! as a value — `eval --no-edge-memo out.jsonl` keeps both the switch
+//! and the positional.
 
 use std::collections::BTreeMap;
+
+/// Boolean switches that take no value. Every `--no-*` flag is a switch
+/// implicitly; anything else boolean must be listed here, or a following
+/// bare token will be eaten as its value.
+const KNOWN_SWITCHES: &[&str] = &["verbose", "show-code"];
+
+fn is_switch(name: &str) -> bool {
+    name.starts_with("no-") || KNOWN_SWITCHES.contains(&name)
+}
 
 /// Parsed command line: `repro <cmd> [--key value|--switch]...`.
 #[derive(Debug, Default, Clone)]
@@ -28,6 +42,10 @@ impl Args {
         }
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
+                if is_switch(name) {
+                    out.switches.push(name.to_string());
+                    continue;
+                }
                 match it.peek() {
                     Some(v) if !v.starts_with("--") => {
                         let v = it.next().unwrap();
@@ -77,14 +95,54 @@ mod tests {
 
     #[test]
     fn subcommand_flags_switches() {
-        // note: a bare token after `--name` is consumed as its value, so
-        // positionals go before switches (documented parser behaviour)
         let a = parse("eval --suite kernelbench --gpu A100 x.bin --verbose");
         assert_eq!(a.cmd, "eval");
         assert_eq!(a.get("suite"), Some("kernelbench"));
         assert_eq!(a.get("gpu"), Some("A100"));
         assert!(a.has("verbose"));
         assert_eq!(a.positional, vec!["x.bin"]);
+    }
+
+    /// The regression: a boolean switch must never consume a following
+    /// bare token as its value (`--no-edge-memo out.jsonl` used to drop
+    /// both the switch and the positional).
+    #[test]
+    fn switches_never_eat_a_following_positional() {
+        let a = parse("eval --no-edge-memo out.jsonl");
+        assert!(a.has("no-edge-memo"));
+        assert_eq!(a.positional, vec!["out.jsonl"]);
+        assert!(a.get("no-edge-memo").is_none());
+
+        let a = parse("eval --verbose out.jsonl --no-cost-cache more.jsonl");
+        assert!(a.has("verbose"));
+        assert!(a.has("no-cost-cache"));
+        assert_eq!(a.positional, vec!["out.jsonl", "more.jsonl"]);
+    }
+
+    /// Every switch-then-positional ordering round-trips: before flags,
+    /// between flags, and trailing.
+    #[test]
+    fn switch_positional_orderings() {
+        let a = parse("eval --show-code x.bin --suite kb1 --no-analysis-cache y.bin --verbose");
+        assert_eq!(a.cmd, "eval");
+        assert!(a.has("show-code"));
+        assert!(a.has("no-analysis-cache"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("suite"), Some("kb1"));
+        assert_eq!(a.positional, vec!["x.bin", "y.bin"]);
+    }
+
+    /// Value-taking flags still consume their argument; an unknown
+    /// `--flag` followed by another `--flag` still parses as a switch.
+    #[test]
+    fn value_flags_still_take_values() {
+        let a = parse("eval --memo-store shared.store --limit 3 --dry-run --verbose");
+        assert_eq!(a.get("memo-store"), Some("shared.store"));
+        assert_eq!(a.usize_or("limit", 0), 3);
+        // unknown non-registry flag followed by another `--flag`:
+        // degrades to a switch, exactly as before
+        assert!(a.has("dry-run"));
+        assert!(a.has("verbose"));
     }
 
     #[test]

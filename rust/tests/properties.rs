@@ -528,12 +528,29 @@ fn prop_edge_memo_episode_bitwise_identical() {
     });
 }
 
-/// Persistence differential (the `--memo-store` tier, now owned by the
-/// [`Session`]): replaying an episode through a second session that
+/// Non-empty segment files of a segmented store (`seg_NN.bin` larger
+/// than the 20-byte header), sorted by name for determinism.
+fn nonempty_segments(store: &std::path::Path) -> Vec<std::path::PathBuf> {
+    let mut segs: Vec<_> = std::fs::read_dir(store)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let name = p.file_name().unwrap().to_string_lossy();
+            name.starts_with("seg_")
+                && std::fs::metadata(p).unwrap().len() > 20
+        })
+        .collect();
+    segs.sort();
+    segs
+}
+
+/// Persistence differential (the segmented `--memo-store` tier, owned by
+/// the [`Session`]): replaying an episode through a second session that
 /// warm-started from the store the first session flushed must be
 /// bit-identical to the cold episode, the restored session must account
-/// for its disk state, and a corrupted store must degrade to a cold
-/// start without panicking.
+/// for its disk state, and corrupting exactly one segment must degrade
+/// only that shard — the surviving segments still warm-start and the
+/// replay stays bit-identical (the lost edges are recomputed live).
 #[test]
 fn prop_edge_memo_persistence_roundtrip() {
     let dir = std::env::temp_dir().join("qimeng_prop_memo_store");
@@ -548,10 +565,10 @@ fn prop_edge_memo_persistence_roundtrip() {
             .build();
         let baseline = run_episode(&task, case, &cold);
         let path = dir.join(format!(
-            "roundtrip_{}.bin",
+            "roundtrip_{}.store",
             case_no.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
         ));
-        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir_all(&path);
         // warm a session's memo with one episode, then persist it
         let warm = Session::builder()
             .cost_cache(false)
@@ -576,6 +593,8 @@ fn prop_edge_memo_persistence_roundtrip() {
                      restored.warm_loaded());
         prop_assert!(restored.edges().unwrap().disk_loaded() == saved,
                      "disk_loaded must count the warm-started entries");
+        prop_assert!(restored.warm_report().degraded_segments == 0,
+                     "an intact store must not report degraded segments");
         let got = run_episode(&task, case, &restored);
         prop_assert!(
             got == baseline,
@@ -591,21 +610,114 @@ fn prop_edge_memo_persistence_roundtrip() {
             !has_transition || restored.edges().unwrap().stats().disk_hits > 0,
             "replay from a loaded store must report disk hits"
         );
-        // corrupt the store (drop the last byte): cold start, no panic
-        let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
-        std::fs::write(&path, &bytes[..bytes.len() - 1])
+        if saved == 0 {
+            return Ok(());
+        }
+        // corrupt exactly one non-empty segment (drop its last byte):
+        // only that shard degrades, the others still warm-start, and the
+        // replay stays bit-identical — the lost edges recompute live
+        let segs = nonempty_segments(&path);
+        prop_assert!(!segs.is_empty(), "a non-empty store has segments");
+        let victim = segs.last().unwrap();
+        let bytes = std::fs::read(victim).map_err(|e| e.to_string())?;
+        std::fs::write(victim, &bytes[..bytes.len() - 1])
             .map_err(|e| e.to_string())?;
-        let fresh = Session::builder()
+        let partial = Session::builder()
             .cost_cache(false)
             .analysis_cache(false)
             .memo_store(Some(path.clone()))
             .build();
+        let report = partial.warm_report();
+        prop_assert!(report.degraded_segments == 1,
+                     "exactly the corrupted segment degrades, got {report:?}");
+        prop_assert!(partial.warm_loaded() < saved,
+                     "the degraded shard's edges must not load");
         prop_assert!(
-            fresh.warm_loaded() == 0
-                && fresh.edges().unwrap().is_empty()
-                && fresh.edges().unwrap().disk_loaded() == 0,
-            "corrupted store must degrade to a cold memo"
+            partial.edges().unwrap().disk_loaded() == partial.warm_loaded(),
+            "disk_loaded must count the surviving entries"
         );
+        let got = run_episode(&task, case, &partial);
+        prop_assert!(
+            got == baseline,
+            "partially-recovered episode diverged from cold episode:\n  \
+             got {:?}\n  want {:?}",
+            got.signals, baseline.signals
+        );
+        // with at least one surviving non-empty segment, the replay is
+        // still served partly from disk
+        prop_assert!(
+            segs.len() < 2
+                || partial.edges().unwrap().stats().disk_hits > 0,
+            "surviving shards must still serve disk hits"
+        );
+        let _ = std::fs::remove_dir_all(&path);
+        Ok(())
+    });
+}
+
+/// Dirty-skip property: a flush after a clean (pure-replay) run rewrites
+/// **zero** segments and leaves every store file byte-identical, across
+/// whatever segment counts the generated episodes produce. The replay
+/// itself stays bit-identical to the warm run.
+#[test]
+fn prop_clean_flush_writes_zero_segments() {
+    let dir = std::env::temp_dir().join("qimeng_prop_clean_flush");
+    std::fs::create_dir_all(&dir).unwrap();
+    let case_no = std::sync::atomic::AtomicUsize::new(0);
+    check(4747, 16, gen_episode_case, |case: &EpisodeCase| {
+        let task = case.recipe.task();
+        let path = dir.join(format!(
+            "clean_{}.store",
+            case_no.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        let warm = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .memo_store(Some(path.clone()))
+            .build();
+        let baseline = run_episode(&task, case, &warm);
+        warm.finish();
+        let before: std::collections::BTreeMap<String, Vec<u8>> =
+            std::fs::read_dir(&path)
+                .map_err(|e| e.to_string())?
+                .map(|e| {
+                    let p = e.unwrap().path();
+                    (
+                        p.file_name().unwrap().to_string_lossy().into_owned(),
+                        std::fs::read(&p).unwrap(),
+                    )
+                })
+                .collect();
+        // replay-only session: no inserts, every shard stays clean
+        let replay = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .memo_store(Some(path.clone()))
+            .build();
+        let got = run_episode(&task, case, &replay);
+        prop_assert!(got == baseline, "replay diverged from the warm run");
+        replay.finish();
+        let store = replay.stats().store.unwrap();
+        prop_assert!(
+            store.written_segments == Some(0),
+            "clean run must rewrite zero segments, wrote {:?}",
+            store.written_segments
+        );
+        let after: std::collections::BTreeMap<String, Vec<u8>> =
+            std::fs::read_dir(&path)
+                .map_err(|e| e.to_string())?
+                .map(|e| {
+                    let p = e.unwrap().path();
+                    (
+                        p.file_name().unwrap().to_string_lossy().into_owned(),
+                        std::fs::read(&p).unwrap(),
+                    )
+                })
+                .collect();
+        prop_assert!(before == after,
+                     "a clean flush must leave every store file untouched");
+        let _ = std::fs::remove_dir_all(&path);
         Ok(())
     });
 }
