@@ -32,14 +32,18 @@
 //! are bit-identical across all 8 on/off combinations (guarded by the
 //! generative differential suite in `rust/tests/properties.rs`).
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::env::{
     flush_edge_memo, warm_start_edge_memo, EdgeMemo, FlushReport, WarmStartReport,
 };
-use crate::gpusim::{CostCache, MemoStats};
+use crate::gpusim::{graph_fingerprint, program_fingerprint, CostCache,
+                    MemoStats};
+use crate::graph::Graph;
+use crate::kir::{render, GateStats, Program, TargetLang};
 use crate::transform::AnalysisCache;
 use crate::util::json::Json;
 
@@ -57,6 +61,16 @@ pub struct Session {
     cost: Option<CostCache>,
     analysis: Option<AnalysisCache>,
     edges: Option<Arc<EdgeMemo>>,
+    /// Pre-verif static gate counters (`kir::verify`); `None` = gate off
+    /// (`--no-static-gate`), and envs fall through to dynamic-only
+    /// verification exactly as before the gate existed.
+    gate: Option<Arc<GateStats>>,
+    /// Render memo: `kir::render` is pure per (graph fp, program fp,
+    /// dialect), so `--show-code` and golden tests share one rendering
+    /// per distinct program.
+    renders: Mutex<HashMap<(u64, u64, u8), Arc<String>>>,
+    render_hits: AtomicUsize,
+    render_misses: AtomicUsize,
     store: Option<PathBuf>,
     warm: WarmStartReport,
     persisted: AtomicUsize,
@@ -86,6 +100,37 @@ impl Session {
     /// envs can hold it beyond the borrow).
     pub fn edges(&self) -> Option<&Arc<EdgeMemo>> {
         self.edges.as_ref()
+    }
+
+    /// The static-gate counters, when the pre-verif gate is enabled
+    /// (`Arc`-shared so envs can hold them beyond the borrow).
+    pub fn gate(&self) -> Option<&Arc<GateStats>> {
+        self.gate.as_ref()
+    }
+
+    /// Render a program through the session's render memo. `kir::render`
+    /// is a pure function of (program, graph, shapes, dialect), so
+    /// identical programs render once per session; repeated `--show-code`
+    /// paths and golden comparisons hit the cached string.
+    pub fn render_cached(&self, p: &Program, g: &Graph,
+                         shapes: &[Vec<usize>], lang: TargetLang)
+                         -> Arc<String> {
+        let key = (graph_fingerprint(g, shapes), program_fingerprint(p),
+                   lang as u8);
+        if let Some(hit) = self.renders.lock().unwrap().get(&key) {
+            self.render_hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        // render outside the lock: renders are pure, so a racing miss on
+        // the same key computes the same string and the insert is benign
+        let text = Arc::new(render(p, g, shapes, lang));
+        self.render_misses.fetch_add(1, Ordering::Relaxed);
+        self.renders
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::clone(&text))
+            .clone()
     }
 
     /// The persistence-tier path, when configured (requires the edge
@@ -136,6 +181,12 @@ impl Session {
             cost: self.cost.as_ref().map(|c| c.full_stats()),
             analysis: self.analysis.as_ref().map(|a| a.stats()),
             edges: self.edges.as_ref().map(|e| e.stats()),
+            static_gate: self
+                .gate
+                .as_ref()
+                .map(|g| (g.checks(), g.rejects())),
+            render_hits: self.render_hits.load(Ordering::Relaxed),
+            render_misses: self.render_misses.load(Ordering::Relaxed),
             edge_len: self.edges.as_ref().map_or(0, |e| e.len()),
             edge_capacity: self.edges.as_ref().map_or(0, |e| e.capacity()),
             edge_disk_loaded: self
@@ -196,6 +247,7 @@ pub struct SessionBuilder {
     cost: bool,
     analysis: bool,
     edges: bool,
+    gate: bool,
     store: Option<PathBuf>,
     edge_capacity: Option<usize>,
 }
@@ -206,6 +258,7 @@ impl Default for SessionBuilder {
             cost: true,
             analysis: true,
             edges: true,
+            gate: true,
             store: None,
             edge_capacity: None,
         }
@@ -228,6 +281,16 @@ impl SessionBuilder {
     /// Enable/disable the transition memo ([`EdgeMemo`]).
     pub fn edge_memo(mut self, on: bool) -> Self {
         self.edges = on;
+        self
+    }
+
+    /// Enable/disable the pre-verif static gate (`--no-static-gate`).
+    /// The gate rejects statically-illegal candidates before dynamic
+    /// verif trials; Error-severity rules are transform invariants, so
+    /// outcomes are byte-identical either way (guarded by
+    /// `rust/tests/verify.rs`) — only the trial count can differ.
+    pub fn static_gate(mut self, on: bool) -> Self {
+        self.gate = on;
         self
     }
 
@@ -270,6 +333,10 @@ impl SessionBuilder {
             cost: self.cost.then(CostCache::new),
             analysis: self.analysis.then(AnalysisCache::new),
             edges,
+            gate: self.gate.then(|| Arc::new(GateStats::new())),
+            renders: Mutex::new(HashMap::new()),
+            render_hits: AtomicUsize::new(0),
+            render_misses: AtomicUsize::new(0),
             store,
             warm,
             persisted: AtomicUsize::new(0),
@@ -309,6 +376,13 @@ pub struct StatsRegistry {
     pub cost: Option<MemoStats>,
     pub analysis: Option<MemoStats>,
     pub edges: Option<MemoStats>,
+    /// `(checks, rejects)` of the pre-verif static gate; `None` when the
+    /// gate is disabled.
+    pub static_gate: Option<(usize, usize)>,
+    /// Render-memo traffic (the memo itself is always present — renders
+    /// are pure and the map is tiny).
+    pub render_hits: usize,
+    pub render_misses: usize,
     /// Live entry count of the edge memo (0 when disabled).
     pub edge_len: usize,
     /// Residency bound of the edge memo (0 when disabled) — the most a
@@ -327,6 +401,20 @@ impl StatsRegistry {
         print_memo_line("cost-cache", &self.cost);
         print_memo_line("analysis-cache", &self.analysis);
         print_memo_line("edge-memo", &self.edges);
+        if let Some((checks, rejects)) = self.static_gate {
+            if checks > 0 {
+                eprintln!(
+                    "static-gate: {checks} candidates checked / {rejects} \
+                     static rejects"
+                );
+            }
+        }
+        if self.render_hits + self.render_misses > 0 {
+            eprintln!(
+                "render-memo: {} hits / {} misses",
+                self.render_hits, self.render_misses
+            );
+        }
     }
 
     /// The whole registry as one JSON object (the `--stats-json`
@@ -351,10 +439,23 @@ impl StatsRegistry {
                 ("skipped_segments", opt_json(s.skipped_segments)),
             ]),
         };
+        let gate = match self.static_gate {
+            None => Json::obj(vec![("enabled", Json::from(false))]),
+            Some((checks, rejects)) => Json::obj(vec![
+                ("enabled", Json::from(true)),
+                ("checks", Json::from(checks)),
+                ("static_rejects", Json::from(rejects)),
+            ]),
+        };
         Json::obj(vec![
             ("cost_cache", memo_json(&self.cost)),
             ("analysis_cache", memo_json(&self.analysis)),
             ("edge_memo", edge),
+            ("static_gate", gate),
+            ("render_memo", Json::obj(vec![
+                ("hits", Json::from(self.render_hits)),
+                ("misses", Json::from(self.render_misses)),
+            ])),
             ("store", store),
         ])
     }
@@ -582,5 +683,54 @@ mod tests {
         assert_eq!(em.get("len").unwrap().as_usize(), Some(1));
         assert!(em.get("capacity").unwrap().as_usize().unwrap() > 0);
         assert_eq!(parsed.get("store"), Some(&Json::Null));
+        let gate = parsed.get("static_gate").unwrap();
+        assert_eq!(gate.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(gate.get("static_rejects").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn static_gate_flag_controls_presence() {
+        let on = Session::default();
+        assert!(on.gate().is_some());
+        assert_eq!(on.stats().static_gate, Some((0, 0)));
+        let off = Session::builder().static_gate(false).build();
+        assert!(off.gate().is_none());
+        assert_eq!(off.stats().static_gate, None);
+        let gate = parse_gate(&off.stats().to_json());
+        assert_eq!(gate.get("enabled"), Some(&Json::Bool(false)));
+    }
+
+    fn parse_gate(j: &Json) -> Json {
+        Json::parse(&j.to_string())
+            .unwrap()
+            .get("static_gate")
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn render_memo_hits_on_identical_programs() {
+        use crate::graph::{infer_shapes, Op};
+
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[8, 16]);
+        let w = g.weight("w", &[16, 4]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        g.mark_output(mm);
+        let shapes = infer_shapes(&g);
+        let p = crate::kir::lower_naive(&g);
+
+        let s = Session::default();
+        let direct = render(&p, &g, &shapes, TargetLang::Triton);
+        let first = s.render_cached(&p, &g, &shapes, TargetLang::Triton);
+        assert_eq!(*first, direct, "memoized render must match direct");
+        let second = s.render_cached(&p, &g, &shapes, TargetLang::Triton);
+        assert!(Arc::ptr_eq(&first, &second), "second render is a hit");
+        // a different dialect is a different key, not a collision
+        let cuda = s.render_cached(&p, &g, &shapes, TargetLang::Cuda);
+        assert_ne!(*cuda, *first);
+        let reg = s.stats();
+        assert_eq!(reg.render_hits, 1);
+        assert_eq!(reg.render_misses, 2);
     }
 }

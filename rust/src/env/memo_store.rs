@@ -838,6 +838,122 @@ pub fn flush_edge_memo(memo: &EdgeMemo, path: &Path) -> FlushReport {
     report
 }
 
+// --- store fsck ------------------------------------------------------
+
+/// One segment's line in an [`fsck_store`] report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentFsck {
+    /// Shard index (from the canonical filename).
+    pub index: usize,
+    /// Entries parsed (0 when corrupt).
+    pub entries: usize,
+    /// Segment file size in bytes.
+    pub bytes: u64,
+    /// Parsed cleanly under the strict reader?
+    pub ok: bool,
+}
+
+/// What `repro store fsck` found (and, with `drop_orphans`, repaired).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FsckReport {
+    /// Shard count the manifest declares.
+    pub shards: usize,
+    /// Capacity the manifest declares.
+    pub capacity: u64,
+    /// Entries across all clean segments.
+    pub entries: usize,
+    /// Per-segment occupancy for segment files present on disk,
+    /// ascending by index (a missing segment file is just an empty
+    /// shard, not damage).
+    pub segments: Vec<SegmentFsck>,
+    /// Shards with no segment file on disk.
+    pub missing_segments: usize,
+    /// Segments that failed the strict parse (they cold-start their
+    /// shard at warm start and are healed by the next flush).
+    pub corrupt_segments: usize,
+    /// Files in the store directory that nothing will ever read again:
+    /// `seg_NN.bin` outside the manifest's shard range (left behind by
+    /// a shard-count change) and stale `*.tmp` staging files from an
+    /// interrupted flush. Sorted by name.
+    pub orphans: Vec<String>,
+    /// True when `drop_orphans` was set and the orphans were deleted.
+    pub orphans_removed: bool,
+}
+
+/// Integrity + occupancy check of a segmented (`QMMCEDG2`) store: the
+/// `repro store fsck` engine. Reads the manifest strictly (a path
+/// without a readable v2 manifest cannot be fsck'd — legacy v1 files
+/// are migrated by the `--memo-store` warm start, not here), parses
+/// every live segment with the same strict reader warm start uses, and
+/// lists **orphans**: segment files outside the manifest's shard range
+/// plus stale `.tmp` staging files. With `drop_orphans` the orphans
+/// are deleted; live segments and the manifest are never touched.
+pub fn fsck_store(path: &Path, drop_orphans: bool) -> Result<FsckReport> {
+    if !path.is_dir() {
+        bail!(
+            "{path:?} is not a segmented store directory (legacy v1 \
+             single-file stores are migrated by --memo-store warm start, \
+             not fsck)"
+        );
+    }
+    let (shards, capacity) = read_manifest(&manifest_path(path))?;
+    let mut report = FsckReport { shards, capacity, ..Default::default() };
+    for i in 0..shards {
+        let sp = segment_path(path, i);
+        let Ok(meta) = std::fs::metadata(&sp) else {
+            report.missing_segments += 1;
+            continue;
+        };
+        match read_segment(&sp, i) {
+            Ok(entries) => {
+                report.entries += entries.len();
+                report.segments.push(SegmentFsck {
+                    index: i,
+                    entries: entries.len(),
+                    bytes: meta.len(),
+                    ok: true,
+                });
+            }
+            Err(e) => {
+                report.corrupt_segments += 1;
+                report.segments.push(SegmentFsck {
+                    index: i,
+                    entries: 0,
+                    bytes: meta.len(),
+                    ok: false,
+                });
+                eprintln!(
+                    "edge-memo: segment {} corrupt: {e:#}",
+                    sp.display()
+                );
+            }
+        }
+    }
+    // anything else in the directory that looks like ours is an orphan
+    let live: std::collections::HashSet<String> =
+        (0..shards).map(segment_name).collect();
+    let listing = std::fs::read_dir(path)
+        .with_context(|| format!("list store {path:?}"))?;
+    for entry in listing {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        let segment_shaped =
+            name.starts_with("seg_") && name.ends_with(".bin");
+        let stale_tmp = name.ends_with(".tmp");
+        if (segment_shaped || stale_tmp) && !live.contains(&name) {
+            report.orphans.push(name);
+        }
+    }
+    report.orphans.sort();
+    if drop_orphans && !report.orphans.is_empty() {
+        for name in &report.orphans {
+            std::fs::remove_file(path.join(name))
+                .with_context(|| format!("remove orphan {name}"))?;
+        }
+        report.orphans_removed = true;
+    }
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1294,6 +1410,80 @@ mod tests {
         assert_eq!(report.recovered_segments, 1);
         assert_eq!(warm.len(), 5);
         assert_eq!(warm.disk_loaded(), 5);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn fsck_reports_occupancy_and_drops_orphans() {
+        let path = store("fsck");
+        let memo = EdgeMemo::with_capacity(256);
+        for (k, e) in sample_edges() {
+            memo.insert(k, e);
+        }
+        memo.insert(key_in(3, 1), small_edge(1.5));
+        save_edge_memo(&memo, &path).unwrap();
+
+        // plant an orphan beyond the shard range and a stale tmp file
+        std::fs::write(path.join("seg_99.bin"), b"junk").unwrap();
+        std::fs::write(path.join("seg_00.bin.tmp"), b"junk").unwrap();
+
+        let report = fsck_store(&path, false).unwrap();
+        assert_eq!(report.shards, memo.shard_count());
+        assert_eq!(report.capacity, memo.capacity() as u64);
+        assert_eq!(report.entries, memo.len());
+        assert_eq!(report.corrupt_segments, 0);
+        assert_eq!(report.missing_segments, 0, "full save writes every shard");
+        assert_eq!(report.segments.len(), memo.shard_count());
+        let seg0 = report.segments.iter().find(|s| s.index == 0).unwrap();
+        assert!(seg0.ok && seg0.entries == 5 && seg0.bytes > 20);
+        assert_eq!(
+            report.orphans,
+            vec!["seg_00.bin.tmp".to_string(), "seg_99.bin".to_string()]
+        );
+        assert!(!report.orphans_removed);
+        assert!(path.join("seg_99.bin").exists(),
+                "report-only fsck must not delete");
+
+        let report = fsck_store(&path, true).unwrap();
+        assert!(report.orphans_removed);
+        assert!(!path.join("seg_99.bin").exists());
+        assert!(!path.join("seg_00.bin.tmp").exists());
+        // live segments untouched: a reload still sees every edge
+        let reloaded = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&reloaded, &path).unwrap(), memo.len());
+        // and a clean store fscks with no findings
+        let report = fsck_store(&path, false).unwrap();
+        assert!(report.orphans.is_empty());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn fsck_counts_corrupt_segments_without_failing() {
+        let path = store("fsck_corrupt");
+        let memo = EdgeMemo::with_capacity(256);
+        for (k, e) in sample_edges() {
+            memo.insert(k, e);
+        }
+        save_edge_memo(&memo, &path).unwrap();
+        // truncate shard 0's segment to its bare header
+        let sp = segment_path(&path, 0);
+        let bytes = std::fs::read(&sp).unwrap();
+        std::fs::write(&sp, &bytes[..20]).unwrap();
+        let report = fsck_store(&path, false).unwrap();
+        assert_eq!(report.corrupt_segments, 1);
+        let seg0 = report.segments.iter().find(|s| s.index == 0).unwrap();
+        assert!(!seg0.ok);
+        assert_eq!(seg0.entries, 0);
+        assert_eq!(report.entries, 0, "all sample keys live in shard 0");
+        cleanup(&path);
+    }
+
+    #[test]
+    fn fsck_rejects_non_store_paths() {
+        let path = store("fsck_missing");
+        assert!(fsck_store(&path, false).is_err(), "missing store");
+        std::fs::create_dir_all(&path).unwrap();
+        assert!(fsck_store(&path, false).is_err(), "no manifest");
         cleanup(&path);
     }
 }

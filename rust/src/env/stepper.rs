@@ -20,7 +20,7 @@ use crate::engine::Session;
 use crate::gpusim::{graph_fingerprint, program_fingerprint, CostCache,
                     GpuSpec, Pricer};
 use crate::graph::infer_shapes;
-use crate::kir::{lower_naive, Program};
+use crate::kir::{is_statically_legal, lower_naive, GateStats, Program};
 use crate::microcode::{
     check_correct, micro_step_at, CheckOutcome, LlmProfile, StepOutcome,
 };
@@ -95,6 +95,9 @@ pub struct OptimEnv<'a> {
     pub analyzer: Analyzer<'a>,
     /// Shared transition memo; `None` = every step runs live.
     memo: Option<Arc<EdgeMemo>>,
+    /// Pre-verif static gate counters; `None` = gate off (the cacheless
+    /// reference path, or `--no-static-gate`).
+    gate: Option<Arc<GateStats>>,
     /// Scope fingerprint of this env's transitions in the [`EdgeMemo`].
     edge_ctx: u64,
     pub(crate) base_seed: u64,
@@ -111,7 +114,8 @@ impl<'a> OptimEnv<'a> {
     /// A cacheless env — the bit-identical cold reference.
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> OptimEnv<'a> {
-        Self::with_parts(task, spec, profile, cfg, seed, None, None, None)
+        Self::with_parts(task, spec, profile, cfg, seed, None, None, None,
+                         None)
     }
 
     /// Build an env wired into a [`Session`]'s memo subsystems. Outcomes
@@ -121,7 +125,8 @@ impl<'a> OptimEnv<'a> {
                         cfg: EnvConfig, seed: u64,
                         session: &'a Session) -> OptimEnv<'a> {
         Self::with_parts(task, spec, profile, cfg, seed, session.cost(),
-                         session.analysis(), session.edges().cloned())
+                         session.analysis(), session.edges().cloned(),
+                         session.gate().cloned())
     }
 
     /// The constructor every variant funnels into, taking the memo trio
@@ -131,7 +136,8 @@ impl<'a> OptimEnv<'a> {
                              profile: LlmProfile, cfg: EnvConfig, seed: u64,
                              cost: Option<&'a CostCache>,
                              analysis: Option<&'a AnalysisCache>,
-                             edges: Option<Arc<EdgeMemo>>) -> OptimEnv<'a> {
+                             edges: Option<Arc<EdgeMemo>>,
+                             gate: Option<Arc<GateStats>>) -> OptimEnv<'a> {
         let shapes = infer_shapes(&task.graph);
         let graph_ctx = graph_fingerprint(&task.graph, &shapes);
         let pricer = Pricer::from_ctx(cost, graph_ctx);
@@ -156,16 +162,19 @@ impl<'a> OptimEnv<'a> {
             done: false,
         };
         OptimEnv { task, spec, profile, cfg, shapes, eager_us, state,
-                   pricer, analyzer, memo: edges, edge_ctx,
+                   pricer, analyzer, memo: edges, gate, edge_ctx,
                    base_seed: seed }
     }
 
-    /// The memo trio this env routes through (used to rebuild an env over
-    /// the same task, e.g. [`super::TreeEnv::reset`]).
+    /// The memo trio (plus the static gate) this env routes through
+    /// (used to rebuild an env over the same task, e.g.
+    /// [`super::TreeEnv::reset`]).
     pub(crate) fn parts(&self) -> (Option<&'a CostCache>,
                                    Option<&'a AnalysisCache>,
-                                   Option<Arc<EdgeMemo>>) {
-        (self.pricer.cache(), self.analyzer.cache(), self.memo.clone())
+                                   Option<Arc<EdgeMemo>>,
+                                   Option<Arc<GateStats>>) {
+        (self.pricer.cache(), self.analyzer.cache(), self.memo.clone(),
+         self.gate.clone())
     }
 
     /// The shared transition memo, if one is attached.
@@ -288,6 +297,9 @@ impl<'a> OptimEnv<'a> {
             StepOutcome::Rejected(_) => StepSignal::Rejected,
             StepOutcome::CompileError => StepSignal::CompileFail,
             StepOutcome::Buggy(p) => {
+                if self.statically_rejected(&p) {
+                    return StepSignal::WrongResult;
+                }
                 // run the verification harness — a lucky sub-tolerance bug
                 // would pass (and deserves to)
                 match check_correct(&p, &self.task.verif_graph,
@@ -297,8 +309,32 @@ impl<'a> OptimEnv<'a> {
                     _ => StepSignal::WrongResult,
                 }
             }
-            StepOutcome::Ok(p) => self.accept(p),
+            StepOutcome::Ok(p) => {
+                if self.statically_rejected(&p) {
+                    return StepSignal::WrongResult;
+                }
+                self.accept(p)
+            }
         }
+    }
+
+    /// Tier-1 rejection: if a static gate is attached, verify the
+    /// candidate before it reaches dynamic verification. Error-severity
+    /// rules are invariants of every transform, so on candidates produced
+    /// by legal actions the gate only ever counts a check — it rejects
+    /// (skipping the verif trials) only for statically-provable schedule
+    /// damage, keeping gated and ungated runs byte-identical (guarded by
+    /// `rust/tests/verify.rs`).
+    fn statically_rejected(&self, p: &Program) -> bool {
+        if let Some(gate) = &self.gate {
+            gate.note_check();
+            if !is_statically_legal(p, &self.task.graph, &self.shapes,
+                                    &self.spec) {
+                gate.note_reject();
+                return true;
+            }
+        }
+        false
     }
 
     /// Apply a memoized edge to the live state — the exact state updates

@@ -36,7 +36,8 @@ impl<'a> TreeEnv<'a> {
                cfg: EnvConfig, seed: u64) -> TreeEnv<'a> {
         TreeEnv {
             env: OptimEnv::with_parts(task, spec, profile, cfg, seed, None,
-                                      None, Some(Arc::new(EdgeMemo::new()))),
+                                      None, Some(Arc::new(EdgeMemo::new())),
+                                      None),
         }
     }
 
@@ -56,7 +57,7 @@ impl<'a> TreeEnv<'a> {
         TreeEnv {
             env: OptimEnv::with_parts(task, spec, profile, cfg, seed,
                                       session.cost(), session.analysis(),
-                                      Some(edges)),
+                                      Some(edges), session.gate().cloned()),
         }
     }
 
@@ -68,9 +69,9 @@ impl<'a> TreeEnv<'a> {
         let profile = self.env.profile.clone();
         let cfg = self.env.cfg.clone();
         let base = self.env.base_seed;
-        let (cost, analysis, edges) = self.env.parts();
+        let (cost, analysis, edges, gate) = self.env.parts();
         self.env = OptimEnv::with_parts(task, spec, profile, cfg, base,
-                                        cost, analysis, edges);
+                                        cost, analysis, edges, gate);
     }
 
     /// Step with memoization (delegates to the memo-wired env).

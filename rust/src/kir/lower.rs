@@ -6,6 +6,18 @@
 use super::ir::{Kernel, Program, Schedule};
 use crate::graph::{Graph, Op};
 
+/// Fallible lowering for untrusted graphs (e.g. `repro lint` sweeping a
+/// corpus): validates the graph first and reports what is wrong instead
+/// of letting downstream passes index past a malformed node list.
+pub fn lower_checked(g: &Graph) -> Result<Program, String> {
+    g.validate()
+        .map_err(|e| format!("graph `{}` is malformed: {e}", g.name))?;
+    let p = lower_naive(g);
+    p.validate(g)
+        .map_err(|e| format!("naive lowering of `{}` is invalid: {e}", g.name))?;
+    Ok(p)
+}
+
 /// Lower a graph to the naive one-op-per-kernel program.
 pub fn lower_naive(g: &Graph) -> Program {
     let mut kernels = Vec::new();

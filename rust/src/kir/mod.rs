@@ -3,18 +3,24 @@
 //! [`Kernel`]s, each carrying a [`Schedule`] (tiles, pipeline depth, loop
 //! order, vector width). `regions` derives the candidate *code regions*
 //! (paper §4.2: "determined based on the data flow and AST analysis") the
-//! Macro-Thinking action space indexes into, and `printer` renders
+//! Macro-Thinking action space indexes into, `printer` renders
 //! pseudo-Triton/CUDA text for inspection and the Table 5 language
-//! ablation.
+//! ablation, and `verify` is the static legality tier — schedule/race
+//! diagnostics consumed by `repro lint` and the pre-verif gate.
 
 mod ir;
 mod lower;
 mod loops;
 mod regions;
 mod printer;
+mod verify;
 
 pub use ir::{Kernel, LoopOrder, Program, Schedule};
 pub use loops::{loop_nest, Loop, LoopKind};
-pub use lower::lower_naive;
+pub use lower::{lower_checked, lower_naive};
 pub use printer::{render, TargetLang};
 pub use regions::{analyze_regions, Region, RegionKind, MAX_REGIONS};
+pub use verify::{
+    has_errors, is_statically_legal, verify, Diagnostic, GateStats, Rule,
+    Severity,
+};

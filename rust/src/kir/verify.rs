@@ -1,0 +1,781 @@
+//! Static schedule verifier: the first of the three rejection tiers
+//! (static verify → dynamic verif trials → perf pricing). Checks a
+//! `(Program, Graph, GpuSpec)` triple for schedule legality *without*
+//! running anything: tile/extent coverage, vector-width compatibility
+//! with the innermost loop, reorder role constraints, pipeline staging,
+//! shared-memory and register budgets, and write-set races between
+//! fused nodes.
+//!
+//! Severity semantics: `Error` rules are invariants every transform in
+//! `transform/` preserves — they never fire on programs reachable from
+//! `lower_naive` via legal actions, so the pre-verif gate in
+//! `OptimEnv::transition` is behaviour-neutral on the normal eval path
+//! (guarded by `rust/tests/verify.rs`). `Warning` rules flag
+//! performance-hostile but correct schedules (tile overhang, remainder
+//! iterations, vector width vs. odd extents) and only show up in
+//! `repro lint` output.
+
+use super::ir::{LoopOrder, Program};
+use super::loops::{loop_nest, LoopKind};
+use crate::gpusim::GpuSpec;
+use crate::graph::{Graph, OpClass};
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Architectural per-thread register file limit (all three simulated
+/// parts: 255 usable registers per thread).
+const MAX_REGS_PER_THREAD: usize = 255;
+/// Accumulator/address scratch the renderer needs beyond the register
+/// tile itself.
+const REG_SCRATCH: usize = 32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but legal: the schedule runs correctly, just not well.
+    Warning,
+    /// Statically illegal: the schedule cannot be lowered to correct
+    /// code. Transforms must never produce these.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// Which invariant a diagnostic comes from. The kebab-case `name()` is
+/// stable output — `repro lint --json` and tests match on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Program shape: node ids in range, `Program::validate` holds, not
+    /// compile-broken.
+    Structure,
+    /// A loop tile of zero iterations.
+    TileZero,
+    /// Tile larger than the extent it splits.
+    TileExceedsExtent,
+    /// Extent not divisible by its tile (remainder iterations).
+    TileRemainder,
+    /// Vector width outside {1, 2, 4, 8}.
+    VectorWidth,
+    /// Vector loads on a naive (uncoalesced) loop order.
+    VectorOrder,
+    /// Vector width incompatible with the innermost loop extent/role.
+    VectorExtent,
+    /// Loop order inconsistent with the tiling state.
+    ReorderRole,
+    /// Pipeline depth outside what the schedule/spec can stage.
+    PipelineStaging,
+    /// Shared-memory estimate over the GpuSpec budget.
+    SmemBudget,
+    /// Register estimate over the per-thread architectural limit.
+    RegBudget,
+    /// Fused nodes whose write sets alias across a parallel axis.
+    RaceOverlap,
+    /// Epilogue reduction split across block tiles of the parallel axis.
+    RaceSplitReduction,
+}
+
+impl Rule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::Structure => "structure",
+            Rule::TileZero => "tile-zero",
+            Rule::TileExceedsExtent => "tile-exceeds-extent",
+            Rule::TileRemainder => "tile-remainder",
+            Rule::VectorWidth => "vector-width",
+            Rule::VectorOrder => "vector-order",
+            Rule::VectorExtent => "vector-extent",
+            Rule::ReorderRole => "reorder-role",
+            Rule::PipelineStaging => "pipeline-staging",
+            Rule::SmemBudget => "smem-budget",
+            Rule::RegBudget => "reg-budget",
+            Rule::RaceOverlap => "race-overlap",
+            Rule::RaceSplitReduction => "race-split-reduction",
+        }
+    }
+}
+
+/// One finding: which rule, which kernel (None = whole program), how
+/// bad, and a human-readable message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub kernel: Option<usize>,
+    pub severity: Severity,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kernel {
+            Some(k) => write!(
+                f,
+                "{}[{}] kernel {}: {}",
+                self.severity,
+                self.rule.name(),
+                k,
+                self.msg
+            ),
+            None => write!(f, "{}[{}] {}", self.severity, self.rule.name(), self.msg),
+        }
+    }
+}
+
+/// Statically verify a scheduled program. Never panics, whatever the
+/// input: structural damage (out-of-range node ids, validate failures)
+/// is reported as `Structure` errors and cuts the analysis short
+/// instead of indexing past the graph.
+pub fn verify(
+    p: &Program,
+    g: &Graph,
+    shapes: &[Vec<usize>],
+    spec: &GpuSpec,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    // Tier 0: bounds. `Program::validate`, `Kernel::anchor` and
+    // `loop_nest` all index `g.nodes[n]` unchecked, so nothing below is
+    // safe until every node id is in range.
+    if shapes.len() < g.nodes.len() {
+        diags.push(Diagnostic {
+            rule: Rule::Structure,
+            kernel: None,
+            severity: Severity::Error,
+            msg: format!(
+                "shape table has {} entries for a graph of {} nodes",
+                shapes.len(),
+                g.nodes.len()
+            ),
+        });
+        return diags;
+    }
+    for (ki, k) in p.kernels.iter().enumerate() {
+        for &n in &k.nodes {
+            if n >= g.nodes.len() {
+                diags.push(Diagnostic {
+                    rule: Rule::Structure,
+                    kernel: Some(ki),
+                    severity: Severity::Error,
+                    msg: format!(
+                        "references node {n}, but the graph has {} nodes",
+                        g.nodes.len()
+                    ),
+                });
+            }
+        }
+    }
+    if !diags.is_empty() {
+        return diags;
+    }
+    if let Err(e) = p.validate(g) {
+        diags.push(Diagnostic {
+            rule: Rule::Structure,
+            kernel: None,
+            severity: Severity::Error,
+            msg: e,
+        });
+        return diags;
+    }
+    if p.compile_broken {
+        diags.push(Diagnostic {
+            rule: Rule::Structure,
+            kernel: None,
+            severity: Severity::Error,
+            msg: "program is compile-broken (last micro-coding step failed)"
+                .into(),
+        });
+    }
+    for (ki, k) in p.kernels.iter().enumerate() {
+        check_kernel(&mut diags, ki, k, g, shapes, spec);
+    }
+    diags
+}
+
+/// True iff `verify` reports no Error-severity diagnostic. This is the
+/// predicate the pre-verif gate in `OptimEnv::transition` applies.
+pub fn is_statically_legal(
+    p: &Program,
+    g: &Graph,
+    shapes: &[Vec<usize>],
+    spec: &GpuSpec,
+) -> bool {
+    !has_errors(&verify(p, g, shapes, spec))
+}
+
+/// Any Error-severity diagnostic in the batch?
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+fn check_kernel(
+    diags: &mut Vec<Diagnostic>,
+    ki: usize,
+    k: &super::ir::Kernel,
+    g: &Graph,
+    shapes: &[Vec<usize>],
+    spec: &GpuSpec,
+) {
+    let sched = &k.schedule;
+    let anchor = k.anchor(g);
+    let anchor_cls = g.nodes[anchor].op.class();
+    let nest = loop_nest(k, g, shapes);
+    let mut push = |rule, severity, msg| {
+        diags.push(Diagnostic { rule, kernel: Some(ki), severity, msg });
+    };
+
+    // --- tiles vs. loop extents -------------------------------------
+    for l in &nest {
+        if let Some(t) = l.tile {
+            if t == 0 {
+                push(
+                    Rule::TileZero,
+                    Severity::Error,
+                    format!("loop `{}` tiled by zero", l.var),
+                );
+            } else if t > l.extent {
+                push(
+                    Rule::TileExceedsExtent,
+                    Severity::Warning,
+                    format!(
+                        "tile {} on loop `{}` exceeds its extent {}",
+                        t, l.var, l.extent
+                    ),
+                );
+            } else if l.extent % t != 0 {
+                push(
+                    Rule::TileRemainder,
+                    Severity::Warning,
+                    format!(
+                        "loop `{}` extent {} is not a multiple of tile {} \
+                         (remainder iterations)",
+                        l.var, l.extent, t
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- vector width vs. innermost loop -----------------------------
+    let w = sched.vector_width;
+    if !matches!(w, 1 | 2 | 4 | 8) {
+        push(
+            Rule::VectorWidth,
+            Severity::Error,
+            format!("vector width {w} is not one of 1/2/4/8"),
+        );
+    } else if w > 1 {
+        if sched.loop_order == LoopOrder::Naive {
+            push(
+                Rule::VectorOrder,
+                Severity::Error,
+                format!(
+                    "vector width {w} on a naive loop order: vector loads \
+                     need contiguous (coalesced or blocked) accesses"
+                ),
+            );
+        }
+        if let Some(inner) = nest.last() {
+            if inner.kind == LoopKind::Window {
+                push(
+                    Rule::VectorExtent,
+                    Severity::Warning,
+                    format!(
+                        "vector width {} across window loop `{}` \
+                         (extent {}): window taps are strided",
+                        w, inner.var, inner.extent
+                    ),
+                );
+            } else if w > inner.extent || inner.extent % w != 0 {
+                push(
+                    Rule::VectorExtent,
+                    Severity::Warning,
+                    format!(
+                        "vector width {} does not divide innermost loop \
+                         `{}` extent {}",
+                        w, inner.var, inner.extent
+                    ),
+                );
+            }
+        }
+    }
+
+    // --- loop order vs. tiling state ---------------------------------
+    match sched.loop_order {
+        LoopOrder::Blocked if sched.block_tile.is_none() => push(
+            Rule::ReorderRole,
+            Severity::Warning,
+            "blocked loop order without a block tile (no tiles to be \
+             block-major over)"
+                .into(),
+        ),
+        LoopOrder::Coalesced if sched.block_tile.is_some() => push(
+            Rule::ReorderRole,
+            Severity::Warning,
+            "coalesced loop order on a tiled kernel discards tile-major \
+             locality"
+                .into(),
+        ),
+        _ => {}
+    }
+
+    // --- pipeline staging --------------------------------------------
+    let depth = sched.pipeline_depth;
+    if depth == 0 {
+        push(
+            Rule::PipelineStaging,
+            Severity::Error,
+            "pipeline depth 0 (1 means unpipelined)".into(),
+        );
+    } else if depth > 4 {
+        push(
+            Rule::PipelineStaging,
+            Severity::Error,
+            format!("pipeline depth {depth} exceeds the 4-stage maximum"),
+        );
+    } else if depth >= 3 && !spec.supports_async_copy() {
+        push(
+            Rule::PipelineStaging,
+            Severity::Error,
+            format!(
+                "pipeline depth {} needs cp.async-style staging, which {} \
+                 does not support",
+                depth, spec.name
+            ),
+        );
+    }
+
+    // --- shared memory budget ----------------------------------------
+    let smem = sched.smem_bytes();
+    if smem > spec.smem_bytes() {
+        push(
+            Rule::SmemBudget,
+            Severity::Error,
+            format!(
+                "schedule stages {} B of shared memory; {} has {} B per SM",
+                smem,
+                spec.name,
+                spec.smem_bytes()
+            ),
+        );
+    }
+
+    // --- register budget ----------------------------------------------
+    if let Some((rm, rn)) = sched.reg_tile {
+        if rm == 0 || rn == 0 {
+            push(
+                Rule::RegBudget,
+                Severity::Error,
+                format!("register tile {rm}x{rn} has a zero dimension"),
+            );
+        } else {
+            // accumulator tile + one operand fragment per axis + scratch
+            let est = rm * rn + rm + rn + REG_SCRATCH;
+            if est > MAX_REGS_PER_THREAD {
+                push(
+                    Rule::RegBudget,
+                    Severity::Error,
+                    format!(
+                        "register tile {rm}x{rn} needs ~{est} registers per \
+                         thread, over the {MAX_REGS_PER_THREAD} limit"
+                    ),
+                );
+            }
+        }
+        match sched.block_tile {
+            None => push(
+                Rule::RegBudget,
+                Severity::Warning,
+                "register tile without a block tile (nothing to subdivide)"
+                    .into(),
+            ),
+            Some((bm, bn, _)) if rm > bm || rn > bn => push(
+                Rule::RegBudget,
+                Severity::Warning,
+                format!(
+                    "register tile {rm}x{rn} exceeds its block tile \
+                     {bm}x{bn}"
+                ),
+            ),
+            _ => {}
+        }
+    }
+
+    // --- write-set races between fused nodes --------------------------
+    // Two contraction nodes in one kernel accumulate into distinct
+    // outputs from the same grid: their write sets alias across the
+    // parallel axes. Same for a reduction fused anywhere but as the
+    // anchor or a recognised epilogue.
+    let contractions = k
+        .nodes
+        .iter()
+        .filter(|&&n| g.nodes[n].op.class() == OpClass::Contraction)
+        .count();
+    if contractions > 1 {
+        push(
+            Rule::RaceOverlap,
+            Severity::Error,
+            format!(
+                "fuses {contractions} contraction nodes; their accumulator \
+                 write sets alias across the parallel grid"
+            ),
+        );
+    }
+    for &n in &k.nodes {
+        if n == anchor {
+            continue;
+        }
+        let op = &g.nodes[n].op;
+        if op.class() == OpClass::Reduction && !op.fusible_as_epilogue() {
+            push(
+                Rule::RaceOverlap,
+                Severity::Error,
+                format!(
+                    "non-epilogue reduction `{}` (node {}) fused off-anchor \
+                     writes across the parallel axis",
+                    op.mnemonic(),
+                    n
+                ),
+            );
+        }
+    }
+    // An epilogue reduction inside a tiled contraction kernel reduces
+    // over an axis the block tile splits: each block holds only a
+    // partial, and the partials alias the same output row.
+    if anchor_cls == OpClass::Contraction {
+        if let Some((_, bn, _)) = sched.block_tile {
+            for &n in &k.nodes {
+                if n == anchor || g.nodes[n].op.class() != OpClass::Reduction
+                {
+                    continue;
+                }
+                let node = &g.nodes[n];
+                let reduced = node
+                    .inputs
+                    .first()
+                    .and_then(|&i| shapes[i].last().copied())
+                    .unwrap_or(1);
+                if bn < reduced {
+                    push(
+                        Rule::RaceSplitReduction,
+                        Severity::Warning,
+                        format!(
+                            "epilogue reduction `{}` (node {}) reduces {} \
+                             elements split across {}-wide block tiles: \
+                             blocks hold partial results",
+                            node.op.mnemonic(),
+                            n,
+                            reduced,
+                            bn
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Shared counters for the pre-verif static gate: how many candidate
+/// programs were checked, and how many were rejected before paying for
+/// dynamic verif trials. Owned by `engine::Session`, read by the
+/// `StatsRegistry`.
+#[derive(Debug, Default)]
+pub struct GateStats {
+    checks: AtomicUsize,
+    rejects: AtomicUsize,
+}
+
+impl GateStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn note_check(&self) {
+        self.checks.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn note_reject(&self) {
+        self.rejects.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn checks(&self) -> usize {
+        self.checks.load(Ordering::Relaxed)
+    }
+    pub fn rejects(&self) -> usize {
+        self.rejects.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{infer_shapes, Graph, Op};
+    use crate::kir::{lower_naive, Kernel, Schedule};
+
+    fn gemm_relu() -> (Graph, Vec<Vec<usize>>) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[128, 128]);
+        let w = g.weight("w", &[128, 128]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let r = g.op(Op::Relu, &[mm]);
+        g.mark_output(r);
+        let s = infer_shapes(&g);
+        (g, s)
+    }
+
+    fn rules(diags: &[Diagnostic]) -> Vec<Rule> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn naive_lowering_is_clean() {
+        let (g, s) = gemm_relu();
+        let p = lower_naive(&g);
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(diags.is_empty(), "{diags:?}");
+        assert!(is_statically_legal(&p, &g, &s, &crate::gpusim::GpuSpec::a100()));
+    }
+
+    #[test]
+    fn whole_corpus_is_clean_under_naive_lowering() {
+        for spec in crate::gpusim::GpuSpec::all() {
+            for t in crate::tasks::kernelbench_level(1).iter().take(8) {
+                let shapes = infer_shapes(&t.graph);
+                let p = lower_naive(&t.graph);
+                let diags = verify(&p, &t.graph, &shapes, &spec);
+                assert!(diags.is_empty(), "{}: {diags:?}", t.id);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_node_is_reported_not_panicked() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].nodes.push(99);
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert_eq!(rules(&diags), vec![Rule::Structure]);
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn validate_failure_is_wrapped() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].nodes.clear();
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert_eq!(rules(&diags), vec![Rule::Structure]);
+        assert!(diags[0].msg.contains("empty"));
+    }
+
+    #[test]
+    fn compile_broken_is_an_error() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.compile_broken = true;
+        assert!(!is_statically_legal(&p, &g, &s, &crate::gpusim::GpuSpec::a100()));
+    }
+
+    #[test]
+    fn tile_overhang_and_remainder_warn_but_stay_legal() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        // 96 does not divide 128; 256 exceeds it
+        p.kernels[0].schedule.block_tile = Some((256, 96, 32));
+        let spec = crate::gpusim::GpuSpec::a100();
+        let diags = verify(&p, &g, &s, &spec);
+        assert!(rules(&diags).contains(&Rule::TileExceedsExtent));
+        assert!(rules(&diags).contains(&Rule::TileRemainder));
+        assert!(!has_errors(&diags));
+        assert!(is_statically_legal(&p, &g, &s, &spec));
+    }
+
+    #[test]
+    fn zero_tile_is_an_error() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.block_tile = Some((0, 64, 32));
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(rules(&diags).contains(&Rule::TileZero));
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn vector_on_naive_order_is_an_error() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[1].schedule.vector_width = 4;
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert_eq!(rules(&diags), vec![Rule::VectorOrder]);
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn vector_width_must_be_pow2_le8() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[1].schedule.vector_width = 3;
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert_eq!(rules(&diags), vec![Rule::VectorWidth]);
+    }
+
+    #[test]
+    fn vector_vs_odd_extent_warns() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[4, 9]);
+        let r = g.op(Op::Relu, &[x]);
+        g.mark_output(r);
+        let s = infer_shapes(&g);
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.loop_order = crate::kir::LoopOrder::Coalesced;
+        p.kernels[0].schedule.vector_width = 2;
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert_eq!(rules(&diags), vec![Rule::VectorExtent]);
+        assert!(!has_errors(&diags));
+    }
+
+    #[test]
+    fn reorder_role_mismatches_warn() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.loop_order = crate::kir::LoopOrder::Blocked;
+        p.kernels[1].schedule.loop_order = crate::kir::LoopOrder::Coalesced;
+        p.kernels[1].schedule.block_tile = Some((64, 64, 1));
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert_eq!(
+            rules(&diags),
+            vec![Rule::ReorderRole, Rule::ReorderRole]
+        );
+        assert!(!has_errors(&diags));
+    }
+
+    #[test]
+    fn deep_pipeline_on_volta_is_an_error() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.block_tile = Some((64, 64, 16));
+        p.kernels[0].schedule.pipeline_depth = 3;
+        let v100 = crate::gpusim::GpuSpec::v100();
+        assert!(!v100.supports_async_copy());
+        let diags = verify(&p, &g, &s, &v100);
+        assert!(rules(&diags).contains(&Rule::PipelineStaging));
+        assert!(has_errors(&diags));
+        // same depth is fine on Ampere
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(!has_errors(&diags), "{diags:?}");
+    }
+
+    #[test]
+    fn smem_over_budget_is_an_error() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        // (512*128 + 128*512) * 4 * 4 = 2 MiB — over every spec
+        p.kernels[0].schedule.block_tile = Some((512, 512, 128));
+        p.kernels[0].schedule.pipeline_depth = 4;
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::h100());
+        assert!(rules(&diags).contains(&Rule::SmemBudget));
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn register_tile_over_budget_is_an_error() {
+        let (g, s) = gemm_relu();
+        let mut p = lower_naive(&g);
+        p.kernels[0].schedule.block_tile = Some((64, 64, 16));
+        p.kernels[0].schedule.reg_tile = Some((16, 16));
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(rules(&diags).contains(&Rule::RegBudget));
+        assert!(has_errors(&diags));
+        // the largest tile the transform menu hands out stays legal
+        p.kernels[0].schedule.reg_tile = Some((8, 8));
+        assert!(is_statically_legal(&p, &g, &s, &crate::gpusim::GpuSpec::a100()));
+    }
+
+    #[test]
+    fn two_fused_contractions_race() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[64, 64]);
+        let w1 = g.weight("w1", &[64, 64]);
+        let w2 = g.weight("w2", &[64, 64]);
+        let mm1 = g.op(Op::MatMul, &[x, w1]);
+        let mm2 = g.op(Op::MatMul, &[mm1, w2]);
+        g.mark_output(mm2);
+        let s = infer_shapes(&g);
+        let p = Program {
+            kernels: vec![Kernel {
+                nodes: vec![mm1, mm2],
+                schedule: Schedule::default(),
+                name: "fused".into(),
+            }],
+            mutations: Vec::new(),
+            compile_broken: false,
+        };
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(rules(&diags).contains(&Rule::RaceOverlap));
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn non_epilogue_reduction_off_anchor_races() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[64, 64]);
+        let w = g.weight("w", &[64, 64]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let cs = g.op(Op::CumSum, &[mm]);
+        g.mark_output(cs);
+        let s = infer_shapes(&g);
+        let p = Program {
+            kernels: vec![Kernel {
+                nodes: vec![mm, cs],
+                schedule: Schedule::default(),
+                name: "fused".into(),
+            }],
+            mutations: Vec::new(),
+            compile_broken: false,
+        };
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(rules(&diags).contains(&Rule::RaceOverlap));
+        assert!(has_errors(&diags));
+    }
+
+    #[test]
+    fn split_epilogue_reduction_warns() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", &[128, 128]);
+        let w = g.weight("w", &[128, 128]);
+        let mm = g.op(Op::MatMul, &[x, w]);
+        let sm = g.op(Op::Softmax, &[mm]);
+        g.mark_output(sm);
+        let s = infer_shapes(&g);
+        let p = Program {
+            kernels: vec![Kernel {
+                nodes: vec![mm, sm],
+                schedule: Schedule {
+                    block_tile: Some((128, 64, 32)),
+                    ..Default::default()
+                },
+                name: "fused".into(),
+            }],
+            mutations: Vec::new(),
+            compile_broken: false,
+        };
+        let diags = verify(&p, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(rules(&diags).contains(&Rule::RaceSplitReduction));
+        assert!(!has_errors(&diags));
+        // a block tile covering the whole reduced axis is silent
+        let mut p2 = p.clone();
+        p2.kernels[0].schedule.block_tile = Some((128, 128, 32));
+        let diags = verify(&p2, &g, &s, &crate::gpusim::GpuSpec::a100());
+        assert!(!rules(&diags).contains(&Rule::RaceSplitReduction));
+    }
+
+    #[test]
+    fn gate_stats_count() {
+        let gs = GateStats::new();
+        gs.note_check();
+        gs.note_check();
+        gs.note_reject();
+        assert_eq!(gs.checks(), 2);
+        assert_eq!(gs.rejects(), 1);
+    }
+}

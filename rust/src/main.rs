@@ -8,6 +8,8 @@
 //!   optimize --task ID [...]      optimize one task, show the schedule story
 //!   eval --suite S [...]          evaluate a method over a suite
 //!   table N                       regenerate paper table N (3,4,5,6,7)
+//!   lint [--suite S|--task ID]    static schedule verifier over the corpus
+//!   store fsck PATH [--fix]       check a --memo-store directory on disk
 //!
 //! Every optimizing command builds one [`Session`] from the shared
 //! cache/persistence flags and threads it down the stack; the memo trio,
@@ -21,8 +23,11 @@ use qimeng_mtmc::eval::{
     table6_variants, BatchCfg, BatchJob, BatchRunner, EvalCfg, MacroKind,
     Method,
 };
+use qimeng_mtmc::env::fsck_store;
 use qimeng_mtmc::gpusim::GpuSpec;
-use qimeng_mtmc::kir::{lower_naive, render, TargetLang};
+use qimeng_mtmc::kir::{
+    lower_checked, lower_naive, verify, Diagnostic, Rule, Severity, TargetLang,
+};
 use qimeng_mtmc::microcode::ProfileId;
 use qimeng_mtmc::paths;
 use qimeng_mtmc::report::{metric_cells, Table};
@@ -35,6 +40,7 @@ use qimeng_mtmc::tasks::{
 };
 use qimeng_mtmc::train::{train_ppo, PpoCfg};
 use qimeng_mtmc::util::cli::Args;
+use qimeng_mtmc::util::json::Json;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -46,6 +52,8 @@ fn main() -> Result<()> {
         "optimize" => cmd_optimize(&args),
         "eval" => cmd_eval(&args),
         "table" => cmd_table(&args),
+        "lint" => cmd_lint(&args),
+        "store" => cmd_store(&args),
         "" | "help" => {
             print!("{}", HELP);
             Ok(())
@@ -97,6 +105,25 @@ COMMANDS:
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              batched table sweep
   table 5|7                  pointer to the bench binaries
+  lint [--suite kb1|kb2|kb3|kb|tbg|tbt|corpus] [--task ID] [--gpu A100]
+       [--json]
+                             run the static schedule verifier over the
+                             naive lowering of every task (default: all
+                             benchmark suites); prints one line per
+                             diagnostic, or one JSON object under
+                             --json; exits 1 if any error-severity
+                             diagnostic fires (warnings are advisory)
+  store fsck <path> [--fix] [--stats-json F]
+                             check a --memo-store directory: manifest,
+                             per-segment occupancy, corrupt or missing
+                             segments, and orphaned seg_*/temp files
+                             (--fix deletes the orphans); exits 1 if any
+                             segment is corrupt or missing
+
+  Optimizing commands (dataset/train/optimize/eval/table) statically
+  verify every candidate schedule before spending correctness trials on
+  it; --no-static-gate disables that pre-verif gate, and the checked/
+  rejected counters land in the stderr report and --stats-json.
 ";
 
 fn gpu(args: &Args) -> Result<GpuSpec> {
@@ -118,14 +145,16 @@ fn suite_tasks(name: &str) -> Result<Vec<Task>> {
 }
 
 /// Build the run's [`Session`] from the shared cache/persistence flags:
-/// the `--no-*` escape hatches disable individual memo tiers and
-/// `--memo-store <path>` adds the disk persistence tier (ignored under
-/// `--no-edge-memo`, which leaves nothing to persist).
+/// the `--no-*` escape hatches disable individual memo tiers (and the
+/// static pre-verif gate), and `--memo-store <path>` adds the disk
+/// persistence tier (ignored under `--no-edge-memo`, which leaves
+/// nothing to persist).
 fn session_from_args(args: &Args) -> Session {
     Session::builder()
         .cost_cache(!args.has("no-cost-cache"))
         .analysis_cache(!args.has("no-analysis-cache"))
         .edge_memo(!args.has("no-edge-memo"))
+        .static_gate(!args.has("no-static-gate"))
         .memo_store(args.get("memo-store").map(std::path::PathBuf::from))
         .build()
 }
@@ -345,22 +374,27 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         step += 1;
     }
     println!("best speedup {:.2}x over eager", env.state.best_speedup);
-    finish_session(args, &session)?;
     if args.has("show-code") {
         let lang = if args.get_or("lang", "triton") == "cuda" {
             TargetLang::Cuda
         } else {
             TargetLang::Triton
         };
+        // both renders go through the session's render memo, so a
+        // best program identical to the naive lowering prints from one
+        // cached render
+        let naive = lower_naive(&task.graph);
         println!(
             "\n--- naive ---\n{}",
-            render(&lower_naive(&task.graph), &task.graph, &shapes, lang)
+            session.render_cached(&naive, &task.graph, &shapes, lang)
         );
         println!(
             "--- optimized ---\n{}",
-            render(&env.state.best_program, &task.graph, &shapes, lang)
+            session.render_cached(&env.state.best_program, &task.graph,
+                                  &shapes, lang)
         );
     }
+    finish_session(args, &session)?;
     Ok(())
 }
 
@@ -582,6 +616,182 @@ fn cmd_table(args: &Args) -> Result<()> {
              (per-variant seeds; see the bench source)"
         ),
         other => bail!("unknown table {other} (3,4,5,6,7)"),
+    }
+    Ok(())
+}
+
+/// `repro lint`: run the static verifier over the naive lowering of a
+/// task corpus (every benchmark suite by default) and report each
+/// diagnostic. Exit status 1 iff any error-severity diagnostic fires —
+/// warnings (tile overhang, remainder loops, vector-width mismatches)
+/// are advisory and never fail the lint.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let tasks: Vec<Task> = if let Some(id) = args.get("task") {
+        let all: Vec<Task> = kernelbench_suite()
+            .into_iter()
+            .chain(tritonbench_g())
+            .chain(tritonbench_t())
+            .collect();
+        let task = all
+            .into_iter()
+            .find(|t| t.id == id)
+            .with_context(|| format!("no task `{id}` (see `repro tasks`)"))?;
+        vec![task]
+    } else if let Some(suite) = args.get("suite") {
+        suite_tasks(suite)?
+    } else {
+        kernelbench_suite()
+            .into_iter()
+            .chain(tritonbench_g())
+            .chain(tritonbench_t())
+            .collect()
+    };
+    let spec = gpu(args)?;
+    let mut findings: Vec<(String, Diagnostic)> = Vec::new();
+    for task in &tasks {
+        let shapes = qimeng_mtmc::graph::infer_shapes(&task.graph);
+        let diags = match lower_checked(&task.graph) {
+            Ok(p) => verify(&p, &task.graph, &shapes, &spec),
+            // a graph the checked lowering itself rejects is corpus
+            // damage — same bucket as the verifier's structural tier
+            Err(e) => vec![Diagnostic {
+                rule: Rule::Structure,
+                kernel: None,
+                severity: Severity::Error,
+                msg: e,
+            }],
+        };
+        findings.extend(diags.into_iter().map(|d| (task.id.clone(), d)));
+    }
+    let errors = findings
+        .iter()
+        .filter(|(_, d)| d.severity == Severity::Error)
+        .count();
+    let warnings = findings.len() - errors;
+    if args.has("json") {
+        let list: Vec<Json> = findings
+            .iter()
+            .map(|(id, d)| {
+                Json::obj(vec![
+                    ("task", Json::from(id.as_str())),
+                    ("rule", Json::from(d.rule.name())),
+                    ("kernel", d.kernel.map_or(Json::Null, Json::from)),
+                    ("severity", Json::from(d.severity.to_string())),
+                    ("msg", Json::from(d.msg.as_str())),
+                ])
+            })
+            .collect();
+        let out = Json::obj(vec![
+            ("gpu", Json::from(spec.name.as_str())),
+            ("tasks", Json::from(tasks.len())),
+            ("errors", Json::from(errors)),
+            ("warnings", Json::from(warnings)),
+            ("diagnostics", Json::Arr(list)),
+        ]);
+        println!("{out}");
+    } else {
+        for (id, d) in &findings {
+            println!("{id}: {d}");
+        }
+        println!(
+            "lint: {} task(s) on {}: {} error(s), {} warning(s)",
+            tasks.len(),
+            spec.name,
+            errors,
+            warnings
+        );
+    }
+    if errors > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `repro store fsck <path>`: integrity + occupancy check of a
+/// `--memo-store` directory. Prints the manifest header, per-segment
+/// entry counts, corrupt/missing segments and orphaned files; `--fix`
+/// deletes the orphans. Exit status 1 iff a live segment is corrupt or
+/// missing (orphans alone are not damage).
+fn cmd_store(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("fsck") => {}
+        Some(other) => {
+            bail!("unknown store subcommand `{other}` (expected `fsck`)")
+        }
+        None => bail!("usage: repro store fsck <path> [--fix]"),
+    }
+    let path = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .or_else(|| args.get("memo-store"))
+        .context("usage: repro store fsck <path> [--fix]")?;
+    let report = fsck_store(std::path::Path::new(path), args.has("fix"))?;
+    println!(
+        "store {path}: {} shards, capacity {}, {} live entries",
+        report.shards, report.capacity, report.entries
+    );
+    for seg in &report.segments {
+        println!(
+            "  seg_{:02}.bin  {:>7} entries  {:>9} bytes{}",
+            seg.index,
+            seg.entries,
+            seg.bytes,
+            if seg.ok { "" } else { "  CORRUPT" }
+        );
+    }
+    if report.missing_segments > 0 {
+        println!("  missing segment files: {}", report.missing_segments);
+    }
+    if !report.orphans.is_empty() {
+        let state = if report.orphans_removed {
+            "removed"
+        } else {
+            "use --fix to remove"
+        };
+        println!("orphans ({state}): {}", report.orphans.join(", "));
+    }
+    if let Some(out) = args.get("stats-json") {
+        let segs: Vec<Json> = report
+            .segments
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("index", Json::from(s.index)),
+                    ("entries", Json::from(s.entries)),
+                    ("bytes", Json::from(s.bytes as usize)),
+                    ("ok", Json::from(s.ok)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![(
+            "store_fsck",
+            Json::obj(vec![
+                ("path", Json::from(path)),
+                ("shards", Json::from(report.shards)),
+                ("capacity", Json::from(report.capacity as usize)),
+                ("entries", Json::from(report.entries)),
+                ("missing_segments", Json::from(report.missing_segments)),
+                ("corrupt_segments", Json::from(report.corrupt_segments)),
+                (
+                    "orphans",
+                    Json::Arr(
+                        report
+                            .orphans
+                            .iter()
+                            .map(|o| Json::from(o.as_str()))
+                            .collect(),
+                    ),
+                ),
+                ("orphans_removed", Json::from(report.orphans_removed)),
+                ("segments", Json::Arr(segs)),
+            ]),
+        )]);
+        std::fs::write(out, format!("{j}\n"))
+            .with_context(|| format!("write --stats-json {out}"))?;
+    }
+    if report.corrupt_segments > 0 || report.missing_segments > 0 {
+        std::process::exit(1);
     }
     Ok(())
 }

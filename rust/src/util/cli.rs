@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 /// Boolean switches that take no value. Every `--no-*` flag is a switch
 /// implicitly; anything else boolean must be listed here, or a following
 /// bare token will be eaten as its value.
-const KNOWN_SWITCHES: &[&str] = &["verbose", "show-code"];
+const KNOWN_SWITCHES: &[&str] = &["verbose", "show-code", "json", "fix"];
 
 fn is_switch(name: &str) -> bool {
     name.starts_with("no-") || KNOWN_SWITCHES.contains(&name)
@@ -143,6 +143,17 @@ mod tests {
         // degrades to a switch, exactly as before
         assert!(a.has("dry-run"));
         assert!(a.has("verbose"));
+    }
+
+    /// `lint --json` and `store fsck --fix` are boolean: neither may eat
+    /// a following bare token (the store path, typically).
+    #[test]
+    fn json_and_fix_are_switches() {
+        let a = parse("store fsck --fix data/edges.store --json");
+        assert_eq!(a.cmd, "store");
+        assert!(a.has("fix"));
+        assert!(a.has("json"));
+        assert_eq!(a.positional, vec!["fsck", "data/edges.store"]);
     }
 
     #[test]

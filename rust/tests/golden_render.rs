@@ -213,3 +213,32 @@ fn renders_are_deterministic() {
         render(&p, &g, &shapes, TargetLang::Triton)
     );
 }
+
+/// The session render memo (`Session::render_cached`, what `--show-code`
+/// goes through) returns exactly the direct `render` output for the
+/// golden programs, in both dialects, and serves repeats from cache.
+#[test]
+fn session_render_memo_matches_direct_render() {
+    let session = qimeng_mtmc::engine::Session::default();
+    for (g, p) in [fused_gemm_bias_relu(), softmax_reduction()] {
+        let shapes = infer_shapes(&g);
+        for lang in [TargetLang::Triton, TargetLang::Cuda] {
+            let direct = render(&p, &g, &shapes, lang);
+            let memoized = session.render_cached(&p, &g, &shapes, lang);
+            assert_eq!(
+                *memoized, direct,
+                "render memo diverged for `{}` ({})",
+                g.name,
+                lang.label()
+            );
+            let again = session.render_cached(&p, &g, &shapes, lang);
+            assert!(
+                std::sync::Arc::ptr_eq(&memoized, &again),
+                "repeat render of `{}` was not served from the memo",
+                g.name
+            );
+        }
+    }
+    let stats = session.stats();
+    assert_eq!((stats.render_hits, stats.render_misses), (4, 4));
+}

@@ -1,0 +1,111 @@
+//! Unit tests for every reachable `Program::validate` error path, with
+//! exact error-string assertions — these messages are wrapped verbatim
+//! into `Structure` diagnostics by `kir::verify` and into the
+//! `lower_checked` error, so their wording is observable output.
+//!
+//! (The `input node {n} assigned to a kernel` arm of the coverage sweep
+//! is defensive dead code: the per-kernel scan returns `kernel {ki}
+//! contains input node {n}` before any input's coverage count can move,
+//! so that is the string asserted here.)
+
+use qimeng_mtmc::graph::{Graph, Op};
+use qimeng_mtmc::kir::{lower_naive, Kernel, Program, Schedule};
+
+/// x @ w -> relu, with the node ids of all four graph nodes.
+fn gemm_relu() -> (Graph, usize, usize, usize, usize) {
+    let mut g = Graph::new("t");
+    let x = g.input("x", &[64, 64]);
+    let w = g.weight("w", &[64, 64]);
+    let mm = g.op(Op::MatMul, &[x, w]);
+    let r = g.op(Op::Relu, &[mm]);
+    g.mark_output(r);
+    (g, x, w, mm, r)
+}
+
+fn kernel(nodes: Vec<usize>) -> Kernel {
+    Kernel { nodes, schedule: Schedule::default(), name: "k".into() }
+}
+
+fn program(kernels: Vec<Kernel>) -> Program {
+    Program { kernels, mutations: Vec::new(), compile_broken: false }
+}
+
+#[test]
+fn naive_lowering_validates() {
+    let (g, ..) = gemm_relu();
+    assert_eq!(lower_naive(&g).validate(&g), Ok(()));
+}
+
+#[test]
+fn empty_kernel_is_rejected() {
+    let (g, ..) = gemm_relu();
+    let mut p = lower_naive(&g);
+    p.kernels[0].nodes.clear();
+    assert_eq!(p.validate(&g), Err("kernel 0 is empty".to_string()));
+}
+
+#[test]
+fn unsorted_kernel_nodes_are_rejected() {
+    let (g, _, _, mm, r) = gemm_relu();
+    let p = program(vec![kernel(vec![r, mm])]);
+    assert_eq!(
+        p.validate(&g),
+        Err("kernel 0 nodes not topo-sorted".to_string())
+    );
+}
+
+#[test]
+fn input_node_in_a_kernel_is_rejected() {
+    let (g, x, _, mm, r) = gemm_relu();
+    let p = program(vec![kernel(vec![x, mm]), kernel(vec![r])]);
+    assert_eq!(
+        p.validate(&g),
+        Err(format!("kernel 0 contains input node {x}"))
+    );
+}
+
+#[test]
+fn pipeline_without_block_tile_is_rejected() {
+    let (g, ..) = gemm_relu();
+    let mut p = lower_naive(&g);
+    assert!(p.kernels[0].schedule.block_tile.is_none());
+    p.kernels[0].schedule.pipeline_depth = 2;
+    assert_eq!(
+        p.validate(&g),
+        Err("kernel 0 pipelined without block tile (nothing to stage)"
+            .to_string())
+    );
+}
+
+#[test]
+fn double_covered_node_is_rejected() {
+    let (g, _, _, mm, r) = gemm_relu();
+    let p = program(vec![kernel(vec![mm]), kernel(vec![mm, r])]);
+    let name = &g.nodes[mm].name;
+    assert_eq!(
+        p.validate(&g),
+        Err(format!("node {mm} ({name}) covered 2 times"))
+    );
+}
+
+#[test]
+fn uncovered_node_is_rejected() {
+    let (g, _, _, mm, r) = gemm_relu();
+    let p = program(vec![kernel(vec![mm])]);
+    let name = &g.nodes[r].name;
+    assert_eq!(
+        p.validate(&g),
+        Err(format!("node {r} ({name}) covered 0 times"))
+    );
+}
+
+#[test]
+fn consumer_before_producer_is_rejected() {
+    let (g, _, _, mm, r) = gemm_relu();
+    // each kernel is internally fine; the execution order is not
+    let p = program(vec![kernel(vec![r]), kernel(vec![mm])]);
+    assert_eq!(
+        p.validate(&g),
+        Err(format!("kernel 0 consumes node {mm} from later kernel 1"))
+    );
+}

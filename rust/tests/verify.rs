@@ -1,0 +1,192 @@
+//! Differential soundness suite for the static schedule verifier
+//! (`kir::verify`), the pre-verif gate's contract:
+//!
+//! 1. **Closure**: every transform maps statically-legal programs to
+//!    statically-legal programs, on every simulated GPU — so the
+//!    Error-severity rules never fire on the normal optimization path.
+//! 2. **Soundness**: a statically-legal program carrying no semantic
+//!    mutations passes the dynamic correctness check (`check_correct`
+//!    on the executable verif twin returns `Correct`) — the static
+//!    tier never admits a program the dynamic tier would catch.
+//! 3. **Gate transparency**: episodes driven through a gate-enabled
+//!    session are byte-identical to ungated episodes, while the gate
+//!    counts its checks and rejects nothing.
+//!
+//! Nightly CI runs this suite at `QIMENG_PROP_CASES=1024`.
+
+use qimeng_mtmc::engine::Session;
+use qimeng_mtmc::env::OptimEnv;
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::graph::infer_shapes;
+use qimeng_mtmc::kir::{
+    has_errors, is_statically_legal, lower_checked, verify, Program,
+};
+use qimeng_mtmc::microcode::{check_correct, CheckOutcome, LlmProfile,
+                             ProfileId};
+use qimeng_mtmc::prop_assert;
+use qimeng_mtmc::tasks::{kernelbench_suite, tritonbench_g, tritonbench_t};
+use qimeng_mtmc::testkit::gens::{gen_episode_case, gen_program_case,
+                                 EpisodeCase, ProgramCase};
+use qimeng_mtmc::testkit::{check, default_cases};
+use qimeng_mtmc::transform::{ACTION_DIM, STOP_ACTION};
+
+/// The lint acceptance bar as a test: the naive lowering of the entire
+/// benchmark corpus is diagnostic-free on every simulated GPU.
+#[test]
+fn whole_corpus_naive_lowering_is_diagnostic_free() {
+    let tasks: Vec<_> = kernelbench_suite()
+        .into_iter()
+        .chain(tritonbench_g())
+        .chain(tritonbench_t())
+        .collect();
+    assert!(!tasks.is_empty());
+    for spec in GpuSpec::all() {
+        for t in &tasks {
+            let shapes = infer_shapes(&t.graph);
+            let p = lower_checked(&t.graph)
+                .unwrap_or_else(|e| panic!("{}: {e}", t.id));
+            let diags = verify(&p, &t.graph, &shapes, &spec);
+            assert!(diags.is_empty(), "{} on {}: {diags:?}", t.id, spec.name);
+        }
+    }
+}
+
+/// Closure: on generated graphs and arbitrary action streams, the
+/// program that falls out of the transform layer stays free of
+/// Error-severity diagnostics on the spec it was scheduled for.
+#[test]
+fn prop_transforms_preserve_static_legality() {
+    check(5150, default_cases(), gen_program_case, |case: &ProgramCase| {
+        for spec in GpuSpec::all() {
+            let (g, shapes, p) = case.build(&spec);
+            let diags = verify(&p, &g, &shapes, &spec);
+            prop_assert!(
+                !has_errors(&diags),
+                "transformed program statically illegal on {}: {:?}",
+                spec.name,
+                diags
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Soundness: statically legal + no injected mutations ⇒ the dynamic
+/// verifier agrees the program is correct. The static tier must never
+/// pass something the (authoritative) dynamic tier rejects.
+#[test]
+fn prop_static_legal_unmutated_programs_check_correct() {
+    check(5251, default_cases(), gen_program_case, |case: &ProgramCase| {
+        let spec = GpuSpec::a100();
+        let (g, shapes, p) = case.build(&spec);
+        prop_assert!(
+            is_statically_legal(&p, &g, &shapes, &spec),
+            "generated program must be statically legal"
+        );
+        prop_assert!(p.mutations.is_empty() && !p.compile_broken,
+                     "ProgramCase::build never injects bugs");
+        let task = case.recipe.task();
+        let outcome =
+            check_correct(&p, &task.verif_graph, 2, case.quality_milli as u64);
+        prop_assert!(
+            outcome == CheckOutcome::Correct,
+            "statically-legal unmutated program failed dynamic verif: \
+             {outcome:?}"
+        );
+        Ok(())
+    });
+}
+
+/// Everything observable about one episode, bit-exact.
+#[derive(PartialEq, Debug)]
+struct EpisodeTrace {
+    rewards: Vec<u64>,
+    signals: Vec<String>,
+    speedups: Vec<u64>,
+    best_bits: u64,
+    best_program: Program,
+}
+
+fn run_episode(case: &EpisodeCase, session: &Session) -> EpisodeTrace {
+    let task = case.recipe.task();
+    let mut env = OptimEnv::with_session(
+        &task,
+        GpuSpec::a100(),
+        LlmProfile::get(ProfileId::GeminiFlash25),
+        case.env.to_cfg(),
+        case.seed,
+        session,
+    );
+    let mut trace = EpisodeTrace {
+        rewards: Vec::new(),
+        signals: Vec::new(),
+        speedups: Vec::new(),
+        best_bits: 0,
+        best_program: Program::default(),
+    };
+    for &a in case.actions.iter().cycle().take(env.cfg.max_steps) {
+        if env.state.done {
+            break;
+        }
+        let mask = env.mask();
+        let pick =
+            if mask[a % ACTION_DIM] { a % ACTION_DIM } else { STOP_ACTION };
+        let r = env.step(pick);
+        trace.rewards.push(r.reward.to_bits());
+        trace.signals.push(format!("{:?}", r.signal));
+        trace.speedups.push(env.state.speedup.to_bits());
+    }
+    trace.best_bits = env.state.best_speedup.to_bits();
+    trace.best_program = env.state.best_program.clone();
+    trace
+}
+
+/// Gate transparency: the pre-verif static gate checks every candidate
+/// and rejects none of them on the normal path, so gated and ungated
+/// episodes are byte-identical. (Rules with Error severity are closed
+/// under the transform layer — that is what the two properties above
+/// pin down — so the gate can only be a no-op filter here.)
+#[test]
+fn prop_gated_episode_bitwise_identical_to_ungated() {
+    check(5352, default_cases(), gen_episode_case, |case: &EpisodeCase| {
+        let ungated = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .edge_memo(false)
+            .static_gate(false)
+            .build();
+        prop_assert!(ungated.gate().is_none(),
+                     "static_gate(false) must drop the gate");
+        let baseline = run_episode(case, &ungated);
+        let gated = Session::builder()
+            .cost_cache(false)
+            .analysis_cache(false)
+            .edge_memo(false)
+            .build();
+        let got = run_episode(case, &gated);
+        prop_assert!(
+            got == baseline,
+            "gated episode diverged from ungated:\n  got {:?}\n  want {:?}",
+            got.signals,
+            baseline.signals
+        );
+        let gate = gated.gate().expect("gate is on by default");
+        prop_assert!(
+            gate.rejects() == 0,
+            "gate rejected {} transform-produced candidates",
+            gate.rejects()
+        );
+        // only candidates that survive micro-coding reach the gate:
+        // a Correct step came through it, and (with zero rejects) so
+        // did every WrongResult — Stop/Rejected/CompileFail bypass it
+        let has_candidate = baseline
+            .signals
+            .iter()
+            .any(|s| s.starts_with("Correct") || s == "WrongResult");
+        prop_assert!(
+            !has_candidate || gate.checks() > 0,
+            "an episode with surviving candidates never consulted the gate"
+        );
+        Ok(())
+    });
+}
