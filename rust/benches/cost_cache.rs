@@ -23,8 +23,11 @@ fn sweep_results(use_cache: bool, threads: usize,
                  blocks: &[(GpuSpec, Vec<Task>)], methods: &[Method])
                  -> (Vec<SuiteResult>, f64, (usize, usize)) {
     let session = Session::builder().cost_cache(use_cache).build();
-    let runner = BatchRunner::new(BatchCfg { threads, sink: None }, &session)
-        .expect("batch runner");
+    let runner = BatchRunner::new(
+        BatchCfg { threads, ..Default::default() },
+        &session,
+    )
+    .expect("batch runner");
     let jobs = roster_sweep(methods, blocks);
     let t0 = std::time::Instant::now();
     let results = runner.run(&jobs);

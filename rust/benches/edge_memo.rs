@@ -82,11 +82,17 @@ fn main() {
     let cold_session = Session::builder().edge_memo(false).build();
     let warm_session = Session::default();
     let cold_runner =
-        BatchRunner::new(BatchCfg { threads, sink: None }, &cold_session)
-            .expect("batch runner");
+        BatchRunner::new(
+            BatchCfg { threads, ..Default::default() },
+            &cold_session,
+        )
+        .expect("batch runner");
     let warm_runner =
-        BatchRunner::new(BatchCfg { threads, sink: None }, &warm_session)
-            .expect("batch runner");
+        BatchRunner::new(
+            BatchCfg { threads, ..Default::default() },
+            &warm_session,
+        )
+        .expect("batch runner");
     let sweep_jobs = roster_sweep(&methods, &blocks);
     let mut reference: Option<Vec<SuiteResult>> = None;
     let mut check = |results: Vec<SuiteResult>| match &reference {

@@ -11,4 +11,6 @@
 
 mod session;
 
-pub use session::{Session, SessionBuilder, StatsRegistry, StoreReport};
+pub use session::{
+    FaultReport, Session, SessionBuilder, StatsRegistry, StoreReport,
+};

@@ -38,13 +38,15 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::env::{
-    flush_edge_memo, warm_start_edge_memo, EdgeMemo, FlushReport, WarmStartReport,
+    flush_edge_memo_with, warm_start_edge_memo_with, EdgeMemo, FlushReport,
+    WarmStartReport,
 };
 use crate::gpusim::{graph_fingerprint, program_fingerprint, CostCache,
                     MemoStats};
 use crate::graph::Graph;
 use crate::kir::{render, GateStats, Program, TargetLang};
 use crate::transform::AnalysisCache;
+use crate::util::faults::{FaultPlan, FaultSite, FaultStats};
 use crate::util::json::Json;
 
 /// Environment override for the edge memo's entry capacity (useful to
@@ -77,6 +79,12 @@ pub struct Session {
     seg_written: AtomicUsize,
     seg_skipped: AtomicUsize,
     finished: AtomicBool,
+    /// Deterministic fault-injection schedule (`--inject-faults`);
+    /// `None` = injection off, every site costs one branch.
+    faults: Option<Arc<FaultPlan>>,
+    /// What the retry loop and degradation paths actually did this run
+    /// (always present; all-zero on a clean run).
+    fault_stats: FaultStats,
 }
 
 impl Session {
@@ -106,6 +114,18 @@ impl Session {
     /// (`Arc`-shared so envs can hold them beyond the borrow).
     pub fn gate(&self) -> Option<&Arc<GateStats>> {
         self.gate.as_ref()
+    }
+
+    /// The fault-injection plan, when one is armed (`Arc`-shared so envs
+    /// and sinks can hold it beyond the borrow).
+    pub fn faults(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
+    }
+
+    /// The run's fault-tolerance counters (always present; all-zero when
+    /// nothing went wrong).
+    pub fn fault_stats(&self) -> &FaultStats {
+        &self.fault_stats
     }
 
     /// Render a program through the session's render memo. `kir::render`
@@ -166,7 +186,9 @@ impl Session {
             return self.persisted.load(Ordering::SeqCst);
         }
         let report = match (&self.edges, &self.store) {
-            (Some(memo), Some(path)) => flush_edge_memo(memo, path),
+            (Some(memo), Some(path)) => {
+                flush_edge_memo_with(memo, path, self.faults.as_deref())
+            }
             _ => FlushReport::default(),
         };
         self.persisted.store(report.edges, Ordering::SeqCst);
@@ -200,6 +222,7 @@ impl Session {
                     warm_loaded: self.warm.edges,
                     recovered_segments: self.warm.recovered_segments,
                     degraded_segments: self.warm.degraded_segments,
+                    stale_rejected: self.warm.stale_rejected,
                     persisted: done
                         .then(|| self.persisted.load(Ordering::SeqCst)),
                     written_segments: done
@@ -208,6 +231,21 @@ impl Session {
                         .then(|| self.seg_skipped.load(Ordering::SeqCst)),
                 }
             }),
+            faults: FaultReport {
+                enabled: self.faults.is_some(),
+                panicked: self.fault_stats.panicked(),
+                retried: self.fault_stats.retried(),
+                recovered: self.fault_stats.recovered(),
+                exhausted: self.fault_stats.exhausted(),
+                sink_retries: self.fault_stats.sink_retries(),
+                injected: match &self.faults {
+                    Some(plan) => FaultSite::all()
+                        .iter()
+                        .map(|s| (s.name(), plan.injected(*s)))
+                        .collect(),
+                    None => Vec::new(),
+                },
+            },
         }
     }
 }
@@ -250,6 +288,7 @@ pub struct SessionBuilder {
     gate: bool,
     store: Option<PathBuf>,
     edge_capacity: Option<usize>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for SessionBuilder {
@@ -261,6 +300,7 @@ impl Default for SessionBuilder {
             gate: true,
             store: None,
             edge_capacity: None,
+            faults: None,
         }
     }
 }
@@ -312,6 +352,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Arm a deterministic fault-injection plan (`--inject-faults` /
+    /// `QIMENG_FAULT_SEED`). `None` (the default) keeps every injection
+    /// site disabled.
+    pub fn faults(mut self, plan: Option<FaultPlan>) -> Self {
+        self.faults = plan.map(Arc::new);
+        self
+    }
+
     /// Build the Session: construct the enabled memos and warm-start the
     /// edge memo from the store (when both are configured).
     pub fn build(self) -> Session {
@@ -326,7 +374,9 @@ impl SessionBuilder {
         });
         let store = if edges.is_some() { self.store } else { None };
         let warm = match (&edges, &store) {
-            (Some(memo), Some(path)) => warm_start_edge_memo(memo, path),
+            (Some(memo), Some(path)) => {
+                warm_start_edge_memo_with(memo, path, self.faults.as_deref())
+            }
             _ => WarmStartReport::default(),
         };
         Session {
@@ -343,6 +393,8 @@ impl SessionBuilder {
             seg_written: AtomicUsize::new(0),
             seg_skipped: AtomicUsize::new(0),
             finished: AtomicBool::new(false),
+            faults: self.faults,
+            fault_stats: FaultStats::new(),
         }
     }
 }
@@ -359,6 +411,10 @@ pub struct StoreReport {
     /// Segment files rejected as corrupt/truncated at warm start; each
     /// cost only its own shard (the others still loaded).
     pub degraded_segments: usize,
+    /// Cached programs dropped at warm start because they are no longer
+    /// statically legal under the current verifier (healed out of the
+    /// store by the next flush).
+    pub stale_rejected: usize,
     /// Edges written by [`Session::finish`]; `None` until it has run.
     pub persisted: Option<usize>,
     /// Segments rewritten by the flush (dirty shards only); `None`
@@ -391,6 +447,41 @@ pub struct StatsRegistry {
     /// Edges warm-started from a persisted store.
     pub edge_disk_loaded: usize,
     pub store: Option<StoreReport>,
+    /// Fault-tolerance counters (always present; `enabled` says whether
+    /// an injection plan was armed).
+    pub faults: FaultReport,
+}
+
+/// Fault-tolerance snapshot for one run: what the sweep survived plus
+/// what the injection plan fired, per site.
+#[derive(Clone, Debug, Default)]
+pub struct FaultReport {
+    /// A [`FaultPlan`] was armed this run.
+    pub enabled: bool,
+    /// Units isolated after a non-transient panic.
+    pub panicked: usize,
+    /// Transient unit failures that were retried.
+    pub retried: usize,
+    /// Retried units that then completed cleanly.
+    pub recovered: usize,
+    /// Units that kept failing past the retry budget.
+    pub exhausted: usize,
+    /// Sink write attempts retried in place.
+    pub sink_retries: usize,
+    /// `(site name, fires)` per injection site; empty without a plan.
+    pub injected: Vec<(&'static str, usize)>,
+}
+
+impl FaultReport {
+    fn any(&self) -> bool {
+        self.panicked + self.retried + self.recovered + self.exhausted
+            + self.sink_retries
+            > 0
+    }
+
+    fn injected_total(&self) -> usize {
+        self.injected.iter().map(|(_, n)| n).sum()
+    }
 }
 
 impl StatsRegistry {
@@ -415,6 +506,18 @@ impl StatsRegistry {
                 self.render_hits, self.render_misses
             );
         }
+        if self.faults.enabled || self.faults.any() {
+            eprintln!(
+                "faults: {} retried / {} recovered / {} exhausted / {} \
+                 panicked / {} sink retries ({} injected)",
+                self.faults.retried,
+                self.faults.recovered,
+                self.faults.exhausted,
+                self.faults.panicked,
+                self.faults.sink_retries,
+                self.faults.injected_total()
+            );
+        }
     }
 
     /// The whole registry as one JSON object (the `--stats-json`
@@ -434,6 +537,7 @@ impl StatsRegistry {
                 ("warm_loaded", Json::from(s.warm_loaded)),
                 ("recovered_segments", Json::from(s.recovered_segments)),
                 ("degraded_segments", Json::from(s.degraded_segments)),
+                ("stale_rejected", Json::from(s.stale_rejected)),
                 ("persisted", opt_json(s.persisted)),
                 ("written_segments", opt_json(s.written_segments)),
                 ("skipped_segments", opt_json(s.skipped_segments)),
@@ -447,6 +551,22 @@ impl StatsRegistry {
                 ("static_rejects", Json::from(rejects)),
             ]),
         };
+        let injected = Json::Obj(
+            self.faults
+                .injected
+                .iter()
+                .map(|(name, n)| ((*name).to_string(), Json::from(*n)))
+                .collect(),
+        );
+        let faults = Json::obj(vec![
+            ("enabled", Json::from(self.faults.enabled)),
+            ("panicked", Json::from(self.faults.panicked)),
+            ("retried", Json::from(self.faults.retried)),
+            ("recovered", Json::from(self.faults.recovered)),
+            ("exhausted", Json::from(self.faults.exhausted)),
+            ("sink_retries", Json::from(self.faults.sink_retries)),
+            ("injected", injected),
+        ]);
         Json::obj(vec![
             ("cost_cache", memo_json(&self.cost)),
             ("analysis_cache", memo_json(&self.analysis)),
@@ -457,6 +577,7 @@ impl StatsRegistry {
                 ("misses", Json::from(self.render_misses)),
             ])),
             ("store", store),
+            ("faults", faults),
         ])
     }
 }
@@ -706,6 +827,47 @@ mod tests {
             .get("static_gate")
             .unwrap()
             .clone()
+    }
+
+    #[test]
+    fn fault_plan_and_stats_surface_in_registry() {
+        let s = Session::builder().faults(Some(FaultPlan::new(7))).build();
+        assert!(s.faults().is_some());
+        s.fault_stats().note_retried();
+        s.fault_stats().note_recovered();
+        let reg = s.stats();
+        assert!(reg.faults.enabled);
+        assert_eq!(reg.faults.retried, 1);
+        assert_eq!(reg.faults.recovered, 1);
+        let parsed = Json::parse(&reg.to_json().to_string()).unwrap();
+        let f = parsed.get("faults").unwrap();
+        assert_eq!(f.get("enabled"), Some(&Json::Bool(true)));
+        assert_eq!(f.get("retried").unwrap().as_usize(), Some(1));
+        assert_eq!(f.get("recovered").unwrap().as_usize(), Some(1));
+        assert!(f.get("injected").unwrap().get("verif-flake").is_some());
+
+        // without a plan the object is present but disabled, and a
+        // storeless run reports no stale rejections anywhere
+        let off = Session::default();
+        assert!(off.faults().is_none());
+        let parsed = Json::parse(&off.stats().to_json().to_string()).unwrap();
+        let f = parsed.get("faults").unwrap();
+        assert_eq!(f.get("enabled"), Some(&Json::Bool(false)));
+        assert_eq!(f.get("panicked").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn store_report_carries_stale_rejected() {
+        let path = tmp("stale_report.store");
+        let s = Session::builder().memo_store(Some(path.clone())).build();
+        s.edges().unwrap().insert(5, edge());
+        s.finish();
+        let store = s.stats().store.unwrap();
+        assert_eq!(store.stale_rejected, 0, "clean store: nothing screened");
+        let parsed = Json::parse(&s.stats().to_json().to_string()).unwrap();
+        let js = parsed.get("store").unwrap();
+        assert_eq!(js.get("stale_rejected").unwrap().as_usize(), Some(0));
+        cleanup(&path);
     }
 
     #[test]

@@ -52,12 +52,14 @@ use std::io::{BufReader, Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::memo::{CachedEdge, EdgeMemo};
 use super::reward::StepSignal;
 use crate::graph::{Mutation, MutationKind};
-use crate::kir::{Kernel, LoopOrder, Program, Schedule};
+use crate::kir::{is_intrinsically_legal, Kernel, LoopOrder, Program,
+                 Schedule};
+use crate::util::faults::{FaultPlan, FaultSite};
 
 /// Format magic; the trailing digit is the version. Bump it on any layout
 /// change — old stores then fail the magic check and cold-start cleanly.
@@ -90,6 +92,11 @@ pub struct WarmStartReport {
     /// shards cold-start and are re-marked dirty so the next flush heals
     /// the store.
     pub degraded_segments: usize,
+    /// Cached programs dropped at load because they are no longer
+    /// statically legal under the current verifier (stale entries from an
+    /// older binary, or silent corruption that still parses). Their
+    /// shards stay dirty so the next flush rewrites them screened.
+    pub stale_rejected: usize,
 }
 
 /// What a flush wrote (returned by [`flush_edge_memo`], surfaced in
@@ -506,14 +513,47 @@ fn ensure_manifest(memo: &EdgeMemo, dir: &Path) -> Result<()> {
     write_atomic(&path, &want)
 }
 
+/// The warm-start legality screen: drop entries whose cached program is
+/// no longer intrinsically legal under the current verifier (a stale
+/// store written by an older binary, or silent corruption that still
+/// parses). Programs only ever persist from `Correct` edges, so a live
+/// store loses nothing here. Returns the kept entries plus the rejected
+/// count.
+fn screen_entries(entries: Vec<(u64, CachedEdge)>) -> (Vec<(u64, CachedEdge)>, usize) {
+    let before = entries.len();
+    let kept: Vec<(u64, CachedEdge)> = entries
+        .into_iter()
+        .filter(|(_, edge)| match &edge.program {
+            Some(p) => is_intrinsically_legal(p),
+            None => true,
+        })
+        .collect();
+    let stale = before - kept.len();
+    (kept, stale)
+}
+
 /// Insert fully-parsed segments into the memo; a shard restored to
 /// exactly its on-disk contents is marked clean so the next flush can
 /// skip it, while eviction during load or misfiled keys leave the
 /// affected shards dirty (the next flush rewrites them compacted —
-/// self-healing). Returns the number of edges parsed from disk.
-fn install_segments(memo: &EdgeMemo, segments: Vec<(usize, Vec<(u64, CachedEdge)>)>) -> usize {
+/// self-healing). With `screen` set, entries failing the warm-start
+/// legality screen are dropped and their shards kept dirty, so the next
+/// flush rewrites the on-disk segment without them. Returns
+/// `(edges installed, stale entries rejected)`.
+fn install_segments(
+    memo: &EdgeMemo,
+    segments: Vec<(usize, Vec<(u64, CachedEdge)>)>,
+    screen: bool,
+) -> (usize, usize) {
     let mut total = 0;
+    let mut stale_total = 0;
     for (i, entries) in segments {
+        let (entries, stale) = if screen {
+            screen_entries(entries)
+        } else {
+            (entries, 0)
+        };
+        stale_total += stale;
         let count = entries.len();
         let mut all_in_shard = true;
         for (key, edge) in entries {
@@ -521,12 +561,17 @@ fn install_segments(memo: &EdgeMemo, segments: Vec<(usize, Vec<(u64, CachedEdge)
             memo.insert(key, edge);
         }
         total += count;
-        if all_in_shard && memo.shard_len(i) == count {
+        if stale > 0 {
+            // the on-disk segment still holds the rejected entries: keep
+            // the shard dirty even if it lost *all* its entries (no
+            // insert ran to dirty it), so the next flush heals the store
+            memo.mark_shard_dirty(i);
+        } else if all_in_shard && memo.shard_len(i) == count {
             memo.clear_shard_dirty(i);
         }
     }
     memo.note_disk_loaded(total);
-    total
+    (total, stale_total)
 }
 
 // --- entry points ----------------------------------------------------
@@ -621,11 +666,11 @@ pub fn load_edge_memo(memo: &EdgeMemo, path: &Path) -> Result<usize> {
         }
         segments.push((i, read_segment(&sp, i)?));
     }
-    Ok(install_segments(memo, segments))
+    Ok(install_segments(memo, segments, false).0)
 }
 
-/// Strict v1 single-file load (the pre-segmentation format).
-fn load_legacy_file(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+/// Strict v1 single-file parse (the pre-segmentation format).
+fn read_legacy_file(path: &Path) -> Result<Vec<(u64, CachedEdge)>> {
     let file = File::open(path)
         .with_context(|| format!("open edge-memo store {path:?}"))?;
     let mut r = BufReader::new(file);
@@ -647,6 +692,12 @@ fn load_legacy_file(memo: &EdgeMemo, path: &Path) -> Result<usize> {
     if r.read(&mut trail)? != 0 {
         bail!("{path:?}: trailing bytes after {n} entries");
     }
+    Ok(entries)
+}
+
+/// Strict v1 single-file load.
+fn load_legacy_file(memo: &EdgeMemo, path: &Path) -> Result<usize> {
+    let entries = read_legacy_file(path)?;
     let loaded = entries.len();
     for (key, edge) in entries {
         memo.insert(key, edge);
@@ -660,10 +711,23 @@ fn load_legacy_file(memo: &EdgeMemo, path: &Path) -> Result<usize> {
 /// manifest logs and cold-starts; a corrupt / truncated /
 /// version-mismatched **segment** degrades only its own shard — the
 /// others still load, and the bad shard is re-marked dirty so the next
-/// flush overwrites the damaged file. A legacy v1 single file is loaded
+/// flush overwrites the damaged file. Cached programs are re-screened
+/// against the current static verifier; entries no longer legal are
+/// dropped (counted in [`WarmStartReport::stale_rejected`]) and healed
+/// out of the store by the next flush. A legacy v1 single file is loaded
 /// whole and migrated in place to the segmented layout. Never panics,
 /// never fails the run.
 pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
+    warm_start_edge_memo_with(memo, path, None)
+}
+
+/// [`warm_start_edge_memo`] with an optional [`FaultPlan`]: when the
+/// plan fires [`FaultSite::SegmentRead`] for a segment index, that
+/// segment takes the degrade path exactly as a corrupt file would —
+/// the deterministic chaos stand-in for real I/O failure.
+pub fn warm_start_edge_memo_with(memo: &EdgeMemo, path: &Path,
+                                 faults: Option<&FaultPlan>)
+                                 -> WarmStartReport {
     if !path.exists() {
         return WarmStartReport::default();
     }
@@ -696,7 +760,14 @@ pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
         if !sp.exists() {
             continue;
         }
-        match read_segment(&sp, i) {
+        let parsed = if faults.is_some_and(|p| {
+            p.fires_at(FaultSite::SegmentRead, i as u64, 0)
+        }) {
+            Err(anyhow!("injected transient fault (fault plan)"))
+        } else {
+            read_segment(&sp, i)
+        };
+        match parsed {
             Ok(entries) => {
                 report.recovered_segments += 1;
                 good.push((i, entries));
@@ -712,14 +783,21 @@ pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
             }
         }
     }
-    report.edges = install_segments(memo, good);
+    let (edges, stale) = install_segments(memo, good, true);
+    report.edges = edges;
+    report.stale_rejected = stale;
     let degraded = if report.degraded_segments > 0 {
         format!(", {} degraded", report.degraded_segments)
     } else {
         String::new()
     };
+    let stale = if report.stale_rejected > 0 {
+        format!(", {} stale entries rejected", report.stale_rejected)
+    } else {
+        String::new()
+    };
     eprintln!(
-        "edge-memo: warm-started {} edges from {} ({} segments{degraded})",
+        "edge-memo: warm-started {} edges from {} ({} segments{degraded}{stale})",
         report.edges,
         path.display(),
         report.recovered_segments
@@ -728,32 +806,49 @@ pub fn warm_start_edge_memo(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
 }
 
 fn warm_start_legacy(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
-    match load_legacy_file(memo, path) {
-        Ok(n) => {
-            eprintln!(
-                "edge-memo: warm-started {n} edges from {} (legacy store)",
-                path.display()
-            );
-            match replace_legacy_store(memo, path) {
-                Ok(_) => eprintln!(
-                    "edge-memo: migrated legacy store {} to the segmented layout",
-                    path.display()
-                ),
-                Err(e) => eprintln!(
-                    "edge-memo: could not migrate legacy store {}: {e:#} \
-                     (will retry at flush)",
-                    path.display()
-                ),
-            }
-            WarmStartReport { edges: n, recovered_segments: 1, degraded_segments: 0 }
-        }
+    let entries = match read_legacy_file(path) {
+        Ok(entries) => entries,
         Err(e) => {
             eprintln!(
                 "edge-memo: ignoring store {}: {e:#} (cold start)",
                 path.display()
             );
-            WarmStartReport::default()
+            return WarmStartReport::default();
         }
+    };
+    let (kept, stale) = screen_entries(entries);
+    let n = kept.len();
+    for (key, edge) in kept {
+        memo.insert(key, edge);
+    }
+    memo.note_disk_loaded(n);
+    let stale_note = if stale > 0 {
+        format!(", {stale} stale entries rejected")
+    } else {
+        String::new()
+    };
+    eprintln!(
+        "edge-memo: warm-started {n} edges from {} (legacy store{stale_note})",
+        path.display()
+    );
+    // migration persists the *screened* memo, healing any stale entries
+    // out of the store as a side effect
+    match replace_legacy_store(memo, path) {
+        Ok(_) => eprintln!(
+            "edge-memo: migrated legacy store {} to the segmented layout",
+            path.display()
+        ),
+        Err(e) => eprintln!(
+            "edge-memo: could not migrate legacy store {}: {e:#} \
+             (will retry at flush)",
+            path.display()
+        ),
+    }
+    WarmStartReport {
+        edges: n,
+        recovered_segments: 1,
+        degraded_segments: 0,
+        stale_rejected: stale,
     }
 }
 
@@ -765,6 +860,15 @@ fn warm_start_legacy(memo: &EdgeMemo, path: &Path) -> WarmStartReport {
 /// still holding a legacy single file gets one forced full segmented
 /// save (the deferred migration).
 pub fn flush_edge_memo(memo: &EdgeMemo, path: &Path) -> FlushReport {
+    flush_edge_memo_with(memo, path, None)
+}
+
+/// [`flush_edge_memo`] with an optional [`FaultPlan`]: when the plan
+/// fires [`FaultSite::SegmentWrite`] for a dirty segment, that segment
+/// takes the failed-write path (shard stays dirty, prior bytes intact)
+/// exactly as a real I/O failure would.
+pub fn flush_edge_memo_with(memo: &EdgeMemo, path: &Path,
+                            faults: Option<&FaultPlan>) -> FlushReport {
     if path.is_file() {
         return match replace_legacy_store(memo, path) {
             Ok(n) => {
@@ -807,13 +911,20 @@ pub fn flush_edge_memo(memo: &EdgeMemo, path: &Path) -> FlushReport {
             report.edges += memo.shard_len(i);
             continue;
         }
-        let entries = memo.take_shard_for_flush(i);
-        let count = entries.len();
         let sp = segment_path(path, i);
-        let written = segment_bytes(i, entries)
-            .and_then(|bytes| write_atomic(&sp, &bytes));
+        let written = if faults.is_some_and(|p| {
+            p.fires_at(FaultSite::SegmentWrite, i as u64, 0)
+        }) {
+            Err(anyhow!("injected transient fault (fault plan)"))
+        } else {
+            let entries = memo.take_shard_for_flush(i);
+            let count = entries.len();
+            segment_bytes(i, entries)
+                .and_then(|bytes| write_atomic(&sp, &bytes))
+                .map(|()| count)
+        };
         match written {
-            Ok(()) => {
+            Ok(count) => {
                 report.written_segments += 1;
                 report.edges += count;
             }
@@ -989,8 +1100,35 @@ mod tests {
         }
     }
 
+    /// An edge whose cached program the current verifier rejects
+    /// outright (compile-broken AND a zero tile dimension) — the stale
+    /// flavour the warm-start screen exists for. Also exercises the
+    /// `compile_broken = true` byte in the framing roundtrip.
+    fn stale_edge() -> CachedEdge {
+        let program = Program {
+            kernels: vec![Kernel {
+                nodes: vec![2],
+                schedule: Schedule {
+                    block_tile: Some((0, 64, 32)),
+                    ..Schedule::default()
+                },
+                name: "k0_stale".to_string(),
+            }],
+            mutations: vec![],
+            compile_broken: true,
+        };
+        CachedEdge {
+            program: Some(Arc::new(program)),
+            signal: StepSignal::Correct { prev: 1.0, now: 2.0 },
+            speedup: 2.0,
+            from_disk: false,
+        }
+    }
+
     /// One edge of every flavour the stepper produces (all keys land in
-    /// shard 0).
+    /// shard 0). The program is intrinsically legal — the stepper only
+    /// ever persists programs from accepted `Correct` edges, and the
+    /// warm-start screen drops anything else.
     fn sample_edges() -> Vec<(u64, CachedEdge)> {
         let program = Program {
             kernels: vec![
@@ -1018,7 +1156,7 @@ mod tests {
                 Mutation { node: 5, kind: MutationKind::SkippedOp },
                 Mutation { node: 5, kind: MutationKind::BadAccumInit { bias: 1.5 } },
             ],
-            compile_broken: true,
+            compile_broken: false,
         };
         vec![
             (7, CachedEdge {
@@ -1410,6 +1548,149 @@ mod tests {
         assert_eq!(report.recovered_segments, 1);
         assert_eq!(warm.len(), 5);
         assert_eq!(warm.disk_loaded(), 5);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn warm_start_screens_stale_programs() {
+        let path = store("stale_screen");
+        let memo = EdgeMemo::with_capacity(256);
+        for (k, e) in sample_edges() {
+            memo.insert(k, e);
+        }
+        memo.insert(17, stale_edge()); // shard 0, like the sample keys
+        save_edge_memo(&memo, &path).unwrap();
+
+        // the strict loader round-trips everything, broken bit included
+        let strict = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&strict, &path).unwrap(), 6);
+        assert_same_edge(&strict.get(17).unwrap(), &stale_edge());
+
+        // warm start screens the stale program out, keeps its shard dirty
+        let warm = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&warm, &path);
+        assert_eq!(report.edges, 5);
+        assert_eq!(report.stale_rejected, 1);
+        assert_eq!(report.degraded_segments, 0);
+        assert!(warm.get(17).is_none(), "stale entry must not load");
+        for (k, original) in sample_edges() {
+            assert_same_edge(&warm.get(k).unwrap(), &original);
+        }
+        assert!(warm.shard_dirty(0), "screened shard must stay dirty");
+
+        // the next flush heals the store: the stale entry is gone for good
+        let healed = flush_edge_memo(&warm, &path);
+        assert_eq!(healed.written_segments, 1);
+        let again = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&again, &path);
+        assert_eq!(report.edges, 5);
+        assert_eq!(report.stale_rejected, 0);
+        let reload = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&reload, &path).unwrap(), 5);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn legacy_warm_start_screens_and_migrates_clean() {
+        let path = store("legacy_stale");
+        let mut entries = sample_edges();
+        entries.push((17, stale_edge()));
+        write_legacy_store(&path, &entries);
+        let memo = EdgeMemo::with_capacity(256);
+        let report = warm_start_edge_memo(&memo, &path);
+        assert_eq!(report.edges, 5);
+        assert_eq!(report.stale_rejected, 1);
+        assert!(memo.get(17).is_none());
+        assert!(path.is_dir(), "migration still runs after screening");
+        // the migrated store was written from the screened memo
+        let reload = EdgeMemo::with_capacity(256);
+        assert_eq!(load_edge_memo(&reload, &path).unwrap(), 5);
+        cleanup(&path);
+    }
+
+    #[test]
+    fn injected_segment_read_faults_degrade_deterministically() {
+        let path = store("inject_read");
+        let memo = EdgeMemo::with_capacity(256);
+        for i in 0..memo.shard_count() {
+            memo.insert(key_in(i as u64, 1), small_edge(i as f64 + 1.0));
+        }
+        save_edge_memo(&memo, &path).unwrap();
+        // find a seed whose plan hits at least one segment-read site
+        // (P(miss) ≈ (3/4)^16 per seed, so this terminates immediately)
+        let (seed, firing) = (0u64..64)
+            .find_map(|seed| {
+                let plan = FaultPlan::new(seed);
+                let firing: Vec<usize> = (0..memo.shard_count())
+                    .filter(|&i| {
+                        plan.fires_at(FaultSite::SegmentRead, i as u64, 0)
+                    })
+                    .collect();
+                (!firing.is_empty()).then_some((seed, firing))
+            })
+            .unwrap();
+        for _ in 0..2 {
+            // the same plan degrades the same shards every time
+            let plan = FaultPlan::new(seed);
+            let warm = EdgeMemo::with_capacity(256);
+            let report = warm_start_edge_memo_with(&warm, &path, Some(&plan));
+            assert_eq!(report.degraded_segments, firing.len());
+            assert_eq!(report.edges, memo.shard_count() - firing.len());
+            for &i in &firing {
+                assert!(warm.get(key_in(i as u64, 1)).is_none());
+                assert!(warm.shard_dirty(i), "degraded shard stays dirty");
+            }
+            assert_eq!(plan.injected(FaultSite::SegmentRead), firing.len());
+        }
+        // without a plan the same store loads whole
+        let clean = EdgeMemo::with_capacity(256);
+        assert_eq!(warm_start_edge_memo(&clean, &path).edges,
+                   memo.shard_count());
+        cleanup(&path);
+    }
+
+    #[test]
+    fn injected_segment_write_faults_keep_prior_bytes_and_retry() {
+        let path = store("inject_write");
+        let memo = EdgeMemo::with_capacity(256);
+        for i in 0..memo.shard_count() {
+            memo.insert(key_in(i as u64, 1), small_edge(i as f64 + 1.0));
+        }
+        save_edge_memo(&memo, &path).unwrap();
+        let before: Vec<Vec<u8>> = (0..memo.shard_count())
+            .map(|i| std::fs::read(segment_path(&path, i)).unwrap())
+            .collect();
+        // dirty every shard, then flush under an injecting plan
+        for i in 0..memo.shard_count() {
+            memo.insert(key_in(i as u64, 2), small_edge(9.0));
+        }
+        let (seed, firing) = (0u64..64)
+            .find_map(|seed| {
+                let plan = FaultPlan::new(seed);
+                let firing: Vec<usize> = (0..memo.shard_count())
+                    .filter(|&i| {
+                        plan.fires_at(FaultSite::SegmentWrite, i as u64, 0)
+                    })
+                    .collect();
+                (!firing.is_empty()).then_some((seed, firing))
+            })
+            .unwrap();
+        let plan = FaultPlan::new(seed);
+        let faulty = flush_edge_memo_with(&memo, &path, Some(&plan));
+        assert_eq!(faulty.written_segments,
+                   memo.shard_count() - firing.len());
+        for &i in &firing {
+            assert!(memo.shard_dirty(i), "failed shard stays dirty for retry");
+            assert_eq!(std::fs::read(segment_path(&path, i)).unwrap(),
+                       before[i],
+                       "prior bytes must survive an injected write fault");
+        }
+        // a fault-free retry heals every failed shard
+        let retried = flush_edge_memo(&memo, &path);
+        assert_eq!(retried.written_segments, firing.len());
+        let warm = EdgeMemo::with_capacity(256);
+        assert_eq!(warm_start_edge_memo(&warm, &path).edges,
+                   2 * memo.shard_count());
         cleanup(&path);
     }
 

@@ -19,9 +19,9 @@ mod tree;
 
 pub use memo::{CachedEdge, EdgeMemo};
 pub use memo_store::{
-    flush_edge_memo, fsck_store, load_edge_memo, save_edge_memo,
-    warm_start_edge_memo, FlushReport, FsckReport, SegmentFsck,
-    WarmStartReport,
+    flush_edge_memo, flush_edge_memo_with, fsck_store, load_edge_memo,
+    save_edge_memo, warm_start_edge_memo, warm_start_edge_memo_with,
+    FlushReport, FsckReport, SegmentFsck, WarmStartReport,
 };
 pub use obs::{featurize, OBS_DIM};
 pub use reward::{shape_reward, RewardCfg, StepSignal};

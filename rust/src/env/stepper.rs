@@ -26,6 +26,7 @@ use crate::microcode::{
 };
 use crate::tasks::Task;
 use crate::transform::{decode_action, AnalysisCache, Analyzer, STOP_ACTION};
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::Rng;
 
 /// Environment configuration.
@@ -100,6 +101,10 @@ pub struct OptimEnv<'a> {
     gate: Option<Arc<GateStats>>,
     /// Scope fingerprint of this env's transitions in the [`EdgeMemo`].
     edge_ctx: u64,
+    /// Deterministic fault-injection plan; `None` = injection off. The
+    /// only site in the env is the verif-trial flake, which unwinds as a
+    /// transient fault for the batch retry loop to absorb.
+    faults: Option<Arc<FaultPlan>>,
     pub(crate) base_seed: u64,
 }
 
@@ -115,7 +120,7 @@ impl<'a> OptimEnv<'a> {
     pub fn new(task: &'a Task, spec: GpuSpec, profile: LlmProfile,
                cfg: EnvConfig, seed: u64) -> OptimEnv<'a> {
         Self::with_parts(task, spec, profile, cfg, seed, None, None, None,
-                         None)
+                         None, None)
     }
 
     /// Build an env wired into a [`Session`]'s memo subsystems. Outcomes
@@ -126,7 +131,7 @@ impl<'a> OptimEnv<'a> {
                         session: &'a Session) -> OptimEnv<'a> {
         Self::with_parts(task, spec, profile, cfg, seed, session.cost(),
                          session.analysis(), session.edges().cloned(),
-                         session.gate().cloned())
+                         session.gate().cloned(), session.faults().cloned())
     }
 
     /// The constructor every variant funnels into, taking the memo trio
@@ -137,7 +142,8 @@ impl<'a> OptimEnv<'a> {
                              cost: Option<&'a CostCache>,
                              analysis: Option<&'a AnalysisCache>,
                              edges: Option<Arc<EdgeMemo>>,
-                             gate: Option<Arc<GateStats>>) -> OptimEnv<'a> {
+                             gate: Option<Arc<GateStats>>,
+                             faults: Option<Arc<FaultPlan>>) -> OptimEnv<'a> {
         let shapes = infer_shapes(&task.graph);
         let graph_ctx = graph_fingerprint(&task.graph, &shapes);
         let pricer = Pricer::from_ctx(cost, graph_ctx);
@@ -162,19 +168,21 @@ impl<'a> OptimEnv<'a> {
             done: false,
         };
         OptimEnv { task, spec, profile, cfg, shapes, eager_us, state,
-                   pricer, analyzer, memo: edges, gate, edge_ctx,
+                   pricer, analyzer, memo: edges, gate, edge_ctx, faults,
                    base_seed: seed }
     }
 
-    /// The memo trio (plus the static gate) this env routes through
-    /// (used to rebuild an env over the same task, e.g.
+    /// The memo trio (plus the static gate and the fault plan) this env
+    /// routes through (used to rebuild an env over the same task, e.g.
     /// [`super::TreeEnv::reset`]).
+    #[allow(clippy::type_complexity)]
     pub(crate) fn parts(&self) -> (Option<&'a CostCache>,
                                    Option<&'a AnalysisCache>,
                                    Option<Arc<EdgeMemo>>,
-                                   Option<Arc<GateStats>>) {
+                                   Option<Arc<GateStats>>,
+                                   Option<Arc<FaultPlan>>) {
         (self.pricer.cache(), self.analyzer.cache(), self.memo.clone(),
-         self.gate.clone())
+         self.gate.clone(), self.faults.clone())
     }
 
     /// The shared transition memo, if one is attached.
@@ -299,6 +307,13 @@ impl<'a> OptimEnv<'a> {
             StepOutcome::Buggy(p) => {
                 if self.statically_rejected(&p) {
                     return StepSignal::WrongResult;
+                }
+                // injected verif flake: a transient failure where a real
+                // harness would hit a flaky trial, keyed by the edge seed
+                // so every run schedules it at the same transitions
+                if let Some(plan) = &self.faults {
+                    plan.raise_if(FaultSite::VerifFlake,
+                                  self.edge_seed(action));
                 }
                 // run the verification harness — a lucky sub-tolerance bug
                 // would pass (and deserves to)

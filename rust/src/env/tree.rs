@@ -37,7 +37,7 @@ impl<'a> TreeEnv<'a> {
         TreeEnv {
             env: OptimEnv::with_parts(task, spec, profile, cfg, seed, None,
                                       None, Some(Arc::new(EdgeMemo::new())),
-                                      None),
+                                      None, None),
         }
     }
 
@@ -57,7 +57,8 @@ impl<'a> TreeEnv<'a> {
         TreeEnv {
             env: OptimEnv::with_parts(task, spec, profile, cfg, seed,
                                       session.cost(), session.analysis(),
-                                      Some(edges), session.gate().cloned()),
+                                      Some(edges), session.gate().cloned(),
+                                      session.faults().cloned()),
         }
     }
 
@@ -69,9 +70,9 @@ impl<'a> TreeEnv<'a> {
         let profile = self.env.profile.clone();
         let cfg = self.env.cfg.clone();
         let base = self.env.base_seed;
-        let (cost, analysis, edges, gate) = self.env.parts();
+        let (cost, analysis, edges, gate, faults) = self.env.parts();
         self.env = OptimEnv::with_parts(task, spec, profile, cfg, base,
-                                        cost, analysis, edges, gate);
+                                        cost, analysis, edges, gate, faults);
     }
 
     /// Step with memoization (delegates to the memo-wired env).

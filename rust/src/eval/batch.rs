@@ -24,13 +24,36 @@
 //!   policy, `--memo-store` persistence and stats all live on the
 //!   Session; sink records are enriched with the memoized eager baseline.
 //!
+//! Fault tolerance (the sweep engine's robustness contract):
+//! - **unit isolation** — every unit runs under `catch_unwind`; a
+//!   panicking unit becomes a `status: "panicked"` sink record with a
+//!   zeroed outcome and the sweep keeps going. One bad (method, task)
+//!   pair can no longer abort an hours-long table run.
+//! - **retry with bounded backoff** — failures classed transient
+//!   (injected faults from the session's
+//!   [`FaultPlan`](crate::util::faults::FaultPlan)) retry up to
+//!   [`BatchCfg::max_retries`] times with deterministic jittered backoff
+//!   ([`crate::util::faults::backoff_ms`]); the session's
+//!   [`FaultStats`](crate::util::faults::FaultStats) counts
+//!   retried/recovered/exhausted transitions.
+//! - **sweep resume** — [`BatchCfg::resume`] scans an existing sink
+//!   file, truncates a torn final line (a crash mid-write), and skips
+//!   every unit whose record is already present, reconstructing its
+//!   [`TaskOutcome`] from the record so aggregate metrics match a full
+//!   run. At `threads = 1` an interrupted-then-resumed sweep produces a
+//!   sink byte-identical to an uninterrupted one.
+//!
 //! Determinism: unit seeds derive from (job seed, task index) exactly as
 //! in [`super::evaluate`], never from thread identity — and every memo
 //! stores only deterministic pure/edge-deterministic results — so results
 //! are byte-identical across `threads = 1` and `threads = N` and across
 //! every cache on/off combination (guarded by `rust/tests/batch.rs`).
+//! Retries re-enter the same deterministic unit, so a retried sweep's
+//! *outcomes* match a fault-free one (`rust/tests/faults.rs`).
 
+use std::collections::HashMap;
 use std::io::{BufWriter, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -41,6 +64,10 @@ use crate::engine::Session;
 use crate::gpusim::{library_affinity, GpuSpec, Pricer};
 use crate::graph::infer_shapes;
 use crate::tasks::Task;
+use crate::util::faults::{
+    backoff_ms, classify, panic_msg, set_unit_attempt, FaultPlan, FaultSite,
+    FaultStats,
+};
 use crate::util::json::Json;
 use crate::util::parallel::{default_threads, par_map};
 
@@ -76,36 +103,76 @@ pub struct BatchCfg {
     pub threads: usize,
     /// Optional JSON-lines output path for per-task outcome records.
     pub sink: Option<PathBuf>,
+    /// Resume an interrupted sweep: scan `sink` for completed unit
+    /// records (truncating a torn final line), open it in append mode,
+    /// and skip every unit already recorded — its outcome is
+    /// reconstructed from the record instead of re-run. Requires `sink`.
+    pub resume: bool,
+    /// Retry budget for transiently-failing units and sink writes
+    /// (injected faults and I/O hiccups). Keep this at least as large as
+    /// the fault plan's burst or injected faults become unit losses.
+    pub max_retries: usize,
 }
 
 impl Default for BatchCfg {
     fn default() -> Self {
-        BatchCfg { threads: default_threads(), sink: None }
+        BatchCfg {
+            threads: default_threads(),
+            sink: None,
+            resume: false,
+            max_retries: 2,
+        }
     }
 }
 
 /// Append-only JSON-lines writer shared across workers. The lock is held
 /// per line; records are written in completion order (each carries its
-/// job/task identity, so order never carries meaning). I/O errors are
+/// job/task identity, so order never carries meaning) and flushed per
+/// record, so an interrupted process loses at most the line being
+/// written — which `--resume` then truncates. A failing write retries in
+/// place (bounded by the caller's budget); persistent I/O errors are
 /// reported to stderr once (first failure) and surfaced via
 /// [`JsonlSink::failed`] — a sweep never aborts mid-flight on a full
-/// disk, but the truncation is loud, not silent.
+/// disk, but the truncation is loud, not silent. A worker that dies
+/// while holding the lock poisons it; later writers recover the guard
+/// rather than cascading the panic.
 pub struct JsonlSink {
     w: Mutex<BufWriter<std::fs::File>>,
     write_failed: std::sync::atomic::AtomicBool,
 }
 
 impl JsonlSink {
+    /// Create (truncate) `path` and its parent directories.
     pub fn create(path: &Path) -> anyhow::Result<JsonlSink> {
+        Self::ensure_parent(path)?;
+        Ok(Self::wrap(std::fs::File::create(path)?))
+    }
+
+    /// Open `path` for appending (sweep resume): existing records stay,
+    /// new records append. Creates the file if missing.
+    pub fn append(path: &Path) -> anyhow::Result<JsonlSink> {
+        Self::ensure_parent(path)?;
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        Ok(Self::wrap(f))
+    }
+
+    fn ensure_parent(path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        Ok(JsonlSink {
-            w: Mutex::new(BufWriter::new(std::fs::File::create(path)?)),
+        Ok(())
+    }
+
+    fn wrap(f: std::fs::File) -> JsonlSink {
+        JsonlSink {
+            w: Mutex::new(BufWriter::new(f)),
             write_failed: std::sync::atomic::AtomicBool::new(false),
-        })
+        }
     }
 
     fn note_failure(&self, what: &str, e: &std::io::Error) {
@@ -118,16 +185,60 @@ impl JsonlSink {
         }
     }
 
+    /// Write one record (no retries, no fault plan).
     pub fn write(&self, v: &Json) {
-        let mut g = self.w.lock().unwrap();
-        if let Err(e) = writeln!(g, "{v}") {
-            drop(g);
-            self.note_failure("write", &e);
+        self.write_with(v, None, None, 0);
+    }
+
+    /// Write one record and flush it to disk, retrying a failed attempt
+    /// up to `max_retries` times. `faults` injects deterministic
+    /// [`FaultSite::SinkWrite`] failures keyed by the record bytes (an
+    /// injected attempt touches nothing, so the retried bytes are
+    /// identical); each successful write is counted toward the plan's
+    /// kill-after budget. Real I/O errors retry too — `BufWriter` tracks
+    /// consumed bytes across a failed flush, so a retry never duplicates
+    /// a partial line.
+    pub fn write_with(&self, v: &Json, faults: Option<&FaultPlan>,
+                      stats: Option<&FaultStats>, max_retries: usize) {
+        let line = v.to_string();
+        let key = fnv1a(line.as_bytes());
+        let mut g = self.w.lock().unwrap_or_else(|p| p.into_inner());
+        let mut attempt = 0u32;
+        loop {
+            let injected = faults.is_some_and(|p| {
+                p.fires_at(FaultSite::SinkWrite, key, attempt)
+            });
+            let r = if injected {
+                Err(std::io::Error::other(
+                    "injected transient fault (fault plan)",
+                ))
+            } else {
+                writeln!(g, "{line}").and_then(|()| g.flush())
+            };
+            match r {
+                Ok(()) => {
+                    if let Some(p) = faults {
+                        p.note_sink_write();
+                    }
+                    return;
+                }
+                Err(_) if (attempt as usize) < max_retries => {
+                    if let Some(s) = stats {
+                        s.note_sink_retry();
+                    }
+                    attempt += 1;
+                }
+                Err(e) => {
+                    drop(g);
+                    self.note_failure("write", &e);
+                    return;
+                }
+            }
         }
     }
 
     pub fn flush(&self) {
-        let r = self.w.lock().unwrap().flush();
+        let r = self.w.lock().unwrap_or_else(|p| p.into_inner()).flush();
         if let Err(e) = r {
             self.note_failure("flush", &e);
         }
@@ -139,6 +250,131 @@ impl JsonlSink {
     }
 }
 
+/// FNV-1a over `bytes` — the stable record-identity hash behind
+/// [`FaultSite::SinkWrite`] gating and [`unit_fault_key`].
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The stable identity of one sweep unit, hashed from
+/// (method, suite, gpu, task id, seed) — the same tuple `--resume` keys
+/// records by. Feed it to
+/// [`FaultPlan::with_panic_unit`](crate::util::faults::FaultPlan::with_panic_unit)
+/// to arm a hard panic for exactly one unit.
+pub fn unit_fault_key(method: &str, suite: &str, gpu: &str, task: &str,
+                      seed: u64) -> u64 {
+    fnv1a(sink_key(method, suite, gpu, task, seed).as_bytes())
+}
+
+/// The `--resume` skip key: unit identity joined with `\x1f` (a
+/// separator that cannot appear in labels or task ids).
+fn sink_key(method: &str, suite: &str, gpu: &str, task: &str, seed: u64)
+            -> String {
+    format!("{method}\x1f{suite}\x1f{gpu}\x1f{task}\x1f{seed}")
+}
+
+/// How one unit ended: cleanly, isolated after a real panic, or dropped
+/// after exhausting its transient-retry budget. Non-ok statuses carry
+/// the panic message for the record's `error` field.
+enum UnitStatus {
+    Ok,
+    Panicked(String),
+    Exhausted(String),
+}
+
+impl UnitStatus {
+    fn label(&self) -> &'static str {
+        match self {
+            UnitStatus::Ok => "ok",
+            UnitStatus::Panicked(_) => "panicked",
+            UnitStatus::Exhausted(_) => "exhausted",
+        }
+    }
+
+    fn error(&self) -> Option<&str> {
+        match self {
+            UnitStatus::Ok => None,
+            UnitStatus::Panicked(m) | UnitStatus::Exhausted(m) => Some(m),
+        }
+    }
+}
+
+/// Scan an existing sink file for `--resume`: returns completed units
+/// keyed by [`sink_key`], with outcomes reconstructed from the records
+/// (f64s round-trip through the JSON writer exactly, so rebuilt metrics
+/// match a full run bit-for-bit). A torn final line — no trailing
+/// newline, the signature of a crash mid-write — is truncated away and
+/// the scan continues; an unparsable *complete* line is mid-file
+/// corruption and a hard error.
+fn resume_scan(path: &Path) -> anyhow::Result<HashMap<String, TaskOutcome>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(HashMap::new());
+        }
+        Err(e) => {
+            return Err(anyhow::Error::new(e).context(format!(
+                "resume: cannot read sink {}",
+                path.display()
+            )));
+        }
+    };
+    let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1);
+    if keep < bytes.len() {
+        eprintln!(
+            "[batch] resume: truncating torn final line of {} ({} bytes)",
+            path.display(),
+            bytes.len() - keep
+        );
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(keep as u64)?;
+    }
+    let text = std::str::from_utf8(&bytes[..keep]).map_err(|_| {
+        anyhow::anyhow!("resume: sink {} is not UTF-8", path.display())
+    })?;
+    let mut done = HashMap::new();
+    for (li, line) in text.lines().enumerate() {
+        let v = Json::parse(line).map_err(|e| {
+            anyhow::anyhow!(
+                "resume: sink {} line {}: {e} (mid-file corruption — only \
+                 a torn final line is recoverable)",
+                path.display(),
+                li + 1
+            )
+        })?;
+        let (key, outcome) = record_parts(&v).ok_or_else(|| {
+            anyhow::anyhow!(
+                "resume: sink {} line {}: record lacks unit identity \
+                 fields (written by an older build?)",
+                path.display(),
+                li + 1
+            )
+        })?;
+        done.insert(key, outcome);
+    }
+    Ok(done)
+}
+
+/// (skip key, reconstructed outcome) of one parsed sink record.
+fn record_parts(v: &Json) -> Option<(String, TaskOutcome)> {
+    let method = v.get("method")?.as_str()?;
+    let suite = v.get("suite")?.as_str()?;
+    let gpu = v.get("gpu")?.as_str()?;
+    let task = v.get("task")?.as_str()?;
+    let seed = v.get("seed")?.as_f64()? as u64;
+    let outcome = TaskOutcome {
+        task_id: task.to_string(),
+        compiled: v.get("compiled")?.as_bool()?,
+        correct: v.get("correct")?.as_bool()?,
+        speedup: v.get("speedup")?.as_f64()?,
+    };
+    Some((sink_key(method, suite, gpu, task, seed), outcome))
+}
+
 /// The batched evaluation engine. Construct once per sweep over a
 /// [`Session`]: the session's memo trio persists across
 /// [`BatchRunner::run`] calls (and across runners), so repeated sweeps
@@ -146,21 +382,47 @@ impl JsonlSink {
 /// and the stats registry are the session's job, not the runner's. A
 /// sweep replayed entirely from a warm store performs no inserts, so the
 /// session's end-of-run flush skips every segment (`written_segments: 0`
-/// in `--stats-json` — the dirty-skip fast path CI asserts on).
+/// in `--stats-json` — the dirty-skip fast path CI asserts on). The
+/// session also carries the optional fault plan and the fault-tolerance
+/// counters the runner's retry loop feeds.
 pub struct BatchRunner<'s> {
     threads: usize,
     session: &'s Session,
     sink: Option<JsonlSink>,
+    max_retries: usize,
+    /// Units already completed in a resumed sink, keyed by [`sink_key`].
+    skip: HashMap<String, TaskOutcome>,
 }
 
 impl<'s> BatchRunner<'s> {
     pub fn new(cfg: BatchCfg, session: &'s Session)
                -> anyhow::Result<BatchRunner<'s>> {
+        let mut skip = HashMap::new();
         let sink = match &cfg.sink {
+            Some(path) if cfg.resume => {
+                skip = resume_scan(path)?;
+                if !skip.is_empty() {
+                    eprintln!(
+                        "[batch] resume: {} completed units found in {}",
+                        skip.len(),
+                        path.display()
+                    );
+                }
+                Some(JsonlSink::append(path)?)
+            }
             Some(path) => Some(JsonlSink::create(path)?),
+            None if cfg.resume => anyhow::bail!(
+                "--resume needs a JSONL sink to scan (pass --jsonl <path>)"
+            ),
             None => None,
         };
-        Ok(BatchRunner { threads: cfg.threads.max(1), session, sink })
+        Ok(BatchRunner {
+            threads: cfg.threads.max(1),
+            session,
+            sink,
+            max_retries: cfg.max_retries,
+            skip,
+        })
     }
 
     /// The session whose memo trio this runner sweeps through.
@@ -202,12 +464,21 @@ impl<'s> BatchRunner<'s> {
             par_map(&units, self.threads, |_, &(ji, ti)| {
                 let job = &jobs[ji];
                 let task = &job.tasks[ti];
+                if let Some(prior) = self.skip.get(&sink_key(
+                    &job.method.label(),
+                    task.suite.label(),
+                    job.gpu.name,
+                    &task.id,
+                    job.cfg.seed,
+                )) {
+                    // resumed unit: its record is already in the sink
+                    return (ji, prior.clone());
+                }
                 // the session's memo trio serves the whole unit (env
                 // steps, greedy lookahead, eager baselines, transition
                 // replays) — whichever tiers its policy enables; outcomes
                 // are bit-identical for every combination
-                let outcome = evaluate_task(&job.method, task, ti as u64,
-                                            &job.gpu, &job.cfg, self.session);
+                let (outcome, status) = self.run_unit(job, task, ti);
                 if let Some(sink) = &self.sink {
                     // enrich the streamed record with the task's eager
                     // baseline — (task, gpu) pairs repeat across every
@@ -218,7 +489,13 @@ impl<'s> BatchRunner<'s> {
                                                &task.graph, &shapes)
                         .eager_time_us(&task.graph, &shapes, &job.gpu,
                                        library_affinity(&task.id));
-                    sink.write(&unit_record(ji, job, task, &outcome, eager_us));
+                    sink.write_with(
+                        &unit_record(ji, job, task, &outcome, eager_us,
+                                     &status),
+                        self.session.faults().map(|a| a.as_ref()),
+                        Some(self.session.fault_stats()),
+                        self.max_retries,
+                    );
                 }
                 (ji, outcome)
             });
@@ -240,6 +517,84 @@ impl<'s> BatchRunner<'s> {
                 outcomes,
             })
             .collect()
+    }
+
+    /// Execute one unit under `catch_unwind`, retrying transient-classed
+    /// failures with deterministic backoff. The unit is a pure function
+    /// of its seeds, so a retry re-runs the identical computation — an
+    /// attempt that survives its injected faults produces the same
+    /// outcome a fault-free run would.
+    fn run_unit(&self, job: &BatchJob, task: &Task, ti: usize)
+                -> (TaskOutcome, UnitStatus) {
+        let faults = self.session.faults().map(|a| a.as_ref());
+        let stats = self.session.fault_stats();
+        let fkey = unit_fault_key(&job.method.label(), task.suite.label(),
+                                  job.gpu.name, &task.id, job.cfg.seed);
+        let mut attempt = 0u32;
+        loop {
+            set_unit_attempt(attempt);
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(plan) = faults {
+                    plan.raise_unit_panic_if(fkey);
+                }
+                evaluate_task(&job.method, task, ti as u64, &job.gpu,
+                              &job.cfg, self.session)
+            }));
+            set_unit_attempt(0);
+            let payload = match caught {
+                Ok(outcome) => {
+                    if attempt > 0 {
+                        stats.note_recovered();
+                    }
+                    return (outcome, UnitStatus::Ok);
+                }
+                Err(payload) => payload,
+            };
+            let msg = panic_msg(payload.as_ref());
+            if classify(payload.as_ref()).is_none() {
+                // a real panic: isolate the unit, keep the sweep alive
+                stats.note_panicked();
+                eprintln!(
+                    "[batch] unit ({}, {}, {}, {}) panicked: {msg} — \
+                     recorded with status \"panicked\", sweep continues",
+                    job.method.label(),
+                    task.suite.label(),
+                    job.gpu.name,
+                    task.id
+                );
+                return (isolated_outcome(task), UnitStatus::Panicked(msg));
+            }
+            if (attempt as usize) >= self.max_retries {
+                stats.note_exhausted();
+                eprintln!(
+                    "[batch] unit ({}, {}, {}, {}) gave up after {} \
+                     retries: {msg}",
+                    job.method.label(),
+                    task.suite.label(),
+                    job.gpu.name,
+                    task.id,
+                    self.max_retries
+                );
+                return (isolated_outcome(task), UnitStatus::Exhausted(msg));
+            }
+            stats.note_retried();
+            std::thread::sleep(std::time::Duration::from_millis(
+                backoff_ms(fkey, attempt),
+            ));
+            attempt += 1;
+        }
+    }
+}
+
+/// The zeroed outcome recorded for a unit that panicked or exhausted its
+/// retries: not compiled, not correct, no speedup — it drags aggregate
+/// metrics down instead of silently vanishing from them.
+fn isolated_outcome(task: &Task) -> TaskOutcome {
+    TaskOutcome {
+        task_id: task.id.clone(),
+        compiled: false,
+        correct: false,
+        speedup: 0.0,
     }
 }
 
@@ -263,18 +618,24 @@ pub fn roster_sweep(methods: &[Method], blocks: &[(GpuSpec, Vec<Task>)])
 }
 
 fn unit_record(ji: usize, job: &BatchJob, task: &Task, o: &TaskOutcome,
-               eager_us: f64) -> Json {
-    Json::obj(vec![
+               eager_us: f64, status: &UnitStatus) -> Json {
+    let mut pairs = vec![
         ("job", Json::from(ji)),
         ("method", Json::from(job.method.label())),
         ("suite", Json::from(task.suite.label())),
         ("gpu", Json::from(job.gpu.name)),
         ("task", Json::from(task.id.clone())),
+        ("seed", Json::from(job.cfg.seed as f64)),
+        ("status", Json::from(status.label())),
         ("compiled", Json::from(o.compiled)),
         ("correct", Json::from(o.correct)),
         ("speedup", Json::from(o.speedup)),
         ("eager_us", Json::from(eager_us)),
-    ])
+    ];
+    if let Some(msg) = status.error() {
+        pairs.push(("error", Json::from(msg)));
+    }
+    Json::obj(pairs)
 }
 
 #[cfg(test)]
@@ -307,9 +668,11 @@ mod tests {
     fn matches_unbatched_evaluate() {
         let jobs = jobs_small();
         let session = Session::default();
-        let runner =
-            BatchRunner::new(BatchCfg { threads: 4, sink: None }, &session)
-                .unwrap();
+        let runner = BatchRunner::new(
+            BatchCfg { threads: 4, ..Default::default() },
+            &session,
+        )
+        .unwrap();
         let batched = runner.run(&jobs);
         for (job, got) in jobs.iter().zip(&batched) {
             let direct = evaluate(&job.method, &job.tasks, &job.gpu, &job.cfg);
@@ -329,7 +692,8 @@ mod tests {
         let n_units: usize = jobs.iter().map(|j| j.tasks.len()).sum();
         let session = Session::default();
         let runner = BatchRunner::new(
-            BatchCfg { threads: 3, sink: Some(path.clone()) },
+            BatchCfg { threads: 3, sink: Some(path.clone()),
+                       ..Default::default() },
             &session,
         )
         .unwrap();
@@ -343,6 +707,11 @@ mod tests {
             assert!(v.get("speedup").and_then(|j| j.as_f64()).is_some());
             assert!(v.get("eager_us").and_then(|j| j.as_f64())
                 .is_some_and(|e| e > 0.0));
+            // fault-tolerance identity fields: every clean record says so
+            assert_eq!(v.get("status").and_then(|j| j.as_str()), Some("ok"));
+            assert_eq!(v.get("seed").and_then(|j| j.as_f64()),
+                       Some(EvalCfg::default().seed as f64));
+            assert!(v.get("error").is_none());
         }
     }
 
@@ -353,7 +722,8 @@ mod tests {
         let jobs = jobs_small();
         let session = Session::default();
         let runner = BatchRunner::new(
-            BatchCfg { threads: 2, sink: Some(dir.join("cache_hits.jsonl")) },
+            BatchCfg { threads: 2, sink: Some(dir.join("cache_hits.jsonl")),
+                       ..Default::default() },
             &session,
         )
         .unwrap();
@@ -387,5 +757,110 @@ mod tests {
         assert_eq!(jobs[1].gpu.name, "A100");
         assert_eq!(jobs[2].gpu.name, "V100");
         assert_eq!(jobs[0].method.label(), jobs[2].method.label());
+    }
+
+    fn sample_record(task: &str) -> Json {
+        Json::obj(vec![
+            ("job", Json::from(0usize)),
+            ("method", Json::from("m")),
+            ("suite", Json::from("s")),
+            ("gpu", Json::from("g")),
+            ("task", Json::from(task)),
+            ("seed", Json::from(7.0)),
+            ("status", Json::from("ok")),
+            ("compiled", Json::from(true)),
+            ("correct", Json::from(true)),
+            ("speedup", Json::from(1.25)),
+            ("eager_us", Json::from(10.0)),
+        ])
+    }
+
+    #[test]
+    fn resume_scan_truncates_torn_tail_and_keys_records() {
+        let dir = std::env::temp_dir().join("qimeng_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume_scan.jsonl");
+        let torn = format!("{}\n{}\n{{\"method\":\"half",
+                           sample_record("t0"), sample_record("t1"));
+        std::fs::write(&path, &torn).unwrap();
+        let done = resume_scan(&path).unwrap();
+        assert_eq!(done.len(), 2);
+        assert!(done.contains_key(&sink_key("m", "s", "g", "t0", 7)));
+        let o = &done[&sink_key("m", "s", "g", "t1", 7)];
+        assert!(o.compiled && o.correct);
+        assert_eq!(o.speedup, 1.25);
+        // the torn tail is gone from disk
+        let healed = std::fs::read_to_string(&path).unwrap();
+        assert!(healed.ends_with('\n'));
+        assert_eq!(healed.lines().count(), 2);
+        // a second scan is a no-op
+        assert_eq!(resume_scan(&path).unwrap().len(), 2);
+        // a missing file is an empty resume, not an error
+        assert!(resume_scan(&dir.join("nope.jsonl")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn resume_scan_rejects_mid_file_corruption() {
+        let dir = std::env::temp_dir().join("qimeng_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume_corrupt.jsonl");
+        let text = format!("not json\n{}\n", sample_record("t0"));
+        std::fs::write(&path, &text).unwrap();
+        let err = resume_scan(&path).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn resume_requires_a_sink() {
+        let session = Session::default();
+        let err = BatchRunner::new(
+            BatchCfg { resume: true, ..Default::default() },
+            &session,
+        )
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--resume"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn resume_replays_prefix_and_appends_identical_bytes() {
+        let dir = std::env::temp_dir().join("qimeng_batch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume_bytes.jsonl");
+        let jobs = jobs_small();
+        // reference: one uninterrupted single-threaded sweep
+        let reference = {
+            let session = Session::default();
+            let runner = BatchRunner::new(
+                BatchCfg { threads: 1, sink: Some(path.clone()),
+                           ..Default::default() },
+                &session,
+            )
+            .unwrap();
+            let results = runner.run(&jobs);
+            (std::fs::read(&path).unwrap(), results)
+        };
+        // simulate a crash: keep 5 records plus a torn half-line
+        let text = String::from_utf8(reference.0.clone()).unwrap();
+        let prefix: String =
+            text.lines().take(5).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&path, format!("{prefix}{{\"job\":0,\"tor")).unwrap();
+        // resume with a fresh session: skipped units replay from the
+        // sink, the rest re-run — same bytes, same metrics
+        let session = Session::default();
+        let runner = BatchRunner::new(
+            BatchCfg { threads: 1, sink: Some(path.clone()), resume: true,
+                       ..Default::default() },
+            &session,
+        )
+        .unwrap();
+        let resumed = runner.run(&jobs);
+        assert_eq!(std::fs::read(&path).unwrap(), reference.0,
+                   "resumed sink must be byte-identical to uninterrupted");
+        for (a, b) in reference.1.iter().zip(&resumed) {
+            assert_eq!(a.metrics, b.metrics,
+                       "resumed metrics diverged for {}", a.method);
+        }
     }
 }

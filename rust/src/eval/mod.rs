@@ -8,7 +8,9 @@ mod methods;
 mod harness;
 mod batch;
 
-pub use batch::{roster_sweep, BatchCfg, BatchJob, BatchRunner, JsonlSink};
+pub use batch::{
+    roster_sweep, unit_fault_key, BatchCfg, BatchJob, BatchRunner, JsonlSink,
+};
 pub use harness::{evaluate, evaluate_in, evaluate_task,
                   greedy_best_action_excluding, EvalCfg, SuiteResult,
                   TaskResult};

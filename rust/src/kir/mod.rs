@@ -21,6 +21,6 @@ pub use lower::{lower_checked, lower_naive};
 pub use printer::{render, TargetLang};
 pub use regions::{analyze_regions, Region, RegionKind, MAX_REGIONS};
 pub use verify::{
-    has_errors, is_statically_legal, verify, Diagnostic, GateStats, Rule,
-    Severity,
+    has_errors, is_intrinsically_legal, is_statically_legal, verify,
+    verify_intrinsic, Diagnostic, GateStats, Rule, Severity,
 };

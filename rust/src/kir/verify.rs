@@ -195,6 +195,101 @@ pub fn verify(
     diags
 }
 
+/// Graph-free subset of [`verify`]: the invariants checkable from the
+/// `Program` alone, with no graph, shape table, or GPU spec in hand.
+/// This is the screen the memo-store warm start applies to programs
+/// deserialized from disk — cached edges are keyed by opaque context
+/// hashes, so the full `(Program, Graph, GpuSpec)` triple is not
+/// reconstructible there. Every check below mirrors an Error-severity
+/// rule of the full verifier (or a `Program::validate` invariant), so a
+/// program this function rejects could never have been produced by the
+/// transform menu: it is stale or corrupt store content, and dropping
+/// it forces a clean recomputation instead of replaying damage.
+pub fn verify_intrinsic(p: &Program) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if p.compile_broken {
+        diags.push(Diagnostic {
+            rule: Rule::Structure,
+            kernel: None,
+            severity: Severity::Error,
+            msg: "program is compile-broken (last micro-coding step failed)"
+                .into(),
+        });
+    }
+    for (ki, k) in p.kernels.iter().enumerate() {
+        let mut push = |rule, msg| {
+            diags.push(Diagnostic {
+                rule,
+                kernel: Some(ki),
+                severity: Severity::Error,
+                msg,
+            });
+        };
+        if k.nodes.is_empty() {
+            push(Rule::Structure, "kernel is empty".into());
+        }
+        if k.nodes.windows(2).any(|w| w[0] >= w[1]) {
+            push(Rule::Structure, "kernel nodes not topo-sorted".into());
+        }
+        let sched = &k.schedule;
+        if let Some((m, n, kk)) = sched.block_tile {
+            if m == 0 || n == 0 || kk == 0 {
+                push(
+                    Rule::TileZero,
+                    format!("block tile {m}x{n}x{kk} has a zero dimension"),
+                );
+            }
+        }
+        let w = sched.vector_width;
+        if !matches!(w, 1 | 2 | 4 | 8) {
+            push(
+                Rule::VectorWidth,
+                format!("vector width {w} is not one of 1/2/4/8"),
+            );
+        } else if w > 1 && sched.loop_order == LoopOrder::Naive {
+            push(
+                Rule::VectorOrder,
+                format!("vector width {w} on a naive loop order"),
+            );
+        }
+        let depth = sched.pipeline_depth;
+        if depth == 0 || depth > 4 {
+            push(
+                Rule::PipelineStaging,
+                format!("pipeline depth {depth} outside 1..=4"),
+            );
+        } else if depth > 1 && sched.block_tile.is_none() {
+            push(
+                Rule::PipelineStaging,
+                "pipelined without a block tile (nothing to stage)".into(),
+            );
+        }
+        if let Some((rm, rn)) = sched.reg_tile {
+            if rm == 0 || rn == 0 {
+                push(
+                    Rule::RegBudget,
+                    format!("register tile {rm}x{rn} has a zero dimension"),
+                );
+            } else if rm * rn + rm + rn + REG_SCRATCH > MAX_REGS_PER_THREAD {
+                push(
+                    Rule::RegBudget,
+                    format!(
+                        "register tile {rm}x{rn} is over the \
+                         {MAX_REGS_PER_THREAD}-register limit"
+                    ),
+                );
+            }
+        }
+    }
+    diags
+}
+
+/// True iff [`verify_intrinsic`] reports no Error-severity diagnostic —
+/// the predicate the memo-store warm start applies to cached programs.
+pub fn is_intrinsically_legal(p: &Program) -> bool {
+    !has_errors(&verify_intrinsic(p))
+}
+
 /// True iff `verify` reports no Error-severity diagnostic. This is the
 /// predicate the pre-verif gate in `OptimEnv::transition` applies.
 pub fn is_statically_legal(
@@ -767,6 +862,60 @@ mod tests {
         p2.kernels[0].schedule.block_tile = Some((128, 128, 32));
         let diags = verify(&p2, &g, &s, &crate::gpusim::GpuSpec::a100());
         assert!(!rules(&diags).contains(&Rule::RaceSplitReduction));
+    }
+
+    /// The warm-start screen must be a *subset* of the full verifier:
+    /// any program the full verifier accepts (against its real graph,
+    /// shapes and spec) must pass the graph-free intrinsic check too —
+    /// otherwise warm start would drop legitimately cached programs.
+    #[test]
+    fn intrinsic_is_a_subset_of_full_verify() {
+        let (g, s) = gemm_relu();
+        let spec = crate::gpusim::GpuSpec::a100();
+        let mut variants = vec![lower_naive(&g)];
+        let mut tiled = lower_naive(&g);
+        tiled.kernels[0].schedule.block_tile = Some((64, 64, 32));
+        tiled.kernels[0].schedule.reg_tile = Some((8, 8));
+        tiled.kernels[0].schedule.pipeline_depth = 2;
+        tiled.kernels[0].schedule.loop_order = crate::kir::LoopOrder::Blocked;
+        tiled.kernels[0].schedule.vector_width = 4;
+        variants.push(tiled);
+        for p in &variants {
+            assert!(is_statically_legal(p, &g, &s, &spec));
+            assert!(is_intrinsically_legal(p), "{:?}", verify_intrinsic(p));
+        }
+    }
+
+    #[test]
+    fn intrinsic_rejects_structural_and_schedule_damage() {
+        let (g, _) = gemm_relu();
+        let base = lower_naive(&g);
+        assert!(is_intrinsically_legal(&base));
+
+        let mut p = base.clone();
+        p.compile_broken = true;
+        assert!(!is_intrinsically_legal(&p));
+
+        let mut p = base.clone();
+        p.kernels[0].schedule.vector_width = 4; // naive order
+        assert!(!is_intrinsically_legal(&p));
+
+        let mut p = base.clone();
+        p.kernels[0].schedule.block_tile = Some((0, 64, 32));
+        assert!(!is_intrinsically_legal(&p));
+
+        let mut p = base.clone();
+        p.kernels[0].schedule.block_tile = Some((64, 64, 32));
+        p.kernels[0].schedule.reg_tile = Some((16, 16));
+        assert!(!is_intrinsically_legal(&p));
+
+        let mut p = base.clone();
+        p.kernels[0].schedule.pipeline_depth = 5;
+        assert!(!is_intrinsically_legal(&p));
+
+        let mut p = base;
+        p.kernels[0].nodes.clear();
+        assert!(!is_intrinsically_legal(&p));
     }
 
     #[test]

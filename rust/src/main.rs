@@ -40,6 +40,7 @@ use qimeng_mtmc::tasks::{
 };
 use qimeng_mtmc::train::{train_ppo, PpoCfg};
 use qimeng_mtmc::util::cli::Args;
+use qimeng_mtmc::util::faults::FaultPlan;
 use qimeng_mtmc::util::json::Json;
 
 fn main() -> Result<()> {
@@ -77,7 +78,8 @@ COMMANDS:
   optimize --task kb2_000_gemm_bias_act [--gpu A100] [--show-code]
            [--memo-store F] [--stats-json F]
   eval --suite kb2 [--gpu A100] [--method mtmc|greedy|<profile>] [--limit N]
-       [--threads N] [--jsonl out.jsonl] [--memo-store F] [--stats-json F]
+       [--threads N] [--jsonl out.jsonl] [--resume] [--max-retries N]
+       [--inject-faults SEED] [--memo-store F] [--stats-json F]
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              (runs through the BatchRunner; pricing,
                               program analysis and transitions go through
@@ -100,7 +102,8 @@ COMMANDS:
                               skipped counters land in --stats-json; the
                               QIMENG_MEMO_CAPACITY env var bounds the
                               memo's entry count)
-  table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--memo-store F]
+  table 3|4|6 [--limit N] [--threads N] [--jsonl F] [--resume]
+       [--max-retries N] [--inject-faults SEED] [--memo-store F]
        [--stats-json F]
        [--no-cost-cache] [--no-analysis-cache] [--no-edge-memo]
                              batched table sweep
@@ -124,6 +127,22 @@ COMMANDS:
   verify every candidate schedule before spending correctness trials on
   it; --no-static-gate disables that pre-verif gate, and the checked/
   rejected counters land in the stderr report and --stats-json.
+
+  Fault tolerance (eval/table, see README \"Fault tolerance and resume\"):
+  every (method, suite, gpu, task) unit runs isolated — a panicking unit
+  becomes a status:\"panicked\" JSONL record instead of killing the sweep.
+  --max-retries N   retry budget for transient unit/sink failures
+                    (default 2); retried/recovered/exhausted counters
+                    land in --stats-json under \"faults\"
+  --inject-faults SEED  arm the deterministic fault plan (or set
+                    QIMENG_FAULT_SEED); QIMENG_FAULT_KILL_AFTER=N aborts
+                    after N sink writes, QIMENG_FAULT_BURST overrides
+                    the per-fault burst (default 2 <= max-retries, so an
+                    injected sweep converges to fault-free bytes)
+  --resume          scan the --jsonl sink, truncate a torn final line,
+                    skip already-recorded units and append the rest;
+                    at --threads 1 the resumed sink is byte-identical
+                    to an uninterrupted run
 ";
 
 fn gpu(args: &Args) -> Result<GpuSpec> {
@@ -146,9 +165,11 @@ fn suite_tasks(name: &str) -> Result<Vec<Task>> {
 
 /// Build the run's [`Session`] from the shared cache/persistence flags:
 /// the `--no-*` escape hatches disable individual memo tiers (and the
-/// static pre-verif gate), and `--memo-store <path>` adds the disk
+/// static pre-verif gate), `--memo-store <path>` adds the disk
 /// persistence tier (ignored under `--no-edge-memo`, which leaves
-/// nothing to persist).
+/// nothing to persist), and `--inject-faults <seed>` (or
+/// `QIMENG_FAULT_SEED`) arms the deterministic fault plan the sweep
+/// engine's retry loop and the chaos CI job exercise.
 fn session_from_args(args: &Args) -> Session {
     Session::builder()
         .cost_cache(!args.has("no-cost-cache"))
@@ -156,6 +177,9 @@ fn session_from_args(args: &Args) -> Session {
         .edge_memo(!args.has("no-edge-memo"))
         .static_gate(!args.has("no-static-gate"))
         .memo_store(args.get("memo-store").map(std::path::PathBuf::from))
+        .faults(FaultPlan::from_env_or(
+            args.get("inject-faults").and_then(|v| v.parse().ok()),
+        ))
         .build()
 }
 
@@ -185,6 +209,8 @@ fn batch_runner<'s>(args: &Args, session: &'s Session)
                 qimeng_mtmc::util::parallel::default_threads(),
             ),
             sink: args.get("jsonl").map(std::path::PathBuf::from),
+            resume: args.has("resume"),
+            max_retries: args.usize_or("max-retries", 2),
         },
         session,
     )
@@ -681,11 +707,23 @@ fn cmd_lint(args: &Args) -> Result<()> {
                 ])
             })
             .collect();
+        // per-rule diagnostic counts: which verifier rules actually fire
+        // over this corpus, without consumers re-tallying the list
+        let mut rules: std::collections::BTreeMap<String, Json> =
+            Default::default();
+        for (_, d) in &findings {
+            let n = rules
+                .get(d.rule.name())
+                .and_then(Json::as_usize)
+                .unwrap_or(0);
+            rules.insert(d.rule.name().to_string(), Json::from(n + 1));
+        }
         let out = Json::obj(vec![
             ("gpu", Json::from(spec.name.as_str())),
             ("tasks", Json::from(tasks.len())),
             ("errors", Json::from(errors)),
             ("warnings", Json::from(warnings)),
+            ("rules", Json::Obj(rules)),
             ("diagnostics", Json::Arr(list)),
         ]);
         println!("{out}");

@@ -11,7 +11,8 @@ use std::collections::BTreeMap;
 /// Boolean switches that take no value. Every `--no-*` flag is a switch
 /// implicitly; anything else boolean must be listed here, or a following
 /// bare token will be eaten as its value.
-const KNOWN_SWITCHES: &[&str] = &["verbose", "show-code", "json", "fix"];
+const KNOWN_SWITCHES: &[&str] =
+    &["verbose", "show-code", "json", "fix", "resume"];
 
 fn is_switch(name: &str) -> bool {
     name.starts_with("no-") || KNOWN_SWITCHES.contains(&name)
@@ -154,6 +155,17 @@ mod tests {
         assert!(a.has("fix"));
         assert!(a.has("json"));
         assert_eq!(a.positional, vec!["fsck", "data/edges.store"]);
+    }
+
+    /// `--resume` is boolean: `eval --resume out.jsonl` must keep both
+    /// the switch and the positional (the sink path, typically).
+    #[test]
+    fn resume_is_a_switch() {
+        let a = parse("eval --resume out.jsonl --max-retries 3");
+        assert!(a.has("resume"));
+        assert_eq!(a.positional, vec!["out.jsonl"]);
+        assert_eq!(a.usize_or("max-retries", 2), 3);
+        assert!(a.get("resume").is_none());
     }
 
     #[test]

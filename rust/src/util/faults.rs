@@ -1,0 +1,496 @@
+//! Deterministic fault injection for the sweep engine.
+//!
+//! A [`FaultPlan`] is a pure function from (site, key, attempt) to
+//! "does this operation fail here?", seeded once per run
+//! (`--inject-faults <seed>` / `QIMENG_FAULT_SEED`). Injection is off by
+//! default — every site is behind an `Option<&FaultPlan>` check, so the
+//! disabled path costs one branch — and when it is on, the decisions
+//! depend only on stable identities (edge seed, segment index, record
+//! bytes, unit key), never on thread interleaving or call order. Two runs
+//! with the same plan inject the same faults at the same places.
+//!
+//! Injected failures are *classed*: transient faults (verif-trial flake,
+//! segment I/O, sink write) unwind as a [`TransientFault`] payload via
+//! [`std::panic::panic_any`] or surface as synthesized `io::Error`s, and
+//! the unit retry loop in [`crate::eval::BatchRunner`] recognises the
+//! class and retries with bounded backoff. Because an injected fault
+//! fires on at most [`FaultPlan::burst`] consecutive attempts and the
+//! retry budget (`--max-retries`, default 2) is at least that large, a
+//! fault-injected sweep converges to the *same bytes* as a fault-free
+//! one — the invariant the CI chaos job asserts end to end.
+//!
+//! Retry/recovery *counters* ([`FaultStats`]) are schedule-dependent —
+//! with a shared edge memo, which worker pays for a flaky transition
+//! varies with thread interleaving — but sweep *outcomes* are not.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Environment fallback for `--inject-faults <seed>`.
+pub const FAULT_SEED_ENV: &str = "QIMENG_FAULT_SEED";
+/// Abort the process after this many successful sink writes (the CI
+/// chaos job's deterministic "kill partway" lever).
+pub const FAULT_KILL_ENV: &str = "QIMENG_FAULT_KILL_AFTER";
+/// Override the per-fault consecutive-failure burst (default 2).
+pub const FAULT_BURST_ENV: &str = "QIMENG_FAULT_BURST";
+
+/// Where a fault can be injected. `name()` is stable output — the
+/// `--stats-json` `faults.injected` object and tests key on it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A spurious dynamic-verification failure inside
+    /// `OptimEnv::transition`, keyed by the edge seed.
+    VerifFlake,
+    /// A memo-store segment read error at warm start, keyed by segment
+    /// index.
+    SegmentRead,
+    /// A memo-store segment write error at flush, keyed by segment
+    /// index.
+    SegmentWrite,
+    /// A JSONL sink write error, keyed by the record bytes.
+    SinkWrite,
+    /// An explicit non-transient unit panic (`panic_unit`), used by the
+    /// isolation tests; never fired by the seeded rate gate.
+    UnitPanic,
+}
+
+pub const SITE_COUNT: usize = 5;
+
+impl FaultSite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::VerifFlake => "verif-flake",
+            FaultSite::SegmentRead => "segment-read",
+            FaultSite::SegmentWrite => "segment-write",
+            FaultSite::SinkWrite => "sink-write",
+            FaultSite::UnitPanic => "unit-panic",
+        }
+    }
+
+    pub fn all() -> [FaultSite; SITE_COUNT] {
+        [
+            FaultSite::VerifFlake,
+            FaultSite::SegmentRead,
+            FaultSite::SegmentWrite,
+            FaultSite::SinkWrite,
+            FaultSite::UnitPanic,
+        ]
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            FaultSite::VerifFlake => 0,
+            FaultSite::SegmentRead => 1,
+            FaultSite::SegmentWrite => 2,
+            FaultSite::SinkWrite => 3,
+            FaultSite::UnitPanic => 4,
+        }
+    }
+
+    /// One in `rate()` keys is fault-gated (0 = never rate-gated).
+    fn rate(&self) -> u64 {
+        match self {
+            FaultSite::VerifFlake => 16,
+            FaultSite::SegmentRead => 4,
+            FaultSite::SegmentWrite => 4,
+            FaultSite::SinkWrite => 8,
+            FaultSite::UnitPanic => 0,
+        }
+    }
+}
+
+/// The typed panic payload of an injected transient fault. Riding the
+/// unwind channel means deep sites (the env stepper, three layers below
+/// the batch loop) need no `Result` plumbing: the unit retry loop
+/// downcasts the payload with [`classify`] and retries.
+#[derive(Clone, Copy, Debug)]
+pub struct TransientFault {
+    pub site: FaultSite,
+}
+
+fn mix(a: u64, b: u64) -> u64 {
+    let mut x = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+thread_local! {
+    /// Which retry attempt of the current unit this worker thread is
+    /// executing. Set by the batch retry loop so deep injection sites
+    /// (the stepper) can stop firing once the attempt index reaches the
+    /// fault's burst length.
+    static ATTEMPT: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Record the current unit attempt for this worker thread (see
+/// [`FaultPlan::raise_if`]).
+pub fn set_unit_attempt(attempt: u32) {
+    ATTEMPT.with(|c| c.set(attempt));
+}
+
+pub fn unit_attempt() -> u32 {
+    ATTEMPT.with(|c| c.get())
+}
+
+/// A seeded, deterministic fault schedule. See the module docs for the
+/// decision function and the burst-vs-retry-budget invariant.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    burst: u32,
+    panic_unit: Option<u64>,
+    kill_after: Option<u64>,
+    injected: [AtomicUsize; SITE_COUNT],
+    sink_writes: AtomicUsize,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            burst: 2,
+            panic_unit: None,
+            kill_after: None,
+            injected: [(); SITE_COUNT].map(|_| AtomicUsize::new(0)),
+            sink_writes: AtomicUsize::new(0),
+        }
+    }
+
+    /// Build a plan from an optional CLI seed, falling back to
+    /// `QIMENG_FAULT_SEED`, and picking up the kill/burst env knobs.
+    /// `None` (no seed anywhere) means injection stays off.
+    pub fn from_env_or(cli_seed: Option<u64>) -> Option<FaultPlan> {
+        let seed = cli_seed.or_else(|| {
+            std::env::var(FAULT_SEED_ENV).ok()?.parse().ok()
+        })?;
+        let mut plan = FaultPlan::new(seed);
+        if let Some(k) =
+            std::env::var(FAULT_KILL_ENV).ok().and_then(|v| v.parse().ok())
+        {
+            plan.kill_after = Some(k);
+        }
+        if let Some(b) =
+            std::env::var(FAULT_BURST_ENV).ok().and_then(|v| v.parse().ok())
+        {
+            plan.burst = b;
+        }
+        Some(plan)
+    }
+
+    /// Maximum consecutive attempts one fault keeps failing. Keep this
+    /// `<= max_retries` or injected faults become unit losses.
+    pub fn burst(&self) -> u32 {
+        self.burst
+    }
+
+    pub fn with_burst(mut self, burst: u32) -> FaultPlan {
+        self.burst = burst.max(1);
+        self
+    }
+
+    /// Arm a hard (non-transient) panic for exactly one unit key (see
+    /// [`crate::eval::unit_fault_key`]).
+    pub fn with_panic_unit(mut self, unit_key: u64) -> FaultPlan {
+        self.panic_unit = Some(unit_key);
+        self
+    }
+
+    pub fn with_kill_after(mut self, writes: u64) -> FaultPlan {
+        self.kill_after = Some(writes);
+        self
+    }
+
+    /// Does this fault fire at `(site, key)` on retry `attempt`? Gated
+    /// keys fail their first `fail_count` attempts (`1..=burst`), then
+    /// recover — so any retry budget `>= burst` clears every injected
+    /// transient fault. Counts the injection when it fires.
+    pub fn fires_at(&self, site: FaultSite, key: u64, attempt: u32) -> bool {
+        let rate = site.rate();
+        if rate == 0 {
+            return false;
+        }
+        let h = mix(mix(self.seed, site.index() as u64), key);
+        if h % rate != 0 {
+            return false;
+        }
+        let fail_count = 1 + ((h >> 32) % self.burst.max(1) as u64) as u32;
+        let fires = attempt < fail_count;
+        if fires {
+            self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        fires
+    }
+
+    /// Unwind with a [`TransientFault`] payload if `(site, key)` is
+    /// fault-gated on this thread's current unit attempt. The call sites
+    /// are deep inside the env; the batch retry loop catches and
+    /// classifies the payload.
+    pub fn raise_if(&self, site: FaultSite, key: u64) {
+        if self.fires_at(site, key, unit_attempt()) {
+            std::panic::panic_any(TransientFault { site });
+        }
+    }
+
+    /// Panic (non-transiently) if `unit_key` is the armed panic unit.
+    pub fn raise_unit_panic_if(&self, unit_key: u64) {
+        if self.panic_unit == Some(unit_key) {
+            self.injected[FaultSite::UnitPanic.index()]
+                .fetch_add(1, Ordering::Relaxed);
+            panic!("injected unit panic (fault plan)");
+        }
+    }
+
+    /// Count one successful sink write; abort the process once the
+    /// `kill_after` budget is reached. Per-record flushing in the sink
+    /// makes this a *deterministic* mid-run kill: the file holds exactly
+    /// `kill_after` complete records when the process dies.
+    pub fn note_sink_write(&self) {
+        let n = self.sink_writes.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.kill_after == Some(n as u64) {
+            eprintln!("fault plan: aborting after {n} sink writes");
+            std::process::abort();
+        }
+    }
+
+    /// How many times `site` injected a fault so far.
+    pub fn injected(&self, site: FaultSite) -> usize {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn injected_total(&self) -> usize {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Downcast a caught panic payload to its fault class. `Some(site)`
+/// means an injected transient fault (retry it); `None` means a real
+/// panic (isolate and report it).
+pub fn classify(payload: &(dyn std::any::Any + Send)) -> Option<FaultSite> {
+    payload.downcast_ref::<TransientFault>().map(|t| t.site)
+}
+
+/// A stable human-readable message for a caught panic payload, for the
+/// sink record's `error` field.
+pub fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(t) = payload.downcast_ref::<TransientFault>() {
+        return format!("injected transient fault at {}", t.site.name());
+    }
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        return (*s).to_string();
+    }
+    if let Some(s) = payload.downcast_ref::<String>() {
+        return s.clone();
+    }
+    "opaque panic payload".to_string()
+}
+
+/// Deterministic jittered backoff before retry `attempt` of a unit:
+/// exponential base (5, 10, 20, ... ms) plus a 0-4 ms jitter derived
+/// from the unit seed — never from wall clock or thread identity.
+pub fn backoff_ms(unit_seed: u64, attempt: u32) -> u64 {
+    let base = 5u64 << attempt.min(6);
+    base + mix(unit_seed, attempt as u64 + 1) % 5
+}
+
+/// Session-owned fault-tolerance counters: what the retry loop and the
+/// degradation paths actually did. Always present (all-zero on a clean
+/// run); surfaced by the `StatsRegistry` on stderr and in
+/// `--stats-json` as the `faults` object.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    panicked: AtomicUsize,
+    retried: AtomicUsize,
+    recovered: AtomicUsize,
+    exhausted: AtomicUsize,
+    sink_retries: AtomicUsize,
+}
+
+impl FaultStats {
+    pub fn new() -> FaultStats {
+        FaultStats::default()
+    }
+
+    /// A unit died with a non-transient panic and was isolated.
+    pub fn note_panicked(&self) {
+        self.panicked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A unit failed transiently and is being retried.
+    pub fn note_retried(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A retried unit completed cleanly.
+    pub fn note_recovered(&self) {
+        self.recovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A unit kept failing transiently past the retry budget.
+    pub fn note_exhausted(&self) {
+        self.exhausted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One sink write attempt failed and was retried in place.
+    pub fn note_sink_retry(&self) {
+        self.sink_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn panicked(&self) -> usize {
+        self.panicked.load(Ordering::Relaxed)
+    }
+    pub fn retried(&self) -> usize {
+        self.retried.load(Ordering::Relaxed)
+    }
+    pub fn recovered(&self) -> usize {
+        self.recovered.load(Ordering::Relaxed)
+    }
+    pub fn exhausted(&self) -> usize {
+        self.exhausted.load(Ordering::Relaxed)
+    }
+    pub fn sink_retries(&self) -> usize {
+        self.sink_retries.load(Ordering::Relaxed)
+    }
+
+    /// Anything nonzero? (Gates the stderr line.)
+    pub fn any(&self) -> bool {
+        self.panicked() + self.retried() + self.recovered()
+            + self.exhausted() + self.sink_retries()
+            > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_key_scoped() {
+        let a = FaultPlan::new(0xFA17);
+        let b = FaultPlan::new(0xFA17);
+        let c = FaultPlan::new(0xFA18);
+        let mut diverged = false;
+        for key in 0..512u64 {
+            let fa = a.fires_at(FaultSite::VerifFlake, key, 0);
+            assert_eq!(fa, b.fires_at(FaultSite::VerifFlake, key, 0));
+            if fa != c.fires_at(FaultSite::VerifFlake, key, 0) {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "different seeds must schedule different faults");
+    }
+
+    #[test]
+    fn rate_gate_fires_at_roughly_its_rate() {
+        let plan = FaultPlan::new(7);
+        let n = 4096u64;
+        let fired = (0..n)
+            .filter(|&k| plan.fires_at(FaultSite::SinkWrite, k, 0))
+            .count();
+        // 1/8 nominal; allow a generous band
+        assert!(fired > 300 && fired < 800, "fired {fired}/{n}");
+        assert_eq!(plan.injected(FaultSite::SinkWrite), fired);
+    }
+
+    #[test]
+    fn every_gated_fault_recovers_within_burst_attempts() {
+        let plan = FaultPlan::new(99).with_burst(2);
+        for key in 0..2048u64 {
+            for site in [FaultSite::VerifFlake, FaultSite::SinkWrite] {
+                assert!(
+                    !plan.fires_at(site, key, plan.burst()),
+                    "site {} key {key} still fails at attempt {}",
+                    site.name(),
+                    plan.burst()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fail_counts_are_monotone_in_attempt() {
+        let plan = FaultPlan::new(3);
+        for key in 0..1024u64 {
+            let mut prev = true;
+            for attempt in 0..4 {
+                let now = plan.fires_at(FaultSite::VerifFlake, key, attempt);
+                assert!(prev || !now, "fault resumed firing after recovery");
+                prev = now;
+            }
+        }
+    }
+
+    #[test]
+    fn classify_and_messages() {
+        let caught = std::panic::catch_unwind(|| {
+            std::panic::panic_any(TransientFault {
+                site: FaultSite::VerifFlake,
+            })
+        })
+        .unwrap_err();
+        assert_eq!(classify(caught.as_ref()), Some(FaultSite::VerifFlake));
+        assert_eq!(
+            panic_msg(caught.as_ref()),
+            "injected transient fault at verif-flake"
+        );
+
+        let caught =
+            std::panic::catch_unwind(|| panic!("plain panic")).unwrap_err();
+        assert_eq!(classify(caught.as_ref()), None);
+        assert_eq!(panic_msg(caught.as_ref()), "plain panic");
+    }
+
+    #[test]
+    fn panic_unit_is_exact_and_non_transient() {
+        let plan = FaultPlan::new(0).with_panic_unit(42);
+        plan.raise_unit_panic_if(41); // no-op
+        let caught =
+            std::panic::catch_unwind(|| plan.raise_unit_panic_if(42))
+                .unwrap_err();
+        assert_eq!(classify(caught.as_ref()), None);
+        assert!(panic_msg(caught.as_ref()).contains("injected unit panic"));
+        assert_eq!(plan.injected(FaultSite::UnitPanic), 1);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        for attempt in 0..3 {
+            assert_eq!(
+                backoff_ms(0xAB, attempt),
+                backoff_ms(0xAB, attempt),
+                "jitter must derive from the seed"
+            );
+            let ms = backoff_ms(0xAB, attempt);
+            let base = 5u64 << attempt;
+            assert!((base..base + 5).contains(&ms), "attempt {attempt}: {ms}");
+        }
+    }
+
+    #[test]
+    fn unit_attempt_is_thread_local() {
+        set_unit_attempt(2);
+        assert_eq!(unit_attempt(), 2);
+        let other = std::thread::spawn(unit_attempt).join().unwrap();
+        assert_eq!(other, 0, "attempt state must not leak across threads");
+        set_unit_attempt(0);
+    }
+
+    #[test]
+    fn fault_stats_counters() {
+        let fs = FaultStats::new();
+        assert!(!fs.any());
+        fs.note_retried();
+        fs.note_recovered();
+        fs.note_panicked();
+        fs.note_exhausted();
+        fs.note_sink_retry();
+        assert_eq!(
+            (fs.retried(), fs.recovered(), fs.panicked(), fs.exhausted(),
+             fs.sink_retries()),
+            (1, 1, 1, 1, 1)
+        );
+        assert!(fs.any());
+    }
+}

@@ -7,5 +7,6 @@ pub mod json;
 pub mod cli;
 pub mod stats;
 pub mod parallel;
+pub mod faults;
 
 pub use rng::Rng;

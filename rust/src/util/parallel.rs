@@ -2,32 +2,72 @@
 //! coordinator's concurrency needs are data-parallel sweeps, which scoped
 //! threads express directly).
 
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// What one panicking item yields from [`par_map_catch`]: the caught
+/// panic payload, ready for `faults::classify`.
+pub type CaughtPanic = Box<dyn Any + Send>;
+
 /// Apply `f` to every element of `items` across up to `threads` workers,
 /// preserving order. `f` must be `Sync` (called from many threads).
 ///
-/// Work distribution is a sharded queue: the output vector is split into
-/// many small chunks (`~8` per worker) and workers pull whole chunks from
-/// a shared iterator. The lock is held only to *take* the next chunk,
-/// never while computing, and every result is written through the
-/// worker's exclusively-owned `&mut` chunk — so result collection scales
-/// with worker count. (The previous implementation took a global `Mutex`
-/// around the whole slots vector for every single item, serializing all
-/// writers on the hot path.)
+/// A panic in `f` propagates (via `resume_unwind`) after all workers
+/// finish their queues — use [`par_map_catch`] when a panicking item
+/// must be isolated instead of aborting the sweep.
 pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    let mut first_panic = None;
+    let out: Vec<R> = par_map_catch(items, threads, f)
+        .into_iter()
+        .filter_map(|r| match r {
+            Ok(v) => Some(v),
+            Err(p) => {
+                first_panic.get_or_insert(p);
+                None
+            }
+        })
+        .collect();
+    if let Some(p) = first_panic {
+        std::panic::resume_unwind(p);
+    }
+    out
+}
+
+/// [`par_map`] with per-item panic isolation: every element is wrapped
+/// in `catch_unwind`, so one panicking item becomes an `Err(payload)`
+/// in its output slot instead of poisoning the pool — sibling items
+/// complete normally and keep their exact no-fault results. The chunk
+/// queue lock is also taken poison-tolerantly, so even a panic in the
+/// harness itself (outside the per-item guard) cannot cascade into
+/// every other worker.
+pub fn par_map_catch<T, R, F>(
+    items: &[T],
+    threads: usize,
+    f: F,
+) -> Vec<Result<R, CaughtPanic>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let call = |i: usize, t: &T| catch_unwind(AssertUnwindSafe(|| f(i, t)));
     let threads = threads.max(1).min(items.len().max(1));
     if threads <= 1 || items.len() <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        return items.iter().enumerate().map(|(i, t)| call(i, t)).collect();
     }
-    let mut slots: Vec<Option<R>> = Vec::new();
+    let mut slots: Vec<Option<Result<R, CaughtPanic>>> = Vec::new();
     slots.resize_with(items.len(), || None);
     // Small chunks keep dynamic load balance for heterogeneous items
     // (an L3 network prices ~30x slower than an L1 single op) while the
-    // per-chunk handoff keeps queue contention negligible.
+    // per-chunk handoff keeps queue contention negligible. The lock is
+    // held only to *take* the next chunk, never while computing, and
+    // every result is written through the worker's exclusively-owned
+    // `&mut` chunk — so result collection scales with worker count.
     let chunk = (items.len() / (threads * 8)).max(1);
     let queue = std::sync::Mutex::new(slots.chunks_mut(chunk).enumerate());
     std::thread::scope(|scope| {
@@ -36,7 +76,8 @@ where
                 // ChunksMut yields slices borrowing `slots`, not the
                 // guard, so the chunk outlives the brief lock.
                 let (ci, out) = {
-                    let mut q = queue.lock().unwrap();
+                    let mut q =
+                        queue.lock().unwrap_or_else(|p| p.into_inner());
                     match q.next() {
                         Some(next) => next,
                         None => break,
@@ -45,7 +86,7 @@ where
                 let base = ci * chunk;
                 for (off, slot) in out.iter_mut().enumerate() {
                     let i = base + off;
-                    *slot = Some(f(i, &items[i]));
+                    *slot = Some(call(i, &items[i]));
                 }
             });
         }
@@ -110,5 +151,49 @@ mod tests {
             let out = par_map(&items, 4, |i, &x| i + x);
             assert_eq!(out, (0..len).map(|i| 2 * i).collect::<Vec<_>>());
         }
+    }
+
+    /// The isolation contract: one panicking item lands in its own slot
+    /// as `Err`, every sibling keeps its exact value, at any thread
+    /// count (including the sequential path).
+    #[test]
+    fn catch_isolates_a_panicking_item() {
+        for threads in [1usize, 4, 8] {
+            let items: Vec<u32> = (0..100).collect();
+            let out = par_map_catch(&items, threads, |_, &x| {
+                if x == 37 {
+                    panic!("boom {x}");
+                }
+                x * 3
+            });
+            assert_eq!(out.len(), 100);
+            for (i, r) in out.into_iter().enumerate() {
+                match r {
+                    Ok(v) => {
+                        assert_ne!(i, 37);
+                        assert_eq!(v, i as u32 * 3);
+                    }
+                    Err(p) => {
+                        assert_eq!(i, 37);
+                        assert_eq!(
+                            p.downcast_ref::<String>().map(String::as_str),
+                            Some("boom 37")
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn plain_par_map_still_propagates_panics() {
+        let items: Vec<u32> = (0..10).collect();
+        par_map(&items, 4, |_, &x| {
+            if x == 5 {
+                panic!("boom");
+            }
+            x
+        });
     }
 }

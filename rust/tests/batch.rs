@@ -64,13 +64,19 @@ fn batch_runner_threads_1_vs_8_byte_identical_metrics() {
         vec![job]
     };
     let s1 = Session::default();
-    let r1 = BatchRunner::new(BatchCfg { threads: 1, sink: None }, &s1)
-        .unwrap()
-        .run(&jobs(0xFEED));
+    let r1 = BatchRunner::new(
+        BatchCfg { threads: 1, ..Default::default() },
+        &s1,
+    )
+    .unwrap()
+    .run(&jobs(0xFEED));
     let s8 = Session::default();
-    let r8 = BatchRunner::new(BatchCfg { threads: 8, sink: None }, &s8)
-        .unwrap()
-        .run(&jobs(0xFEED));
+    let r8 = BatchRunner::new(
+        BatchCfg { threads: 8, ..Default::default() },
+        &s8,
+    )
+    .unwrap()
+    .run(&jobs(0xFEED));
     assert_eq!(r1[0].metrics, r8[0].metrics);
     assert_eq!(format!("{:?}", r1[0].metrics), format!("{:?}", r8[0].metrics));
 }
@@ -89,7 +95,8 @@ fn batch_sweep_matches_per_suite_evaluate() {
     ];
     let session = Session::default();
     let runner =
-        BatchRunner::new(BatchCfg { threads: 6, sink: None }, &session)
+        BatchRunner::new(BatchCfg { threads: 6, ..Default::default() },
+                         &session)
             .unwrap();
     let batched = runner.run(&jobs);
     for (job, got) in jobs.iter().zip(&batched) {
@@ -115,8 +122,11 @@ fn cost_cache_on_off_byte_identical_across_thread_counts() {
         for use_cache in [true, false] {
             let session = Session::builder().cost_cache(use_cache).build();
             let runner =
-                BatchRunner::new(BatchCfg { threads, sink: None }, &session)
-                    .unwrap();
+                BatchRunner::new(
+                    BatchCfg { threads, ..Default::default() },
+                    &session,
+                )
+                .unwrap();
             let r = runner.run(&mk_jobs());
             if use_cache {
                 let (hits, _) = session.cost().unwrap().stats();
@@ -151,7 +161,7 @@ fn jsonl_sink_records_are_parseable_and_complete() {
     let tasks = kernelbench_level(1)[..6].to_vec();
     let session = Session::default();
     let runner = BatchRunner::new(
-        BatchCfg { threads: 4, sink: Some(path.clone()) },
+        BatchCfg { threads: 4, sink: Some(path.clone()), ..Default::default() },
         &session,
     )
     .unwrap();
@@ -201,7 +211,8 @@ fn edge_memo_shared_across_threads_identical_jsonl() {
         let path = dir.join(format!("t{threads}.jsonl"));
         let session = Session::default();
         let runner = BatchRunner::new(
-            BatchCfg { threads, sink: Some(path.clone()) },
+            BatchCfg { threads, sink: Some(path.clone()),
+                       ..Default::default() },
             &session,
         )
         .unwrap();
@@ -242,7 +253,8 @@ fn edge_memo_and_analysis_cache_on_off_byte_identical() {
             .analysis_cache(analysis)
             .build();
         let runner =
-            BatchRunner::new(BatchCfg { threads: 4, sink: None }, &session)
+            BatchRunner::new(BatchCfg { threads: 4, ..Default::default() },
+                             &session)
                 .unwrap();
         let r = runner.run(&mk_jobs());
         if !edge {
@@ -279,7 +291,8 @@ fn edge_memo_stats_sane_and_evictions_monotone() {
     let jobs = vec![BatchJob::new(mtmc(), GpuSpec::a100(), tasks)];
     let session = Session::default();
     let runner =
-        BatchRunner::new(BatchCfg { threads: 3, sink: None }, &session)
+        BatchRunner::new(BatchCfg { threads: 3, ..Default::default() },
+                         &session)
             .unwrap();
     runner.run(&jobs);
     let s1 = session.edges().unwrap().stats();

@@ -1,0 +1,220 @@
+//! Fault-tolerance integration: unit isolation (a panicking unit never
+//! aborts the sweep or perturbs sibling outcomes), deterministic fault
+//! injection converging to fault-free bytes within the retry budget, and
+//! crash-plus-`--resume` byte identity. Companion to `rust/tests/batch.rs`
+//! (which guards the no-fault determinism contract).
+
+use qimeng_mtmc::engine::Session;
+use qimeng_mtmc::eval::{
+    unit_fault_key, BatchCfg, BatchJob, BatchRunner, MacroKind, Method,
+};
+use qimeng_mtmc::gpusim::GpuSpec;
+use qimeng_mtmc::microcode::ProfileId;
+use qimeng_mtmc::tasks::kernelbench_level;
+use qimeng_mtmc::util::faults::{FaultPlan, FaultSite};
+use qimeng_mtmc::util::json::Json;
+
+fn greedy() -> Method {
+    Method::Mtmc {
+        macro_kind: MacroKind::GreedyLookahead,
+        micro: ProfileId::GeminiFlash25,
+    }
+}
+
+fn jobs_two_methods() -> Vec<BatchJob> {
+    let tasks = kernelbench_level(1)[..6].to_vec();
+    vec![
+        BatchJob::new(
+            Method::Baseline { profile: ProfileId::GeminiPro25 },
+            GpuSpec::a100(),
+            tasks.clone(),
+        ),
+        BatchJob::new(greedy(), GpuSpec::v100(), tasks),
+    ]
+}
+
+fn run_to_sink(session: &Session, jobs: &[BatchJob], path: &std::path::Path,
+               threads: usize, resume: bool)
+               -> Vec<qimeng_mtmc::eval::SuiteResult> {
+    let runner = BatchRunner::new(
+        BatchCfg {
+            threads,
+            sink: Some(path.to_path_buf()),
+            resume,
+            ..Default::default()
+        },
+        session,
+    )
+    .unwrap();
+    let results = runner.run(jobs);
+    assert!(!runner.sink_failed(), "sink reported I/O failures");
+    results
+}
+
+fn sorted_lines(path: &std::path::Path) -> Vec<String> {
+    let mut lines: Vec<String> = std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .map(String::from)
+        .collect();
+    lines.sort();
+    lines
+}
+
+/// The isolation property (one injected-panic unit amid N clean units):
+/// every clean unit's sink record is byte-identical to the no-fault
+/// run's, at `threads = 1` and `threads = 8`, and the panicking unit
+/// becomes a `status: "panicked"` record instead of a dead sweep.
+#[test]
+fn panicking_unit_is_isolated_across_thread_counts() {
+    let dir = std::env::temp_dir().join("qimeng_faults_isolation");
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs = jobs_two_methods();
+    let victim_job = &jobs[1];
+    let victim_task = &victim_job.tasks[2];
+    let victim_method = victim_job.method.label();
+    let is_victim = |line: &str| {
+        let v = Json::parse(line).unwrap();
+        v.get("task").and_then(|j| j.as_str())
+            == Some(victim_task.id.as_str())
+            && v.get("method").and_then(|j| j.as_str())
+                == Some(victim_method.as_str())
+    };
+
+    let ref_path = dir.join("reference.jsonl");
+    let ref_results = {
+        let session = Session::default();
+        run_to_sink(&session, &jobs, &ref_path, 1, false)
+    };
+    let (ref_clean, ref_victim): (Vec<String>, Vec<String>) =
+        sorted_lines(&ref_path).into_iter().partition(|l| !is_victim(l));
+    assert_eq!(ref_victim.len(), 1);
+
+    let key = unit_fault_key(&victim_method, victim_task.suite.label(),
+                             victim_job.gpu.name, &victim_task.id,
+                             victim_job.cfg.seed);
+    for threads in [1usize, 8] {
+        let path = dir.join(format!("panic_t{threads}.jsonl"));
+        let session = Session::builder()
+            .faults(Some(FaultPlan::new(0).with_panic_unit(key)))
+            .build();
+        let results = run_to_sink(&session, &jobs, &path, threads, false);
+
+        let (clean, victim): (Vec<String>, Vec<String>) =
+            sorted_lines(&path).into_iter().partition(|l| !is_victim(l));
+        assert_eq!(clean, ref_clean,
+                   "sibling records perturbed at {threads} threads");
+        assert_eq!(victim.len(), 1, "panicked unit must still be recorded");
+        let v = Json::parse(&victim[0]).unwrap();
+        assert_eq!(v.get("status").and_then(|j| j.as_str()),
+                   Some("panicked"));
+        assert_eq!(v.get("compiled").and_then(|j| j.as_bool()), Some(false));
+        assert_eq!(v.get("correct").and_then(|j| j.as_bool()), Some(false));
+        assert_eq!(v.get("speedup").and_then(|j| j.as_f64()), Some(0.0));
+        assert!(v.get("error").and_then(|j| j.as_str())
+            .is_some_and(|e| e.contains("injected unit panic")));
+
+        // the untouched job's aggregate metrics are bit-equal to the
+        // reference; the victim's own job sees it zeroed
+        assert_eq!(results[0].metrics, ref_results[0].metrics);
+        let victim_outcome = results[1]
+            .outcomes
+            .iter()
+            .find(|o| o.task_id == victim_task.id)
+            .unwrap();
+        assert!(!victim_outcome.compiled && !victim_outcome.correct);
+        assert_eq!(victim_outcome.speedup, 0.0);
+        assert_eq!(session.fault_stats().panicked(), 1);
+        assert_eq!(session.fault_stats().exhausted(), 0);
+        assert_eq!(
+            session.faults().unwrap().injected(FaultSite::UnitPanic),
+            1
+        );
+    }
+}
+
+/// Injected transient faults (the seeded rate gates) recover within the
+/// default retry budget: a fault-injected sweep streams the exact bytes
+/// a fault-free one does, while the retry counters show real activity.
+#[test]
+fn injected_faults_converge_to_fault_free_bytes() {
+    let dir = std::env::temp_dir().join("qimeng_faults_transient");
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs =
+        vec![BatchJob::new(greedy(), GpuSpec::a100(),
+                           kernelbench_level(2)[..4].to_vec())];
+    let ref_path = dir.join("reference.jsonl");
+    {
+        let session = Session::default();
+        run_to_sink(&session, &jobs, &ref_path, 1, false);
+    }
+    let reference = std::fs::read(&ref_path).unwrap();
+
+    // fault opportunities per run: verif flakes fire on ~1/16 of buggy
+    // transitions, sink-write faults on ~1/8 of the 4 records — scan
+    // plan seeds (deterministically) until one shows activity rather
+    // than bet the suite on a single seed
+    let mut saw_activity = false;
+    for plan_seed in 0..8u64 {
+        let path = dir.join(format!("faulty_{plan_seed}.jsonl"));
+        let session = Session::builder()
+            .faults(Some(FaultPlan::new(plan_seed)))
+            .build();
+        run_to_sink(&session, &jobs, &path, 1, false);
+        assert_eq!(std::fs::read(&path).unwrap(), reference,
+                   "plan seed {plan_seed} changed the sweep bytes");
+        let stats = session.fault_stats();
+        assert_eq!(stats.exhausted(), 0,
+                   "burst (2) must stay within the retry budget (2)");
+        assert_eq!(stats.panicked(), 0);
+        if stats.retried() > 0 {
+            assert!(stats.recovered() > 0,
+                    "every retried unit must eventually recover");
+        }
+        if stats.retried() + stats.sink_retries() > 0 {
+            assert!(session.faults().unwrap().injected_total() > 0);
+            saw_activity = true;
+        }
+    }
+    assert!(saw_activity,
+            "no plan seed in 0..8 injected a single fault — the rate \
+             gates are miswired");
+}
+
+/// Crash-then-resume: truncate the sink mid-record (what an abort looks
+/// like on disk), resume with faults armed, and end byte-identical to
+/// the uninterrupted fault-free reference.
+#[test]
+fn kill_and_resume_reproduces_reference_bytes() {
+    let dir = std::env::temp_dir().join("qimeng_faults_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let jobs = jobs_two_methods();
+    let path = dir.join("sweep.jsonl");
+    let ref_results = {
+        let session = Session::default();
+        run_to_sink(&session, &jobs, &path, 1, false)
+    };
+    let reference = std::fs::read(&path).unwrap();
+
+    // keep 4 whole records and a torn fifth — a crash between the 4th
+    // and 5th flush
+    let text = String::from_utf8(reference.clone()).unwrap();
+    let prefix: String =
+        text.lines().take(4).map(|l| format!("{l}\n")).collect();
+    let torn = text.lines().nth(4).unwrap();
+    std::fs::write(&path, format!("{prefix}{}", &torn[..torn.len() / 2]))
+        .unwrap();
+
+    let session = Session::builder()
+        .faults(Some(FaultPlan::new(11)))
+        .build();
+    let resumed = run_to_sink(&session, &jobs, &path, 1, true);
+    assert_eq!(std::fs::read(&path).unwrap(), reference,
+               "resumed sink diverged from the uninterrupted run");
+    for (a, b) in ref_results.iter().zip(&resumed) {
+        assert_eq!(a.metrics, b.metrics, "{}: resumed metrics diverged",
+                   a.method);
+    }
+    assert_eq!(session.fault_stats().exhausted(), 0);
+    assert_eq!(session.fault_stats().panicked(), 0);
+}
